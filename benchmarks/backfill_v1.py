@@ -1,0 +1,17 @@
+"""Backfill missing dry-run cells from the v1 sweep (pre-optimization
+baselines), marking them stale so the table annotates provenance."""
+import glob, json, os, shutil, sys
+
+new, old = "results/dryrun", "results/dryrun_v1"
+have = {os.path.basename(f) for f in glob.glob(new + "/*.json")}
+n = 0
+for f in glob.glob(old + "/*.json"):
+    b = os.path.basename(f)
+    if b in have:
+        continue
+    r = json.load(open(f))
+    r["stale_baseline"] = True
+    with open(os.path.join(new, b), "w") as fh:
+        json.dump(r, fh, indent=1)
+    n += 1
+print(f"backfilled {n} cells from v1")

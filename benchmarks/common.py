@@ -1,0 +1,30 @@
+"""Shared benchmark utilities (timing, CSV rows, scaled sizes)."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def timeit(fn: Callable, *, repeat: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def row(name: str, seconds: float, derived: str = "") -> None:
+    ROWS.append((name, seconds * 1e6, derived))
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+def emit_header() -> None:
+    print("name,us_per_call,derived", flush=True)

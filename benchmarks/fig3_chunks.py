@@ -1,0 +1,35 @@
+"""Paper Fig. 3: chunked-workflow overhead vs the original workflow.
+
+Compares test-phase runtime of bufferkdtree with N = 1 (leaf structure
+device-resident, the ICML'14 workflow) against N in {2, ..., 10} chunks
+(two device chunk buffers + streaming), over growing n.  The paper's claim:
+the ratio test(chunks)/test stays close to 1 because the copy is hidden
+behind compute.  CPU scale stands in for GPU scale (--scale).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import BufferKDTree
+from repro.data.pipeline import PointCloud
+
+
+def run(scale: float = 1.0):
+    d, k, m = 10, 10, int(20_000 * scale)
+    for n in (int(50_000 * scale), int(100_000 * scale)):
+        pc = PointCloud(n, d, seed=0)
+        pts = pc.points()
+        q = pc.queries(m)
+
+        def t_for(chunks):
+            idx = BufferKDTree(pts, height=6, n_chunks=chunks, tile_q=128)
+            return timeit(lambda: idx.query(q, k=k), repeat=2, warmup=1)
+
+        t1 = t_for(1)
+        row(f"fig3/test_n{n}_N1", t1, "baseline(original workflow)")
+        for chunks in (2, 5, 10):
+            tc = t_for(chunks)
+            row(f"fig3/test_n{n}_N{chunks}", tc,
+                f"ratio_vs_N1={tc / t1:.3f}")

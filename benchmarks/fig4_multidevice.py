@@ -1,0 +1,59 @@
+"""Paper Fig. 4: multi-device speedup from query chunking.
+
+bufferkdtree(1) vs bufferkdtree(4) with queries distributed uniformly among
+devices (paper §3.2).  Runs in a subprocess with 4 host devices; speedups on
+host "devices" share one physical CPU here, so the *structure* (per-device
+engines, chunk distribution, overlap of dispatch queues) is what's
+exercised; wall-clock speedup requires real devices.  The derived column
+reports the speedup the paper's metric would compute.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import row
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def run(scale: float = 1.0):
+    n = int(50_000 * scale)
+    for m in (int(10_000 * scale), int(40_000 * scale)):
+        script = textwrap.dedent(f"""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+            import time
+            import numpy as np
+            import jax
+            from repro.core import BufferKDTree
+            from repro.data.pipeline import PointCloud
+            from repro.distributed.sharded import multi_device_query
+
+            pc = PointCloud({n}, 10, seed=0)
+            pts = pc.points(); q = pc.queries({m})
+            idx = BufferKDTree(pts, height=6, tile_q=128)
+            idx.query(q[:256], k=10)  # warm
+            t0 = time.perf_counter(); idx.query(q, k=10)
+            t1 = time.perf_counter() - t0
+            multi_device_query(pts, q[:256], 10, height=6, tile_q=128)  # warm
+            t0 = time.perf_counter()
+            multi_device_query(pts, q, 10, height=6, tile_q=128)
+            t4 = time.perf_counter() - t0
+            print(f"RESULT {{t1}} {{t4}}")
+        """)
+        env = dict(os.environ)
+        env["PYTHONPATH"] = SRC
+        out = subprocess.run([sys.executable, "-c", script],
+                             capture_output=True, text=True, env=env,
+                             timeout=1800)
+        if out.returncode != 0:
+            row(f"fig4/m{m}", 0.0, f"FAILED:{out.stderr[-120:]}")
+            continue
+        t1, t4 = map(float, out.stdout.strip().split()[-2:])
+        row(f"fig4/bufferkdtree1_m{m}", t1, "")
+        row(f"fig4/bufferkdtree4_m{m}", t4,
+            f"speedup={t1 / max(t4, 1e-9):.2f}(structural; 1 physical CPU)")

@@ -1,0 +1,31 @@
+"""Leaf-scan kernel micro-benchmarks: ref (jnp) path timing per work-unit
+shape, plus the derived scan throughput (points*queries/s).  The Pallas
+path is TPU-target; interpret-mode timing is not meaningful, so the jnp
+oracle (the actual CPU execution path) is what's timed here.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.kernels.ops import leaf_scan
+
+
+def run(scale: float = 1.0):
+    k = 10
+    for (w, tq, lp, dpad) in ((8, 128, 1024, 16), (16, 128, 4096, 16)):
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.normal(size=(w, tq, dpad)).astype(np.float32))
+        x = jnp.asarray(rng.normal(size=(w, lp, dpad)).astype(np.float32))
+
+        def call():
+            d, i = leaf_scan(q, x, k=k, backend="ref")
+            jax.block_until_ready(d)
+
+        t = timeit(call, repeat=3, warmup=2)
+        pairs = w * tq * lp
+        row(f"kernel/leaf_scan_w{w}_tq{tq}_lp{lp}", t,
+            f"{pairs / t / 1e9:.2f}G pair/s")

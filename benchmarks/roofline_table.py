@@ -1,0 +1,72 @@
+"""Assemble the roofline table from the dry-run JSONs (results/dryrun).
+
+Used both by ``benchmarks.run`` (summary rows) and by EXPERIMENTS.md
+generation (markdown table).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.common import row
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_cells(results_dir: Optional[str] = None) -> List[Dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(results_dir or RESULTS, "*.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def markdown_table(cells: List[Dict], multi_pod: bool = False) -> str:
+    lines = [
+        "| arch | shape | dom | compute s | memory s | collective s | "
+        "mem/dev GB | fits | MODEL/HLO | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.get("multi_pod") != multi_pod:
+            continue
+        if not c.get("supported"):
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | — | — | — | — | — | — | — | "
+                f"SKIP: {c.get('skip_reason', '')[:70]} |"
+            )
+            continue
+        t = c["roofline"]
+        m = c["memory"]
+        lines.append(
+            "| {arch} | {shape} | {dom} | {c:.4f} | {mem:.4f} | {coll:.4f} | "
+            "{gb:.2f} | {fits} | {ur:.3f} | {note} |".format(
+                arch=c["arch"], shape=c["shape"], dom=c["dominant"],
+                c=t["compute_s"], mem=t["memory_s"], coll=t["collective_s"],
+                gb=m["peak_bytes"] / 1e9, fits="yes" if m["fits_16g"] else "NO",
+                ur=c.get("useful_ratio", 0.0),
+                note=((c.get("train_policy") or {}).get("param_mode", "")
+                      + (" •v1" if c.get("stale_baseline") else "")),
+            )
+        )
+    return "\n".join(lines)
+
+
+def run(scale: float = 1.0):
+    cells = load_cells()
+    if not cells:
+        row("roofline/no_results_yet", 0.0, "run launch.dryrun --all first")
+        return
+    for c in cells:
+        if not c.get("supported"):
+            continue
+        t = c["roofline"]
+        bound = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        frac = t["compute_s"] / bound if bound else 0.0
+        tag = "multi" if c.get("multi_pod") else "single"
+        row(f"roofline/{c['arch']}__{c['shape']}__{tag}", bound,
+            f"dom={c['dominant']};roofline_frac={frac:.3f};"
+            f"mem={c['memory']['peak_bytes'] / 1e9:.1f}GB")

@@ -1,0 +1,15 @@
+"""Architecture configs (--arch selectable) + input-shape registry."""
+
+from repro.configs.base import ARCH_IDS, ArchConfig, get_config, registry
+from repro.configs.shapes import SHAPES, ShapeSpec, cell_supported, input_specs
+
+__all__ = [
+    "ARCH_IDS",
+    "ArchConfig",
+    "get_config",
+    "registry",
+    "SHAPES",
+    "ShapeSpec",
+    "cell_supported",
+    "input_specs",
+]

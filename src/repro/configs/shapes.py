@@ -1,0 +1,115 @@
+"""Input-shape registry: the four assigned shape cells + input_specs().
+
+Shapes are GLOBAL (whole-mesh) sizes; ``input_specs`` returns
+ShapeDtypeStructs (weak-type-correct, shardable, no allocation) plus the
+matching PartitionSpecs, following the system contract:
+
+  train_4k     train_step   seq 4096,   global batch 256
+  prefill_32k  serve prefill seq 32768, global batch 32
+  decode_32k   serve_step   1 new token, KV cache 32768, global batch 128
+  long_500k    serve_step   1 new token, cache 524288,  global batch 1
+
+``cell_supported`` encodes the assignment's skip rules (sub-quadratic for
+long_500k; no decode for encoder-only) with human-readable reasons —
+DESIGN.md §5 documents every skip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["ShapeSpec", "SHAPES", "cell_supported", "input_specs", "batch_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_supported(cfg, shape: ShapeSpec) -> Tuple[bool, str]:
+    if shape.kind == "decode" and not cfg.supports_decode():
+        return False, f"{cfg.name} is encoder-only: no decode step"
+    if shape.name == "long_500k" and not cfg.subquadratic():
+        return False, (
+            f"{cfg.name} has unbounded full-attention layers: 500k decode "
+            "needs an O(seq) KV cache; run only for SSM/hybrid archs (spec)"
+        )
+    return True, ""
+
+
+def _f(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def effective_data_axes(global_batch: int, data_axes, mesh=None):
+    """Trim batch-sharding axes until their product divides the batch
+    (e.g. long_500k's batch of 1 replicates instead of sharding)."""
+    dax = tuple(data_axes)
+    if mesh is None:
+        return dax
+    while dax:
+        prod = 1
+        for a in dax:
+            prod *= mesh.shape[a]
+        if prod and global_batch % prod == 0:
+            return dax
+        dax = dax[1:]  # drop the outermost (pod) axis first
+    return ()
+
+
+def input_specs(cfg, shape: ShapeSpec, data_axes=("data",), mesh=None):
+    """Returns (batch pytree of ShapeDtypeStruct, batch pytree of P)."""
+    b, s = shape.global_batch, shape.seq_len
+    dax = effective_data_axes(b, data_axes, mesh)
+    tok_spec = P(dax, None) if dax else P(None, None)
+
+    if shape.kind in ("train", "prefill"):
+        batch: Dict[str, jax.ShapeDtypeStruct] = {}
+        specs: Dict[str, P] = {}
+        if cfg.frontend == "vision":
+            s_text = s - cfg.frontend_tokens
+            batch["tokens"] = _f((b, s_text), jnp.int32)
+            batch["frontend_feats"] = _f(
+                (b, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16
+            )
+            specs["tokens"] = tok_spec
+            specs["frontend_feats"] = P(dax, None, None) if dax else P(None, None, None)
+            label_len = s_text
+        elif cfg.frontend == "audio":
+            batch["frontend_feats"] = _f((b, s, cfg.frontend_dim), jnp.bfloat16)
+            specs["frontend_feats"] = P(dax, None, None) if dax else P(None, None, None)
+            label_len = s
+        else:
+            batch["tokens"] = _f((b, s), jnp.int32)
+            specs["tokens"] = tok_spec
+            label_len = s
+        if shape.kind == "train":
+            batch["labels"] = _f((b, label_len), jnp.int32)
+            specs["labels"] = tok_spec
+        return batch, specs
+
+    # decode: one new token against a cache of seq_len
+    batch = {"tokens": _f((b, 1), jnp.int32), "pos": _f((), jnp.int32)}
+    specs = {"tokens": tok_spec, "pos": P()}
+    return batch, specs
+
+
+def batch_specs(cfg, shape: ShapeSpec, data_axes=("data",)):
+    """Convenience: just the PartitionSpecs."""
+    return input_specs(cfg, shape, data_axes)[1]

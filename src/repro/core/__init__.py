@@ -1,0 +1,23 @@
+"""Buffer k-d tree core — the paper's primary contribution in JAX.
+
+Public API:
+  BufferKDTree      build + LazySearch kNN queries (chunked, multi-backend)
+  build_top_tree    pointerless top tree construction
+  knn_brute         exact tiled brute-force baseline/oracle
+  knn_host_kdtree   classic (unbuffered) k-d tree CPU baseline
+"""
+
+from repro.core.brute import knn_brute
+from repro.core.hostkdtree import knn_host_kdtree
+from repro.core.lazysearch import BufferKDTree, SearchStats
+from repro.core.toptree import TopTree, build_top_tree, suggest_height
+
+__all__ = [
+    "BufferKDTree",
+    "SearchStats",
+    "TopTree",
+    "build_top_tree",
+    "suggest_height",
+    "knn_brute",
+    "knn_host_kdtree",
+]

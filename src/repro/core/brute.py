@@ -1,0 +1,81 @@
+"""brute(i): tiled massively-parallel brute-force kNN (paper baseline (3)).
+
+Memory-safe double tiling: query tiles stay resident while reference tiles
+stream through a jitted distance+merge step (the same running-top-k merge the
+leaf-scan kernel uses, so the comparison in Fig. 5/6 benchmarks is apples to
+apples).  Also serves as the ground-truth oracle for engine tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["knn_brute"]
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _tile_step(
+    q: jnp.ndarray,        # f32[TQ, d]
+    x: jnp.ndarray,        # f32[TX, d]
+    base: jnp.ndarray,     # i32[] global offset of this reference tile
+    best_d: jnp.ndarray,   # f32[TQ, k]
+    best_i: jnp.ndarray,   # i32[TQ, k]
+    *,
+    k: int,
+):
+    # direct (q - x)^2: this is the ORACLE, so exactness beats MXU form
+    diff = q[:, None, :] - x[None, :, :]
+    dist = jnp.einsum("qxd,qxd->qx", diff, diff)
+    idx = jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1) + base
+    cd = jnp.concatenate([best_d, dist], axis=1)
+    ci = jnp.concatenate([best_i, idx], axis=1)
+    neg, sel = jax.lax.top_k(-cd, k)
+    return -neg, jnp.take_along_axis(ci, sel, axis=1)
+
+
+def knn_brute(
+    queries: np.ndarray,
+    points: np.ndarray,
+    k: int,
+    *,
+    tile_q: int = 1024,
+    tile_x: int = 16384,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact kNN; returns (Euclidean dists f32[m, k], idx i64[m, k])."""
+    queries = np.asarray(queries, np.float32)
+    points = np.asarray(points, np.float32)
+    m, d = queries.shape
+    n, d2 = points.shape
+    if d != d2:
+        raise ValueError(f"dim mismatch {d} vs {d2}")
+    if k > n:
+        raise ValueError(f"k={k} > n={n}")
+
+    # Pad reference tiles with PAD coords so the last tile is full-shaped.
+    from repro.kernels.ref import PAD_COORD
+
+    nx = ((n + tile_x - 1) // tile_x) * tile_x
+    pts = np.full((nx, d), np.float32(PAD_COORD))
+    pts[:n] = points
+    pts_j = jnp.asarray(pts)
+
+    out_d = np.empty((m, k), np.float32)
+    out_i = np.empty((m, k), np.int64)
+    for qs in range(0, m, tile_q):
+        qe = min(qs + tile_q, m)
+        q = jnp.asarray(queries[qs:qe])
+        best_d = jnp.full((qe - qs, k), np.inf, jnp.float32)
+        best_i = jnp.full((qe - qs, k), -1, jnp.int32)
+        for xs in range(0, nx, tile_x):
+            best_d, best_i = _tile_step(
+                q, jax.lax.dynamic_slice_in_dim(pts_j, xs, tile_x, 0),
+                jnp.int32(xs), best_d, best_i, k=k,
+            )
+        out_d[qs:qe] = np.sqrt(np.asarray(best_d))
+        out_i[qs:qe] = np.asarray(best_i)
+    return out_d, out_i

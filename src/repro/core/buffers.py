@@ -1,0 +1,144 @@
+"""Leaf buffers, queues and the ProcessAllBuffers work plan (paper Alg. 1).
+
+The paper attaches a B-slot buffer to every leaf and two queues (``input``,
+``reinsert``) to the tree.  On a SIMD device the payoff of the buffers is
+that queries *sorted by destination leaf* turn the leaf scans into dense,
+regular work units.  We realize the buffers exactly that way: buffered
+(query, leaf) pairs are kept per-leaf and, when flushed, compiled into a
+padded work plan
+
+    unit_leaf  i32[W]          leaf id per work unit
+    unit_query i32[W, TQ]      query ids, -1 padded
+
+with every unit holding at most TQ queries of a single leaf — the shape the
+leaf-scan kernel consumes directly.  Plan construction is vectorized numpy
+(host side, like the paper's queue management).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["QueryQueues", "LeafBuffers", "WorkPlan", "build_work_plan"]
+
+
+@dataclasses.dataclass
+class WorkPlan:
+    unit_leaf: np.ndarray    # i32[W]
+    unit_query: np.ndarray   # i32[W, TQ]  (-1 padded)
+
+    @property
+    def n_units(self) -> int:
+        return int(self.unit_leaf.shape[0])
+
+
+def build_work_plan(leaf_ids: np.ndarray, query_ids: np.ndarray, tq: int) -> WorkPlan:
+    """Compile buffered (leaf, query) pairs into padded work units.
+
+    Stable-sorts by leaf (the "buffer" grouping), then splits each leaf's
+    group into ceil(c/TQ) units.  Fully vectorized.
+    """
+    leaf_ids = np.asarray(leaf_ids, dtype=np.int32)
+    query_ids = np.asarray(query_ids, dtype=np.int32)
+    if leaf_ids.shape != query_ids.shape or leaf_ids.ndim != 1:
+        raise ValueError("leaf_ids/query_ids must be equal-length 1-D arrays")
+    p = leaf_ids.shape[0]
+    if p == 0:
+        return WorkPlan(np.zeros((0,), np.int32), np.zeros((0, tq), np.int32))
+
+    order = np.argsort(leaf_ids, kind="stable")
+    sl, sq = leaf_ids[order], query_ids[order]
+    uniq, starts, counts = np.unique(sl, return_index=True, return_counts=True)
+    units_per_leaf = (counts + tq - 1) // tq
+    unit_offsets = np.concatenate([[0], np.cumsum(units_per_leaf)])
+    w = int(unit_offsets[-1])
+
+    # position of each element within its leaf group
+    within = np.arange(p) - np.repeat(starts, counts)
+    elem_unit = np.repeat(unit_offsets[:-1], counts) + within // tq
+    elem_slot = within % tq
+
+    unit_leaf = np.repeat(uniq, units_per_leaf).astype(np.int32)
+    unit_query = np.full((w, tq), -1, dtype=np.int32)
+    unit_query[elem_unit, elem_slot] = sq
+    return WorkPlan(unit_leaf=unit_leaf, unit_query=unit_query)
+
+
+class QueryQueues:
+    """The paper's ``input`` and ``reinsert`` queues (host side, FIFO).
+
+    ``fetch(M)`` drains reinsert first, then input (Alg. 1 line 4 fetches
+    from both; reinsert-first keeps in-flight traversals moving so their
+    buffers refill fastest — matches the reference implementation).
+    """
+
+    def __init__(self, m: int):
+        self._input = list(range(m))[::-1]  # pop() from the end == FIFO order
+        self._reinsert: List[int] = []
+
+    def push_reinsert(self, idx: np.ndarray) -> None:
+        self._reinsert.extend(int(i) for i in idx[::-1])
+
+    def fetch(self, m_fetch: int) -> np.ndarray:
+        out: List[int] = []
+        while len(out) < m_fetch and self._reinsert:
+            out.append(self._reinsert.pop())
+        while len(out) < m_fetch and self._input:
+            out.append(self._input.pop())
+        return np.asarray(out, dtype=np.int32)
+
+    def __len__(self) -> int:
+        return len(self._input) + len(self._reinsert)
+
+    @property
+    def empty(self) -> bool:
+        return not (self._input or self._reinsert)
+
+
+class LeafBuffers:
+    """Per-leaf query buffers with the paper's fill heuristic.
+
+    ``should_flush`` is true when at least one buffer holds >= B/2 entries
+    (paper line 11) or when forced (queues empty).
+    """
+
+    def __init__(self, n_leaves: int, capacity: int):
+        self.capacity = int(capacity)
+        self._leaf: List[np.ndarray] = []
+        self._query: List[np.ndarray] = []
+        self._fill: Dict[int, int] = {}
+        self._total = 0
+
+    def insert(self, leaf_ids: np.ndarray, query_ids: np.ndarray) -> None:
+        if leaf_ids.size == 0:
+            return
+        self._leaf.append(np.asarray(leaf_ids, np.int32))
+        self._query.append(np.asarray(query_ids, np.int32))
+        uniq, cnt = np.unique(leaf_ids, return_counts=True)
+        for u, c in zip(uniq.tolist(), cnt.tolist()):
+            self._fill[u] = self._fill.get(u, 0) + c
+        self._total += int(leaf_ids.size)
+
+    @property
+    def total(self) -> int:
+        return self._total
+
+    @property
+    def max_fill(self) -> int:
+        return max(self._fill.values(), default=0)
+
+    def should_flush(self, force: bool = False) -> bool:
+        if self._total == 0:
+            return False
+        return force or self.max_fill >= max(1, self.capacity // 2)
+
+    def drain(self) -> Tuple[np.ndarray, np.ndarray]:
+        if self._total == 0:
+            return np.zeros((0,), np.int32), np.zeros((0,), np.int32)
+        leaf = np.concatenate(self._leaf)
+        query = np.concatenate(self._query)
+        self._leaf, self._query, self._fill, self._total = [], [], {}, 0
+        return leaf, query

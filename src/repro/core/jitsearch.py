@@ -1,0 +1,198 @@
+"""Fully-jitted bulk-synchronous LazySearch (beyond-paper, TPU-native).
+
+The paper's Alg. 1 manages queues and buffers on the host.  That is fine for
+a workstation, but on a TPU pod the host round-trips per iteration would
+dominate.  This module re-derives LazySearch as a *bulk-synchronous* fixed-
+point that lives entirely inside one jit/shard_map region:
+
+  round = { advance all live queries to their next leaf        (FindLeafBatch)
+            sort-by-leaf -> padded work plan                    (the buffers!)
+            gather slabs -> leaf-scan kernel -> top-k merge     (ProcessAll...)
+            exit leaves }
+  while any query live: round
+
+The sort-by-leaf IS the buffer structure: queries destined for the same leaf
+become adjacent, so each work unit is a dense [TQ x leaf] scan — exactly the
+batching the buffers exist to create, but expressed as data-parallel ops
+(argsort + cumsum + scatter) that lower to TPU collectively-friendly HLO.
+Queue admission control ("fetch M", "flush at B/2") degenerates to whole-
+batch rounds; for query sets larger than device memory the caller chunks
+queries (paper §3.2 "an even simpler approach", which its Fig. 4 validates).
+
+The work-plan bound is static: at most ceil(m/TQ) full units plus one
+partial unit per leaf => W_max = ceil(m/TQ) + n_leaves (+1 dump row).
+
+This function is the per-device body used by ``distributed/forest.py`` under
+shard_map; it is also the lowering target for the kNN dry-run/roofline.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import traversal
+from repro.kernels import ops as kops
+from repro.kernels.ref import INVALID_DIST
+
+__all__ = ["TreeArrays", "lazy_knn_jit", "tree_arrays_from"]
+
+
+class TreeArrays(NamedTuple):
+    """Device-side buffer k-d tree (tiny metadata + padded slabs)."""
+    split_dim: jnp.ndarray    # i32[2**h]
+    split_val: jnp.ndarray    # f32[2**h]
+    leaf_start: jnp.ndarray   # i32[n_leaves]
+    leaf_size: jnp.ndarray    # i32[n_leaves]
+    slabs: jnp.ndarray        # f32[n_leaves, leaf_pad, d_pad]
+    orig_idx: jnp.ndarray     # i32[n] reordered -> original
+
+
+def tree_arrays_from(tree, d_pad_multiple: int = 8) -> TreeArrays:
+    """Build device arrays from a host ``TopTree`` (pads the feature dim)."""
+    import numpy as np
+
+    d = tree.d
+    d_pad = max(d_pad_multiple, ((d + d_pad_multiple - 1) // d_pad_multiple) * d_pad_multiple)
+    slabs = tree.points_padded
+    if d_pad != d:
+        slabs = np.concatenate(
+            [slabs, np.zeros(slabs.shape[:2] + (d_pad - d,), np.float32)], axis=-1
+        )
+    return TreeArrays(
+        split_dim=jnp.asarray(tree.split_dim),
+        split_val=jnp.asarray(tree.split_val),
+        leaf_start=jnp.asarray(tree.leaf_start),
+        leaf_size=jnp.asarray(tree.leaf_sizes().astype(np.int32)),
+        slabs=jnp.asarray(slabs),
+        orig_idx=jnp.asarray(tree.orig_idx),
+    )
+
+
+def _build_plan(leaf: jnp.ndarray, tq: int, n_leaves: int):
+    """Vectorized work-plan construction (the jit'd form of buffers.py).
+
+    leaf: i32[m] target leaf per query, -1 for retired queries.
+    Returns (unit_leaf i32[W+1], unit_query i32[W+1, TQ]); dump unit last.
+    """
+    m = leaf.shape[0]
+    w_max = (m + tq - 1) // tq + n_leaves
+    big = jnp.int32(2**30)
+
+    key = jnp.where(leaf < 0, big, leaf)
+    order = jnp.argsort(key, stable=True)
+    sl = key[order]                                   # sorted leaf ids
+    active = sl < big
+    ar = jnp.arange(m, dtype=jnp.int32)
+    prev = jnp.concatenate([jnp.full((1,), -7, jnp.int32), sl[:-1].astype(jnp.int32)])
+    newgrp = sl.astype(jnp.int32) != prev
+    group_start = jax.lax.cummax(jnp.where(newgrp, ar, 0))
+    within = ar - group_start
+    newunit = newgrp | (within % tq == 0)
+    unit_id = jnp.cumsum(newunit.astype(jnp.int32)) - 1
+    unit_id = jnp.where(active, jnp.minimum(unit_id, w_max - 1), w_max)
+    slot = within % tq
+
+    unit_leaf = jnp.zeros((w_max + 1,), jnp.int32).at[unit_id].set(
+        jnp.where(active, sl, 0).astype(jnp.int32), mode="drop"
+    )
+    unit_query = jnp.full((w_max + 1, tq), -1, jnp.int32).at[unit_id, slot].set(
+        jnp.where(active, order, -1).astype(jnp.int32), mode="drop"
+    )
+    return unit_leaf, unit_query
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "tq", "first_leaf_heap", "backend", "max_rounds"),
+)
+def lazy_knn_jit(
+    queries: jnp.ndarray,          # f32[m, d_pad] (zero-padded features)
+    tree: TreeArrays,
+    *,
+    k: int,
+    tq: int = 128,
+    first_leaf_heap: int,
+    backend: str = "ref",
+    max_rounds: int = 0,           # 0 => run to fixed point
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Bulk-synchronous LazySearch over one reference shard.
+
+    Returns (sq_dists f32[m, k], original-ids i32[m, k], rounds i32[]).
+    """
+    m = queries.shape[0]
+    n_leaves = tree.leaf_start.shape[0]
+
+    def round_body(carry):
+        st, knn_d, knn_i, live, rounds = carry
+        radius = jnp.sqrt(knn_d[:m, k - 1])
+        leaf, st = traversal.advance(
+            st, queries, radius, tree.split_dim, tree.split_val,
+            first_leaf_heap=first_leaf_heap,
+        )
+        unit_leaf, unit_query = _build_plan(leaf, tq, n_leaves)
+
+        q_tiles = jnp.where(
+            (unit_query >= 0)[..., None],
+            queries[jnp.clip(unit_query, 0, m - 1)],
+            0.0,
+        )
+        slab_tiles = tree.slabs[unit_leaf]
+        nd, nli = kops.leaf_scan(q_tiles, slab_tiles, k=k, backend=backend, tq=tq)
+
+        # merge (same contract as lazysearch._merge_knn, inlined for jit)
+        ustart = tree.leaf_start[unit_leaf]
+        usize = tree.leaf_size[unit_leaf]
+        valid = nli < usize[:, None, None]
+        gidx = jnp.where(valid, nli + ustart[:, None, None], -1)
+        ndm = jnp.where(valid, nd, jnp.float32(INVALID_DIST)).reshape(-1, k)
+        nim = gidx.reshape(-1, k)
+        flat_q = unit_query.reshape(-1)
+        safe_q = jnp.where(flat_q < 0, m, flat_q)
+        cd = jnp.concatenate([knn_d[safe_q], ndm], axis=1)
+        ci = jnp.concatenate([knn_i[safe_q], nim], axis=1)
+        neg, sel = jax.lax.top_k(-cd, k)
+        knn_d = knn_d.at[safe_q].set(-neg, mode="drop")
+        knn_i = knn_i.at[safe_q].set(jnp.take_along_axis(ci, sel, axis=1), mode="drop")
+
+        st = traversal.exit_leaf(st, first_leaf_heap)
+        live = st.node != 0
+        return st, knn_d, knn_i, live, rounds + 1
+
+    def cond(carry):
+        _, _, _, live, rounds = carry
+        go = jnp.any(live)
+        if max_rounds:
+            go = go & (rounds < max_rounds)
+        return go
+
+    st0 = traversal.init_state(m)
+    knn_d0 = jnp.full((m + 1, k), INVALID_DIST, jnp.float32)
+    knn_i0 = jnp.full((m + 1, k), -1, jnp.int32)
+    live0 = jnp.ones((m,), bool)
+    st, knn_d, knn_i, _, rounds = jax.lax.while_loop(
+        cond, round_body, (st0, knn_d0, knn_i0, live0, jnp.int32(0))
+    )
+    # Exact rescoring of the selected candidates (decomposition error is
+    # O(eps*|q||x|); direct (q-x)^2 fixes near-zero distances; see
+    # lazysearch.py for the rationale).  Reordered-global -> padded-slab row.
+    gi = knn_i[:m]
+    safe = jnp.clip(gi, 0, None)
+    leaf = jnp.clip(
+        jnp.searchsorted(tree.leaf_start, safe, side="right") - 1, 0, None
+    )
+    leaf_pad = tree.slabs.shape[1]
+    flat = tree.slabs.reshape(-1, tree.slabs.shape[-1])
+    rows = leaf * leaf_pad + (safe - tree.leaf_start[leaf])
+    cand = flat[rows]                                   # [m, k, d_pad]
+    diff = cand - queries[:, None, :]
+    d2 = jnp.einsum("mkd,mkd->mk", diff, diff)
+    d2 = jnp.where(gi < 0, jnp.inf, d2)
+    order = jnp.argsort(d2, axis=1, stable=True)
+    d2 = jnp.take_along_axis(d2, order, axis=1)
+    gi = jnp.take_along_axis(gi, order, axis=1)
+    oi = jnp.where(gi >= 0, tree.orig_idx[jnp.clip(gi, 0, None)], -1)
+    return d2, oi.astype(jnp.int32), rounds

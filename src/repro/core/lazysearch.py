@@ -1,0 +1,351 @@
+"""LazySearch: the buffer k-d tree query engine (paper Algorithm 1 + §3.2).
+
+Host-side orchestration (queues, buffers, work plans — the paper also keeps
+these on the host) around three jitted device phases:
+
+  FindLeafBatch      -> traversal.advance            (vectorized descent)
+  ProcessAllBuffers  -> kernels.ops.leaf_scan        (brute leaf scans)
+                        + _merge_knn                 (running top-k update)
+  re-insert          -> traversal.exit_leaf
+
+The leaf structure is held by a ``ChunkedLeafStore`` (paper §3: host-resident
+slabs, two device chunk buffers, compute/copy overlap).  ``n_chunks=1``
+reproduces the original ICML'14 device-resident workflow.
+
+Defaults follow the paper's footnote 8: for tree height h, buffer capacity
+B = 2^(24-h) and fetch size M = 10 B (both capped so CPU-scale runs stay
+sane; the paper notes values "did not have a significant influence ... as
+long as they were set to reasonable values").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import traversal
+from repro.core.buffers import LeafBuffers, QueryQueues, build_work_plan
+from repro.core.chunked import ChunkedLeafStore
+from repro.core.toptree import TopTree, build_top_tree, suggest_height
+from repro.kernels import ops as kops
+
+__all__ = ["BufferKDTree", "SearchStats"]
+
+
+@dataclasses.dataclass
+class SearchStats:
+    iterations: int = 0
+    flushes: int = 0
+    units_scanned: int = 0
+    points_scanned: int = 0
+    queries_advanced: int = 0
+    chunk_rounds: int = 0
+
+
+def _bucket(n: int, lo: int = 16) -> int:
+    """Round up to a power of two (bounds jit recompiles for variable W)."""
+    b = lo
+    while b < n:
+        b <<= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _merge_knn(
+    knn_d: jnp.ndarray,       # f32[m+1, k] squared dists (row m = dump)
+    knn_i: jnp.ndarray,       # i32[m+1, k] reordered-global indices
+    unit_q: jnp.ndarray,      # i32[W, TQ]  (-1 padded)
+    new_d: jnp.ndarray,       # f32[W, TQ, k]
+    new_li: jnp.ndarray,      # i32[W, TQ, k] local slab indices
+    unit_start: jnp.ndarray,  # i32[W] leaf_start per unit
+    unit_size: jnp.ndarray,   # i32[W] leaf size per unit
+    *,
+    k: int,
+):
+    m = knn_d.shape[0] - 1
+    w, tq = unit_q.shape
+    flat_q = unit_q.reshape(-1)
+    safe_q = jnp.where(flat_q < 0, m, flat_q)
+
+    valid = new_li < unit_size[:, None, None]                  # padded slab rows
+    gidx = jnp.where(valid, new_li + unit_start[:, None, None], -1)
+    nd = jnp.where(valid, new_d, jnp.float32(kops.INVALID_DIST)).reshape(-1, k)
+    ni = gidx.reshape(-1, k)
+
+    cur_d = knn_d[safe_q]
+    cur_i = knn_i[safe_q]
+    cd = jnp.concatenate([cur_d, nd], axis=1)                   # [F, 2k]
+    ci = jnp.concatenate([cur_i, ni], axis=1)
+    neg, sel = jax.lax.top_k(-cd, k)
+    d2 = -neg
+    i2 = jnp.take_along_axis(ci, sel, axis=1)
+    return knn_d.at[safe_q].set(d2), knn_i.at[safe_q].set(i2)
+
+
+@functools.partial(jax.jit, static_argnames=("first_leaf_heap", "k"))
+def _advance_batch(
+    node: jnp.ndarray,        # i32[M] gathered traversal nodes (-padded w/ 0)
+    fromc: jnp.ndarray,       # i32[M]
+    idx: jnp.ndarray,         # i32[M] query ids (-1 padded)
+    queries: jnp.ndarray,     # f32[m, d] (un-padded feature dim is fine here)
+    knn_d: jnp.ndarray,       # f32[m+1, k]
+    split_dim: jnp.ndarray,
+    split_val: jnp.ndarray,
+    *,
+    first_leaf_heap: int,
+    k: int,
+):
+    m = queries.shape[0]
+    safe = jnp.where(idx < 0, 0, idx)
+    q = queries[safe]
+    radius = jnp.sqrt(knn_d[jnp.where(idx < 0, m, idx), k - 1])
+    st = traversal.TraversalState(node=node, fromc=fromc)
+    leaf, st = traversal.advance(
+        st, q, radius, split_dim, split_val, first_leaf_heap=first_leaf_heap
+    )
+    return leaf, st.node, st.fromc
+
+
+@functools.partial(jax.jit, static_argnames=("first_leaf_heap",))
+def _exit_leaf_batch(node: jnp.ndarray, fromc: jnp.ndarray, *, first_leaf_heap: int):
+    st = traversal.exit_leaf(
+        traversal.TraversalState(node=node, fromc=fromc), first_leaf_heap
+    )
+    return st.node, st.fromc
+
+
+class BufferKDTree:
+    """User-facing buffer k-d tree (build + LazySearch queries).
+
+    Example:
+        index = BufferKDTree(points, height=9, n_chunks=3)
+        dists, idx = index.query(queries, k=10)
+    """
+
+    def __init__(
+        self,
+        points: np.ndarray,
+        *,
+        height: Optional[int] = None,
+        n_chunks: int = 1,
+        buffer_size: Optional[int] = None,
+        fetch_m: Optional[int] = None,
+        backend: str = "auto",
+        tile_q: int = 128,
+        d_pad_multiple: int = 8,
+        device: Optional[jax.Device] = None,
+    ):
+        points = np.asarray(points, dtype=np.float32)
+        n, d = points.shape
+        if height is None:
+            height = suggest_height(n)
+        self.tree: TopTree = build_top_tree(points, height)
+        h = self.tree.height
+        self.k_backend = backend
+        self.tile_q = int(tile_q)
+
+        # Feature padding for the kernel (pad dims contribute 0 distance;
+        # PAD rows already carry PAD_COORD in the real dims).
+        self.d_pad = max(
+            d_pad_multiple, ((d + d_pad_multiple - 1) // d_pad_multiple) * d_pad_multiple
+        )
+        slabs = self.tree.points_padded
+        if self.d_pad != d:
+            pad = np.zeros(
+                (slabs.shape[0], slabs.shape[1], self.d_pad - d), dtype=np.float32
+            )
+            slabs = np.concatenate([slabs, pad], axis=-1)
+        self.store = ChunkedLeafStore(slabs, n_chunks=n_chunks, device=device)
+
+        self.buffer_size = int(
+            buffer_size if buffer_size is not None else min(1 << max(1, 24 - h), 4096)
+        )
+        self.fetch_m = int(fetch_m) if fetch_m is not None else 10 * self.buffer_size
+
+        # Device-side tree metadata (tiny, replicated in multi-device mode).
+        self._split_dim = jnp.asarray(self.tree.split_dim)
+        self._split_val = jnp.asarray(self.tree.split_val)
+        self._leaf_start_np = self.tree.leaf_start
+        self._leaf_size_np = self.tree.leaf_sizes().astype(np.int32)
+        self.stats = SearchStats()
+
+    # ------------------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self.tree.n
+
+    @property
+    def d(self) -> int:
+        return self.tree.d
+
+    def _scan_units(
+        self,
+        dev_slab,            # [chunk_leaves, L_pad, d_pad] device buffer
+        leaf_lo: int,
+        unit_leaf: np.ndarray,
+        unit_q: np.ndarray,
+        queries_pad: jnp.ndarray,  # f32[m+1, d_pad] (row m = zeros)
+        knn_d: jnp.ndarray,
+        knn_i: jnp.ndarray,
+        k: int,
+    ):
+        """Run the leaf-scan kernel for one chunk's work units + merge."""
+        w = unit_leaf.shape[0]
+        wp = _bucket(w)
+        tq = unit_q.shape[1]
+        m = queries_pad.shape[0] - 1
+
+        ul = np.zeros((wp,), np.int32)
+        uq = np.full((wp, tq), -1, np.int32)
+        ul[:w] = unit_leaf
+        uq[:w] = unit_q
+
+        ul_j = jnp.asarray(ul)
+        uq_j = jnp.asarray(uq)
+        # Gather query tiles (dump row m is all-zero => harmless distances).
+        q_tiles = queries_pad[jnp.where(uq_j < 0, m, uq_j)]      # [Wp, TQ, d_pad]
+        slab_tiles = dev_slab[ul_j - leaf_lo]                    # [Wp, L_pad, d_pad]
+
+        nd, nli = kops.leaf_scan(
+            q_tiles, slab_tiles, k=k, backend=self.k_backend, tq=tq
+        )
+        knn_d, knn_i = _merge_knn(
+            knn_d,
+            knn_i,
+            uq_j,
+            nd,
+            nli,
+            jnp.asarray(self._leaf_start_np[ul]),
+            jnp.asarray(self._leaf_size_np[ul]),
+            k=k,
+        )
+        self.stats.units_scanned += int(w)
+        self.stats.points_scanned += int(w) * dev_slab.shape[1]
+        return knn_d, knn_i
+
+    # ------------------------------------------------------------------
+    def query(
+        self, queries: np.ndarray, k: int = 10, *, return_sorted: bool = True
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """k nearest neighbors for every query (paper Alg. 1).
+
+        Returns (dists f32[m, k] ascending Euclidean, idx i64[m, k] into the
+        caller's original ``points`` ordering).
+        """
+        queries = np.asarray(queries, dtype=np.float32)
+        m, d = queries.shape
+        if d != self.d:
+            raise ValueError(f"query dim {d} != reference dim {self.d}")
+        if k > self.n:
+            raise ValueError(f"k={k} > n={self.n}")
+        self.stats = SearchStats()
+        h = self.tree.height
+        first_leaf = self.tree.first_leaf_heap
+        tq = self.tile_q
+
+        qs = jnp.asarray(queries)
+        qpad = jnp.zeros((m + 1, self.d_pad), jnp.float32)
+        qpad = qpad.at[:m, :d].set(qs)
+
+        knn_d = jnp.full((m + 1, k), kops.INVALID_DIST, jnp.float32)
+        knn_i = jnp.full((m + 1, k), -1, jnp.int32)
+
+        node = np.ones((m,), np.int32)
+        fromc = np.zeros((m,), np.int32)
+
+        queues = QueryQueues(m)
+        buffers = LeafBuffers(self.tree.n_leaves, self.buffer_size)
+        fetch_m = max(tq, min(self.fetch_m, m))
+
+        while True:
+            progressed = False
+            if not queues.empty:
+                idx = queues.fetch(fetch_m)
+                mm = idx.shape[0]
+                idx_p = np.full((fetch_m,), -1, np.int32)
+                idx_p[:mm] = idx
+                gn = np.zeros((fetch_m,), np.int32)
+                gf = np.zeros((fetch_m,), np.int32)
+                gn[:mm] = node[idx]
+                gf[:mm] = fromc[idx]
+                leaf, nn, nf = _advance_batch(
+                    jnp.asarray(gn),
+                    jnp.asarray(gf),
+                    jnp.asarray(idx_p),
+                    qs,
+                    knn_d,
+                    self._split_dim,
+                    self._split_val,
+                    first_leaf_heap=first_leaf,
+                    k=k,
+                )
+                leaf = np.asarray(leaf)[:mm]
+                node[idx] = np.asarray(nn)[:mm]
+                fromc[idx] = np.asarray(nf)[:mm]
+                live = leaf >= 0
+                buffers.insert(leaf[live], idx[live])
+                self.stats.iterations += 1
+                self.stats.queries_advanced += int(mm)
+                progressed = True
+
+            force = queues.empty
+            if buffers.should_flush(force=force):
+                bl, bq = buffers.drain()
+                plan = build_work_plan(bl, bq, tq)
+                chunk_of_unit = self.store.chunk_of_leaf(plan.unit_leaf)
+                for cid, dev_slab, leaf_lo in self.store.stream(
+                    sorted(set(chunk_of_unit.tolist()))
+                ):
+                    sel = chunk_of_unit == cid
+                    knn_d, knn_i = self._scan_units(
+                        dev_slab,
+                        leaf_lo,
+                        plan.unit_leaf[sel],
+                        plan.unit_query[sel],
+                        qpad,
+                        knn_d,
+                        knn_i,
+                        k,
+                    )
+                    self.stats.chunk_rounds += 1
+                # Re-insert processed queries (their traversal resumes by
+                # exiting the just-scanned leaf).
+                uniq_q = np.unique(bq)
+                en, ef = _exit_leaf_batch(
+                    jnp.asarray(node[uniq_q]),
+                    jnp.asarray(fromc[uniq_q]),
+                    first_leaf_heap=first_leaf,
+                )
+                node[uniq_q] = np.asarray(en)
+                fromc[uniq_q] = np.asarray(ef)
+                queues.push_reinsert(uniq_q)
+                self.stats.flushes += 1
+                progressed = True
+
+            if queues.empty and buffers.total == 0:
+                break
+            if not progressed:  # pragma: no cover - safety valve
+                raise RuntimeError("LazySearch made no progress (engine bug)")
+
+        gi = np.asarray(knn_i[:m])
+        # Exact rescoring pass: the MXU decomposition ||q||^2 - 2qx + ||x||^2
+        # carries O(eps * |q||x|) absolute error — at near-zero distances the
+        # relative error explodes (duplicate/self queries).  Recompute the k
+        # selected candidates directly ((q-x)^2, error O(eps * d^2)) and
+        # re-sort; FAISS-style refinement, cost O(m k d).
+        safe = np.clip(gi, 0, None)
+        diff = self.tree.points[safe] - queries[:, None, :]
+        d2 = np.einsum("mkd,mkd->mk", diff, diff)
+        d2[gi < 0] = np.inf
+        order = np.argsort(d2, axis=1, kind="stable")
+        d2 = np.take_along_axis(d2, order, axis=1)
+        gi = np.take_along_axis(gi, order, axis=1)
+        dists = np.sqrt(np.maximum(d2, 0.0))
+        idx_out = self.tree.orig_idx[np.clip(gi, 0, None)].astype(np.int64)
+        idx_out[gi < 0] = -1
+        return dists, idx_out

@@ -1,0 +1,218 @@
+"""FindLeafBatch: vectorized, stackless top-tree traversal (paper Alg. 1, l.5).
+
+Every query performs an *implicit* depth-first NN traversal of the top tree
+("until the root is reached twice", paper §2.3).  A standard GPU port would
+give each query its own thread and stack — exactly the branch-divergent
+pattern the paper calls out as GPU-hostile.  We instead encode the traversal
+as a 2-word state machine and advance *all* queries level-synchronously with
+pure ``jax.lax`` ops, which is also the TPU-friendly formulation (uniform
+control flow, no gather-heavy stacks):
+
+state per query
+  node  : int32 heap index currently occupied (0 == traversal finished)
+  fromc : int32 0 => arrived from parent (descending)
+                1 => ascending, arrived from left child
+                2 => ascending, arrived from right child
+
+transition (radius r = distance to current k-th neighbor candidate):
+  descending internal node      -> step to near child
+  descending arrival at a leaf  -> PAUSE (leaf must be brute-force scanned)
+  ascending from near child     -> if |q[dim]-split| < r: descend far child
+                                   else: keep ascending
+  ascending from far child      -> keep ascending
+  ascending out of the root     -> DONE ("root reached twice")
+
+``advance`` runs the machine until every active query pauses at a leaf or
+finishes; between two leaf visits a query takes at most 2h+1 transitions, so
+the while-loop is tightly bounded.  All functions are jit-compatible and are
+the single traversal code path shared by the single-device engine, the
+chunked engine and the multi-device engines.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "TraversalState",
+    "init_state",
+    "exit_leaf",
+    "advance",
+    "ARRIVED",
+    "DONE",
+]
+
+# Sentinels for advance()'s per-query result.
+DONE = -1  # traversal finished; query retired
+
+
+class TraversalState(NamedTuple):
+    node: jnp.ndarray   # int32[m] heap index (0 = done)
+    fromc: jnp.ndarray  # int32[m] 0=parent, 1=left child, 2=right child
+
+
+ARRIVED = 1  # internal marker (see _status)
+
+
+def init_state(m: int) -> TraversalState:
+    """All queries start by descending from the root."""
+    return TraversalState(
+        node=jnp.ones((m,), jnp.int32),
+        fromc=jnp.zeros((m,), jnp.int32),
+    )
+
+
+def exit_leaf(state: TraversalState, first_leaf_heap: int) -> TraversalState:
+    """Transition a query out of the leaf it just had processed.
+
+    After ProcessAllBuffers the query resumes by ascending from the leaf to
+    its parent; which child it was is the parity of its heap index.
+    """
+    node = state.node
+    at_leaf = node >= first_leaf_heap
+    parent = node >> 1
+    side = 1 + (node & 1)  # left child has even heap index
+    return TraversalState(
+        node=jnp.where(at_leaf, parent, node).astype(jnp.int32),
+        fromc=jnp.where(at_leaf, side, state.fromc).astype(jnp.int32),
+    )
+
+
+def _one_step(
+    state: TraversalState,
+    queries: jnp.ndarray,     # f32[m, d]
+    radius: jnp.ndarray,      # f32[m]   (inf until k candidates found)
+    split_dim: jnp.ndarray,   # i32[2**h]
+    split_val: jnp.ndarray,   # f32[2**h]
+    first_leaf_heap: int,
+) -> TraversalState:
+    """One state-machine transition for every query (masked where inactive)."""
+    node, fromc = state.node, state.fromc
+    m = node.shape[0]
+    done = node == 0
+    at_leaf = node >= first_leaf_heap
+    # Queries paused at a leaf (descending arrival) or done do not move.
+    frozen = done | (at_leaf & (fromc == 0))
+
+    safe_node = jnp.where(frozen | at_leaf, 1, node)
+    dim = split_dim[safe_node]
+    val = split_val[safe_node]
+    qv = jnp.take_along_axis(queries, dim[:, None].astype(jnp.int32), axis=1)[:, 0]
+    go_left = qv <= val
+    near = 2 * safe_node + jnp.where(go_left, 0, 1)
+    far = 2 * safe_node + jnp.where(go_left, 1, 0)
+
+    descending = fromc == 0
+    # --- descending through an internal node: go to near child.
+    n_desc = near
+    f_desc = jnp.zeros_like(fromc)
+
+    # --- ascending: decide whether the far child must be visited.
+    near_side = jnp.where(go_left, 1, 2)  # which child is "near"
+    came_from_near = fromc == near_side
+    plane_dist = jnp.abs(qv - val)
+    visit_far = came_from_near & (plane_dist < radius)
+    at_root = safe_node == 1
+    parent = safe_node >> 1
+    side = 1 + (safe_node & 1)
+    n_asc = jnp.where(visit_far, far, jnp.where(at_root, 0, parent))
+    f_asc = jnp.where(visit_far, 0, jnp.where(at_root, 0, side))
+
+    new_node = jnp.where(descending, n_desc, n_asc).astype(jnp.int32)
+    new_fromc = jnp.where(descending, f_desc, f_asc).astype(jnp.int32)
+    return TraversalState(
+        node=jnp.where(frozen, node, new_node),
+        fromc=jnp.where(frozen, fromc, new_fromc),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("first_leaf_heap",))
+def advance(
+    state: TraversalState,
+    queries: jnp.ndarray,
+    radius: jnp.ndarray,
+    split_dim: jnp.ndarray,
+    split_val: jnp.ndarray,
+    *,
+    first_leaf_heap: int,
+) -> Tuple[jnp.ndarray, TraversalState]:
+    """Advance every query to its next leaf (or retire it).
+
+    Returns ``(leaf, state)`` where ``leaf[i]`` is the leaf id the query
+    paused at, or ``DONE`` (-1) if its traversal completed.  Queries whose
+    incoming ``state.node == 0`` stay DONE.
+    """
+
+    def moving(s: TraversalState) -> jnp.ndarray:
+        at_leaf = (s.node >= first_leaf_heap) & (s.fromc == 0)
+        return jnp.any((s.node != 0) & ~at_leaf)
+
+    def body(s: TraversalState) -> TraversalState:
+        return _one_step(s, queries, radius, split_dim, split_val, first_leaf_heap)
+
+    state = jax.lax.while_loop(moving, body, state)
+    leaf = jnp.where(
+        state.node >= first_leaf_heap,
+        state.node - first_leaf_heap,
+        DONE,
+    ).astype(jnp.int32)
+    return leaf, state
+
+
+def reference_knn_via_traversal(
+    queries,
+    tree,
+    k: int,
+):
+    """Slow but exact single-query-at-a-time reference (numpy), used by tests
+    to pin down the state machine semantics independently of batching."""
+    import numpy as np
+
+    h = tree.height
+    first_leaf = 1 << h
+    m = queries.shape[0]
+    out_d = np.full((m, k), np.inf, dtype=np.float32)
+    out_i = np.full((m, k), -1, dtype=np.int64)
+    for qi in range(m):
+        q = queries[qi]
+        node, fromc = 1, 0
+        best_d = np.full((k,), np.inf, dtype=np.float32)
+        best_i = np.full((k,), -1, dtype=np.int64)
+        guard = 0
+        while node != 0:
+            guard += 1
+            assert guard < 10_000_000, "traversal runaway"
+            if node >= first_leaf:
+                if fromc == 0:
+                    leaf = node - first_leaf
+                    s, e = int(tree.leaf_start[leaf]), int(tree.leaf_end[leaf])
+                    dd = np.sum((tree.points[s:e] - q) ** 2, axis=1)
+                    cd = np.concatenate([best_d, dd.astype(np.float32)])
+                    ci = np.concatenate([best_i, np.arange(s, e, dtype=np.int64)])
+                    sel = np.argsort(cd, kind="stable")[:k]
+                    best_d, best_i = cd[sel], ci[sel]
+                    fromc = 1 + (node & 1)
+                    node = node >> 1
+                continue
+            dim, val = int(tree.split_dim[node]), float(tree.split_val[node])
+            go_left = q[dim] <= val
+            near = 2 * node + (0 if go_left else 1)
+            far = 2 * node + (1 if go_left else 0)
+            if fromc == 0:
+                node, fromc = near, 0
+            else:
+                near_side = 1 if go_left else 2
+                r = np.sqrt(best_d[k - 1]) if np.isfinite(best_d[k - 1]) else np.inf
+                if fromc == near_side and abs(q[dim] - val) < r:
+                    node, fromc = far, 0
+                elif node == 1:
+                    node = 0
+                else:
+                    node, fromc = node >> 1, 1 + (node & 1)
+        out_d[qi] = best_d
+        out_i[qi] = best_i
+    return np.sqrt(out_d), tree.orig_idx[np.clip(out_i, 0, None)] * (out_i >= 0) + -1 * (out_i < 0)

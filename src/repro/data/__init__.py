@@ -1,0 +1,5 @@
+"""Deterministic synthetic data pipelines (tokens + kNN points)."""
+
+from repro.data.pipeline import TokenPipeline, PointCloud
+
+__all__ = ["TokenPipeline", "PointCloud"]

@@ -1,0 +1,7 @@
+"""Multi-device kNN: the paper's multi-GPU mode + TPU-native scale-out."""
+
+from repro.distributed.ring_knn import ring_knn_brute
+from repro.distributed.forest import forest_knn, build_forest
+from repro.distributed.sharded import multi_device_query
+
+__all__ = ["ring_knn_brute", "forest_knn", "build_forest", "multi_device_query"]

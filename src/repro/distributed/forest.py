@@ -1,0 +1,125 @@
+"""Forest kNN: per-shard buffer k-d trees under shard_map (beyond-paper).
+
+Scale-out composition of the paper's data structure: the reference set is
+partitioned into P shards along the mesh's ``model`` axis; each chip builds
+and holds a *complete buffer k-d tree over its shard* (top tree + leaf
+slabs) and answers every query against its local tree with the fully-jitted
+bulk-synchronous LazySearch (``core/jitsearch.py``).  Per-query results are
+then merged across the axis with an all-gather of the [m, k] candidate
+lists — k is tiny, so the collective is negligible next to the scans.
+
+Properties:
+  * device memory per chip = n/P slabs (the paper's constraint, removed by
+    sharding instead of host streaming — DESIGN.md §2);
+  * each shard's tree still prunes internally (log-ish work per shard);
+    cross-shard pruning is sacrificed for zero coordination — the same
+    trade the paper makes for multi-GPU query chunking (§3.2);
+  * queries replicate over the ``model`` axis and shard over ``data``/
+    ``pod`` axes — at (2,16,16) that is 512-way parallelism with one
+    all-gather of k candidates per query as the only communication.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.jitsearch import TreeArrays, lazy_knn_jit, tree_arrays_from
+from repro.core.toptree import build_top_tree
+
+__all__ = ["build_forest", "forest_knn", "stack_forest"]
+
+
+def build_forest(
+    points: np.ndarray, n_shards: int, height: Optional[int] = None
+) -> Tuple[List[TreeArrays], np.ndarray]:
+    """Partition ``points`` into shards and build one tree per shard.
+
+    Returns (list of TreeArrays, shard_offsets i64[n_shards]) where each
+    tree's ``orig_idx`` is LOCAL to its shard; ``shard_offsets[s]`` converts
+    to ids in the caller's ordering (contiguous partition).
+    """
+    points = np.asarray(points, np.float32)
+    n = points.shape[0]
+    if n % n_shards:
+        raise ValueError(f"n={n} must divide into {n_shards} equal shards")
+    per = n // n_shards
+    trees = []
+    from repro.core.toptree import suggest_height
+
+    h = height if height is not None else suggest_height(per)
+    for s in range(n_shards):
+        trees.append(tree_arrays_from(build_top_tree(points[s * per : (s + 1) * per], h)))
+    offsets = (np.arange(n_shards, dtype=np.int64) * per)
+    return trees, offsets
+
+
+def stack_forest(trees: List[TreeArrays]) -> TreeArrays:
+    """Stack per-shard trees into leading-axis arrays for shard_map input.
+
+    All shards must share (height, leaf_pad, d_pad) — guaranteed by
+    ``build_forest``'s equal partition.
+    """
+    return TreeArrays(*[jnp.stack([getattr(t, f) for t in trees]) for f in TreeArrays._fields])
+
+
+def forest_knn_shardmap_fn(k: int, axis: str, *, tq: int, first_leaf_heap: int,
+                           backend: str = "ref", max_rounds: int = 0):
+    """Per-device body: local-tree LazySearch + cross-shard top-k merge."""
+
+    def body(q_local: jnp.ndarray, tree_stk: TreeArrays, offsets: jnp.ndarray):
+        me = jax.lax.axis_index(axis)
+        tree = jax.tree.map(lambda a: a[0], tree_stk)  # my shard's tree
+        d2, oi, _ = lazy_knn_jit(
+            q_local, tree, k=k, tq=tq,
+            first_leaf_heap=first_leaf_heap, backend=backend,
+            max_rounds=max_rounds,
+        )
+        gi = jnp.where(oi >= 0, oi + offsets[0].astype(jnp.int32), -1)
+        # merge candidates across the axis (all-gather of [m, k] lists)
+        alld = jax.lax.all_gather(d2, axis, axis=0)      # [P, m, k]
+        alli = jax.lax.all_gather(gi, axis, axis=0)
+        p = alld.shape[0]
+        m = alld.shape[1]
+        cd = jnp.moveaxis(alld, 0, 1).reshape(m, p * k)
+        ci = jnp.moveaxis(alli, 0, 1).reshape(m, p * k)
+        neg, sel = jax.lax.top_k(-cd, k)
+        return -neg, jnp.take_along_axis(ci, sel, axis=1)
+
+    return body
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tq", "first_leaf_heap", "axis",
+                                              "backend", "mesh", "max_rounds"))
+def forest_knn(
+    queries: jnp.ndarray,        # f32[m, d_pad] replicated over `axis`
+    tree_stk: TreeArrays,        # stacked [P, ...] per-shard trees
+    offsets: jnp.ndarray,        # i64[P] shard id offsets
+    *,
+    k: int,
+    tq: int,
+    first_leaf_heap: int,
+    mesh: jax.sharding.Mesh,
+    axis: str = "model",
+    backend: str = "ref",
+    max_rounds: int = 0,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sharded-forest kNN.  Returns (sq_dists f32[m,k], ids i32[m,k])."""
+    body = forest_knn_shardmap_fn(
+        k, axis, tq=tq, first_leaf_heap=first_leaf_heap,
+        backend=backend, max_rounds=max_rounds,
+    )
+    specs_tree = TreeArrays(*[P(axis)] * len(TreeArrays._fields))
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(), specs_tree, P(axis)),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+    return fn(queries, tree_stk, offsets)

@@ -1,0 +1,149 @@
+"""Pallas TPU kernel: buffered brute-force kNN leaf scan (ProcessAllBuffers).
+
+This is the paper's compute hot spot (§2.4, §3.2): every query buffered at a
+leaf is compared against the leaf's contiguous reference slab, brute force.
+On the GPU the win comes from coalesced/cached global loads; the TPU-native
+re-think is:
+
+  * the cross term of ||q - x||^2 = ||q||^2 - 2 q.x + ||x||^2 is a
+    [TQ, d] x [d, TX] matmul -> MXU systolic work instead of VPU subtract/
+    square loops;
+  * BlockSpec tiling keeps a [TQ, d] query tile resident in VMEM while the
+    leaf slab streams through in [TX, d] tiles (HBM -> VMEM), the exact
+    analogue of the paper's chunked leaf streaming one level down the memory
+    hierarchy;
+  * the running top-k lives in VMEM scratch across the slab-tile grid
+    dimension, so distance tiles are never written back to HBM.
+
+Grid: (W work units, L_pad // TX slab tiles); the slab-tile dimension is the
+inner ("arbitrary") one so scratch carries across it.  k-selection uses only
+min-reductions + masking (no variadic argmin reduce, no sort), which lowers
+cleanly on TPU and in interpret mode.
+
+Work-unit contract (shared with kernels/ref.py::leaf_scan_ref):
+  q         f32[W, TQ, d_pad]   padded query tiles (pad rows = 0.0)
+  leaf_pts  f32[W, L_pad, d_pad] padded slabs (pad rows = PAD_COORD)
+  ->        (f32[W, TQ, k] ascending sq-dists, i32[W, TQ, k] local indices)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import INVALID_DIST
+
+__all__ = ["leaf_scan_pallas", "DEFAULT_TQ", "DEFAULT_TX"]
+
+DEFAULT_TQ = 128   # queries per tile (MXU sublane-friendly)
+DEFAULT_TX = 512   # slab points per tile (VMEM: 128x512 f32 dist tile = 256KB)
+_BIG_I = 2**30  # python int: avoids captured-constant arrays in the kernel
+
+
+def _kernel(q_ref, x_ref, out_d_ref, out_i_ref, best_d, best_i, *, k, tx, n_tx):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        best_d[...] = jnp.full(best_d.shape, INVALID_DIST * 10.0, jnp.float32)
+        best_i[...] = jnp.full(best_i.shape, _BIG_I, jnp.int32)
+
+    q = q_ref[0]                     # [TQ, d_pad]
+    x = x_ref[0]                     # [TX, d_pad]
+
+    # Distance tile via the MXU decomposition.
+    qn = jnp.sum(q * q, axis=-1, keepdims=True)                    # [TQ, 1]
+    xn = jnp.sum(x * x, axis=-1)[None, :]                          # [1, TX]
+    cross = jax.lax.dot_general(
+        q, x, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                              # [TQ, TX]
+    dist = jnp.maximum(qn - 2.0 * cross + xn, 0.0)
+
+    tq = q.shape[0]
+    local_base = t * tx
+    col_idx = jax.lax.broadcasted_iota(jnp.int32, (tq, tx), 1) + local_base
+
+    # Merge [TQ, TX] candidates with the carried [TQ, k] best lists using
+    # k min-extraction passes (min reductions + one-hot masking only).
+    cand_d = jnp.concatenate([best_d[...], dist], axis=1)          # [TQ, k+TX]
+    cand_i = jnp.concatenate([best_i[...], col_idx], axis=1)
+    width = cand_d.shape[1]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (tq, width), 1)
+    for j in range(k):
+        mn = jnp.min(cand_d, axis=1)                               # [TQ]
+        # first position attaining the min (min-trick, no argmin reduce)
+        am = jnp.min(jnp.where(cand_d == mn[:, None], pos, _BIG_I), axis=1)
+        hit = pos == am[:, None]
+        iv = jnp.min(jnp.where(hit, cand_i, _BIG_I), axis=1)
+        best_d[:, j] = mn
+        best_i[:, j] = iv
+        cand_d = jnp.where(hit, jnp.float32(INVALID_DIST * 100.0), cand_d)
+
+    @pl.when(t == n_tx - 1)
+    def _emit():
+        out_d_ref[0] = best_d[...]
+        out_i_ref[0] = best_i[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "tq", "tx", "interpret")
+)
+def leaf_scan_pallas(
+    q: jnp.ndarray,
+    leaf_pts: jnp.ndarray,
+    *,
+    k: int,
+    tq: int = DEFAULT_TQ,
+    tx: int = DEFAULT_TX,
+    interpret: bool = False,
+):
+    """Tiled Pallas leaf scan.  See module docstring for the contract."""
+    w, tq_in, d_pad = q.shape
+    w2, l_pad, d_pad2 = leaf_pts.shape
+    if w != w2 or d_pad != d_pad2:
+        raise ValueError(f"shape mismatch q={q.shape} leaf_pts={leaf_pts.shape}")
+    if tq_in % tq != 0 and tq_in != tq:
+        # allow a single smaller query tile
+        tq = tq_in
+    if tq_in != tq:
+        raise ValueError(f"TQ dim {tq_in} must equal tile {tq}")
+    if l_pad % tx != 0:
+        # shrink the slab tile to the padded slab if it is smaller
+        if l_pad < tx:
+            tx = l_pad
+        else:
+            raise ValueError(f"L_pad={l_pad} not a multiple of tx={tx}")
+    n_tx = l_pad // tx
+
+    kernel = functools.partial(_kernel, k=k, tx=tx, n_tx=n_tx)
+    out_shape = (
+        jax.ShapeDtypeStruct((w, tq, k), jnp.float32),
+        jax.ShapeDtypeStruct((w, tq, k), jnp.int32),
+    )
+    grid = (w, n_tx)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tq, d_pad), lambda i, t: (i, 0, 0)),
+            pl.BlockSpec((1, tx, d_pad), lambda i, t: (i, t, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tq, k), lambda i, t: (i, 0, 0)),
+            pl.BlockSpec((1, tq, k), lambda i, t: (i, 0, 0)),
+        ],
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((tq, k), jnp.float32),
+            pltpu.VMEM((tq, k), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, leaf_pts)

@@ -1,0 +1,62 @@
+"""Jit'd dispatch wrappers for the kNN leaf-scan kernel.
+
+``leaf_scan`` picks the Pallas kernel on TPU backends and the pure-jnp oracle
+elsewhere (this container is CPU, so the oracle path is the default runtime
+path; the Pallas path is exercised through ``interpret=True`` in tests and
+benchmarks).  Callers can force a path with ``backend=``.
+"""
+
+from __future__ import annotations
+
+from typing import Literal, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels import knn_scan as _knn_scan
+
+__all__ = ["leaf_scan", "pad_dim", "PAD_COORD", "INVALID_DIST"]
+
+PAD_COORD = _ref.PAD_COORD
+INVALID_DIST = _ref.INVALID_DIST
+
+Backend = Literal["auto", "pallas", "pallas_interpret", "ref"]
+
+
+def default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def leaf_scan(
+    q: jnp.ndarray,
+    leaf_pts: jnp.ndarray,
+    *,
+    k: int,
+    backend: Backend = "auto",
+    tq: Optional[int] = None,
+    tx: Optional[int] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Work-unit leaf scan; see kernels/knn_scan.py for the contract."""
+    if backend == "auto":
+        backend = default_backend()
+    if backend == "ref":
+        return _ref.leaf_scan_ref(q, leaf_pts, k=k)
+    kwargs = {}
+    if tq is not None:
+        kwargs["tq"] = tq
+    if tx is not None:
+        kwargs["tx"] = tx
+    interpret = backend == "pallas_interpret"
+    return _knn_scan.leaf_scan_pallas(q, leaf_pts, k=k, interpret=interpret, **kwargs)
+
+
+def pad_dim(arr: jnp.ndarray, d_pad: int, fill: float = 0.0) -> jnp.ndarray:
+    """Pad the trailing (feature) dim to ``d_pad`` with ``fill``."""
+    d = arr.shape[-1]
+    if d == d_pad:
+        return arr
+    if d > d_pad:
+        raise ValueError(f"d={d} > d_pad={d_pad}")
+    pad = [(0, 0)] * (arr.ndim - 1) + [(0, d_pad - d)]
+    return jnp.pad(arr, pad, constant_values=fill)

@@ -1,0 +1,469 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be the very first two lines above: jax locks the device count on first
+init, and the production meshes need 512 placeholder host devices.  Nothing
+else in the repo sets this flag (smoke tests/benches see the real device
+count).
+
+Per cell this driver:
+  1. builds the sharded step (train_step / prefill_step / serve_step) on the
+     production mesh ((16,16) single-pod or (2,16,16) multi-pod),
+  2. ``.lower().compile()`` against ShapeDtypeStruct inputs (no allocation),
+  3. records ``memory_analysis()`` (per-device HBM-fit proof),
+     ``cost_analysis()`` + scan-calibrated totals (roofline/calibrate.py),
+     and the collective schedule parsed from the optimized HLO,
+  4. computes the three roofline terms + MODEL_FLOPS ratio,
+  5. writes one JSON per cell under --out.
+
+Also includes the kNN-service cell (`--arch knn_service`): the paper's own
+workload (ring-brute + forest LazySearch) lowered on the same meshes.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2_7b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] [--jobs N]
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, cell_supported, input_specs
+from repro.launch.mesh import data_axes_of, make_production_mesh, tp_of
+from repro.models.layers import resolve_specs
+from repro.models.model import LanguageModel
+from repro.models.transformer import Dist
+from repro.roofline.analysis import HW, collective_bytes, dominant_term, roofline_terms
+from repro.roofline.calibrate import calibrated_costs
+from repro.roofline.model_flops import model_flops, param_counts
+from repro.training.optimizer import Hyper
+from repro.training.step import make_sharded_train_step
+
+KNN_ARCH = "knn_service"
+
+# Baseline production training policy per arch (memory-fit choices recorded
+# in the dry-run JSON; §Perf iterates on these).  zero1 = ZeRO-1 moments,
+# fsdp = params+moments sharded over batch axes; grad_accum = microbatching.
+TRAIN_POLICY = {
+    "default": {"param_mode": "zero1", "grad_accum": 1, "param_dtype": "float32"},
+    "stablelm_1_6b": {"param_mode": "mp_zero1", "grad_accum": 2,
+                      "param_dtype": "bfloat16"},
+    "qwen15_0_5b": {"param_mode": "mp_zero1", "grad_accum": 2,
+                    "param_dtype": "bfloat16"},
+    "mamba2_370m": {"param_mode": "mp_zero1", "grad_accum": 2,
+                    "param_dtype": "bfloat16"},
+    "qwen2_7b": {"param_mode": "mp_zero1", "grad_accum": 4,
+                 "param_dtype": "bfloat16"},
+    "gemma2_27b": {"param_mode": "mp_zero1", "grad_accum": 16,
+                   "param_dtype": "bfloat16"},
+    "llava_next_mistral_7b": {"param_mode": "mp_zero1", "grad_accum": 8,
+                              "param_dtype": "bfloat16"},
+    "recurrentgemma_9b": {"param_mode": "mp_zero1", "grad_accum": 8,
+                          "param_dtype": "bfloat16"},
+    "moonshot_v1_16b_a3b": {"param_mode": "mp_zero1", "grad_accum": 8,
+                            "param_dtype": "bfloat16"},
+    "olmoe_1b_7b": {"param_mode": "mp_zero1", "grad_accum": 2,
+                    "param_dtype": "bfloat16"},
+    "hubert_xlarge": {"param_mode": "zero1", "grad_accum": 2,
+                      "param_dtype": "float32"},
+}
+
+
+def train_policy(arch: str) -> dict:
+    return TRAIN_POLICY.get(arch, TRAIN_POLICY["default"])
+
+
+# Serving policy: archs whose 32k KV cache cannot fit bf16 at this mesh use
+# the int8 quantized cache (models/attention.py; accuracy envelope tested in
+# tests/test_kv_quant.py).
+SERVE_KV_DTYPE = {
+    "moonshot_v1_16b_a3b": "int8",   # 48 layers x 16 kv heads at 32k
+    "gemma2_27b": "int8",            # 23 global layers at 32k, multi-pod fit
+}
+
+
+# --------------------------------------------------------------------------
+# per-kind compile helpers (each returns a compiled executable)
+# --------------------------------------------------------------------------
+def _shard(mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def compile_train(cfg, shape, mesh, n_groups: Optional[int] = None,
+                  policy: Optional[dict] = None):
+    policy = policy or train_policy(cfg.name.replace("-", "_").replace(".", "_"))
+    calibrating = n_groups is not None
+    if calibrating:
+        # calibration point: UNROLLED layers (and microbatches) so
+        # cost_analysis scales with G (scan bodies are counted once
+        # regardless of trip count)
+        cfg = cfg.replace(
+            n_layers=cfg.group_size() * n_groups + cfg.n_remainder(),
+            scan_layers=False,
+        )
+    dax = data_axes_of(mesh)
+    cfg = cfg.replace(param_dtype=policy.get("param_dtype", "float32"))
+    lm = LanguageModel(cfg, tp=tp_of(mesh))
+    batch_sds, batch_specs = input_specs(cfg, shape, dax, mesh)
+    # Calibration compiles use ga=1: total FLOPs/bytes are independent of the
+    # microbatch split (same tokens; optimizer runs once), so the unrolled
+    # G in {1,2} lowering with the full batch pins the exact line.  The only
+    # ga-dependent cost — one grad reduce-scatter per microbatch instead of
+    # one total — is noted in EXPERIMENTS.md.
+    ga = 1 if calibrating else policy["grad_accum"]
+    h = Hyper(grad_accum=ga, unroll_accum=calibrating)
+    step, meta = make_sharded_train_step(
+        lm, h, mesh, data_axes=dax, batch_spec_tree=batch_specs, donate=True,
+        param_mode=policy["param_mode"],
+    )
+    params_sds, _ = lm.abstract_init()
+    f32 = lambda tree: jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), tree
+    )
+    opt_sds = {"m": f32(params_sds), "v": f32(params_sds),
+               "count": jax.ShapeDtypeStruct((), jnp.int32)}
+    if policy["param_mode"] == "mp_zero1":
+        opt_sds["master"] = f32(params_sds)
+    with mesh:
+        lowered = step.lower(
+            params_sds, opt_sds, batch_sds, jax.ShapeDtypeStruct((), jnp.int32)
+        )
+        return lowered.compile()
+
+
+def compile_prefill(cfg, shape, mesh, n_groups: Optional[int] = None):
+    if n_groups is not None:
+        cfg = cfg.replace(
+            n_layers=cfg.group_size() * n_groups + cfg.n_remainder(),
+            scan_layers=False,
+        )
+    dax = data_axes_of(mesh)
+    tp = tp_of(mesh)
+    # serving: bf16 weights; sequence-sharded residual stream (the 32k
+    # activations otherwise replicate over the model axis)
+    cfg = cfg.replace(param_dtype="bfloat16", seq_shard=True)
+    lm = LanguageModel(cfg, tp=tp)
+    dist = Dist(mesh=mesh, data_axes=dax, model_axis="model", tp=tp)
+    batch_sds, batch_specs = input_specs(cfg, shape, dax, mesh)
+    params_sds, raw_pspecs = lm.abstract_init()
+    pspecs = resolve_specs(raw_pspecs, dax)
+
+    def prefill_step(params, batch):
+        return lm.prefill(params, batch, dist)
+
+    # pin the emitted KV-cache shardings (otherwise XLA may replicate the
+    # multi-GB cache over the model axis)
+    from repro.configs.shapes import effective_data_axes
+
+    cache_dax = effective_data_axes(shape.global_batch, dax, mesh)
+    _, raw_cspecs = lm.abstract_cache(shape.global_batch, shape.seq_len)
+    cspecs = resolve_specs(raw_cspecs, cache_dax)
+
+    with mesh:
+        jitted = jax.jit(
+            prefill_step,
+            in_shardings=(
+                _shard(mesh, pspecs),
+                _shard(mesh, resolve_specs(batch_specs, dax)),
+            ),
+            out_shardings=(
+                NamedSharding(mesh, P()),
+                _shard(mesh, cspecs),
+            ),
+        )
+        return jitted.lower(params_sds, batch_sds).compile()
+
+
+def compile_decode(cfg, shape, mesh, n_groups: Optional[int] = None):
+    if n_groups is not None:
+        cfg = cfg.replace(
+            n_layers=cfg.group_size() * n_groups + cfg.n_remainder(),
+            scan_layers=False,
+        )
+    dax = data_axes_of(mesh)
+    tp = tp_of(mesh)
+    kvd = SERVE_KV_DTYPE.get(cfg.name.replace("-", "_").replace(".", "_"),
+                             "bfloat16")
+    cfg = cfg.replace(param_dtype="bfloat16", kv_cache_dtype=kvd)
+    lm = LanguageModel(cfg, tp=tp)
+    dist = Dist(mesh=mesh, data_axes=dax, model_axis="model", tp=tp)
+    batch_sds, batch_specs = input_specs(cfg, shape, dax, mesh)
+    params_sds, raw_pspecs = lm.abstract_init()
+    pspecs = resolve_specs(raw_pspecs, dax)
+    from repro.configs.shapes import effective_data_axes
+
+    cache_dax = effective_data_axes(shape.global_batch, dax, mesh)
+    cache_sds, raw_cspecs = lm.abstract_cache(shape.global_batch, shape.seq_len)
+    cspecs = resolve_specs(raw_cspecs, cache_dax)
+
+    def serve_step(params, batch, caches):
+        return lm.decode_step(params, batch, caches, dist)
+
+    with mesh:
+        jitted = jax.jit(
+            serve_step,
+            in_shardings=(
+                _shard(mesh, pspecs),
+                _shard(mesh, resolve_specs(batch_specs, dax)),
+                _shard(mesh, cspecs),
+            ),
+            donate_argnums=(2,),
+        )
+        return jitted.lower(params_sds, batch_sds, cache_sds).compile()
+
+
+# --------------------------------------------------------------------------
+# kNN service cell (the paper's own workload on the production mesh)
+# --------------------------------------------------------------------------
+KNN_N = 1 << 27          # 134M reference points, d=10 (crts-like), f32
+KNN_D = 10
+KNN_M = 1 << 20          # 1M queries per step
+KNN_TREE_H = 7           # per-shard trees: n_local = N/16 = 8.4M, leaf ~64k
+
+
+def compile_knn(_cfg, _shape, mesh, n_groups: Optional[int] = None):
+    """Ring-brute kNN step over the production mesh (jit path; the forest
+    LazySearch path is exercised at test scale — its while-loop rounds are
+    data-dependent, so the ring is the honest roofline cell)."""
+    from repro.distributed.ring_knn import ring_knn_shardmap_fn
+
+    k = 10
+    dax = data_axes_of(mesh)
+    body = ring_knn_shardmap_fn(k, "model")
+    q_sds = jax.ShapeDtypeStruct((KNN_M, KNN_D), jnp.float32)
+    r_sds = jax.ShapeDtypeStruct((KNN_N, KNN_D), jnp.float32)
+
+    def knn_step(queries, refs):
+        fn = jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P((*dax, "model"), None), P("model", None)),
+            out_specs=(P((*dax, "model"), None), P((*dax, "model"), None)),
+            check_vma=False,
+        )
+        return fn(queries, refs)
+
+    with mesh:
+        jitted = jax.jit(
+            knn_step,
+            in_shardings=(
+                NamedSharding(mesh, P((*dax, "model"), None)),
+                NamedSharding(mesh, P("model", None)),
+            ),
+        )
+        return jitted.lower(q_sds, r_sds).compile()
+
+
+_COMPILERS = {"train": compile_train, "prefill": compile_prefill,
+              "decode": compile_decode, "knn": compile_knn}
+
+
+# --------------------------------------------------------------------------
+# cell runner
+# --------------------------------------------------------------------------
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             calibrate: bool = True) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+
+    if arch == KNN_ARCH:
+        shape = SHAPES[shape_name] if shape_name in SHAPES else None
+        compiled = compile_knn(None, None, mesh)
+        coll = collective_bytes(compiled.as_text())
+        ca = compiled.cost_analysis()
+        ma = compiled.memory_analysis()
+        flops_dev = float(ca.get("flops", 0.0))
+        bytes_dev = float(ca.get("bytes accessed", 0.0))
+        # nested fori bodies counted once: ring trips (p) x ref tiles
+        from repro.distributed.ring_knn import REF_TILE
+
+        p_ring = mesh.shape["model"]
+        n_local = KNN_N // p_ring
+        n_tiles = max(1, (n_local + REF_TILE - 1) // REF_TILE)
+        flops_tot = flops_dev * p_ring * n_tiles * chips
+        bytes_tot = bytes_dev * p_ring * n_tiles * chips
+        # the ppermute sits in the ring body (once per ring step)
+        coll_tot = float(coll.total) * p_ring * chips
+        terms = roofline_terms(flops_tot, bytes_tot, coll_tot, chips)
+        useful = 2.0 * KNN_M * KNN_N * KNN_D  # distance cross-term matmul
+        result = {
+            "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+            "chips": chips, "supported": True,
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "peak_bytes": ma.argument_size_in_bytes + ma.temp_size_in_bytes,
+                "fits_16g": (ma.argument_size_in_bytes + ma.temp_size_in_bytes)
+                < 16e9,
+            },
+            "costs": {"flops_total": flops_tot, "bytes_total": bytes_tot,
+                      "coll_bytes_total": coll_tot,
+                      "coll_detail": coll.as_dict()},
+            "roofline": terms,
+            "dominant": dominant_term(terms),
+            "model_flops": {"spec": useful, "refined": useful},
+            "useful_ratio": useful / max(flops_tot, 1.0),
+            "elapsed_s": time.time() - t0,
+        }
+        return result
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "supported": False, "skip_reason": reason}
+
+    compiler = _COMPILERS[shape.kind]
+
+    # full-config compile: memory proof + collective schedule
+    compiled = compile_at(compiler, cfg, shape, mesh, None)
+    ma = compiled.memory_analysis()
+
+    # scan-calibrated totals (per-device -> whole-job)
+    costs = calibrated_costs(
+        lambda g: compile_at(compiler, cfg, shape, mesh, g),
+        cfg.n_groups(),
+        scanned=cfg.scan_layers and calibrate,
+    )
+    flops_tot = costs.flops_per_device * chips
+    bytes_tot = costs.bytes_per_device * chips
+    coll_tot = costs.coll_bytes_per_device * chips
+    terms = roofline_terms(flops_tot, bytes_tot, coll_tot, chips)
+    mf = model_flops(cfg, shape)
+    peak = ma.argument_size_in_bytes + ma.temp_size_in_bytes
+
+    return {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "chips": chips, "supported": True,
+        "train_policy": train_policy(arch) if shape.kind == "train" else None,
+        "params": param_counts(cfg),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "peak_bytes": peak,
+            "fits_16g": peak < 16e9,
+        },
+        "costs": costs.as_dict() | {
+            "flops_total": flops_tot,
+            "bytes_total": bytes_tot,
+            "coll_bytes_total": coll_tot,
+        },
+        "roofline": terms,
+        "dominant": dominant_term(terms),
+        "model_flops": mf,
+        "useful_ratio": mf["spec"] / max(flops_tot, 1.0),
+        "elapsed_s": time.time() - t0,
+    }
+
+
+def compile_at(compiler, cfg, shape, mesh, n_groups):
+    return compiler(cfg, shape, mesh, n_groups)
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+def all_cells():
+    for arch in ARCH_IDS:
+        for shape_name in SHAPES:
+            yield arch, shape_name
+    yield KNN_ARCH, "knn_1M"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--jobs", type=int, default=1)
+    ap.add_argument("--no-calibrate", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    if not args.all:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        for mp in meshes:
+            res = run_cell(args.arch, args.shape, mp,
+                           calibrate=not args.no_calibrate)
+            tag = "multi" if mp else "single"
+            path = os.path.join(args.out, f"{args.arch}__{args.shape}__{tag}.json")
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            print(json.dumps(res, indent=1)[:2000])
+            if res.get("supported"):
+                print(f"[dryrun] {args.arch} x {args.shape} ({tag}-pod) "
+                      f"dominant={res['dominant']} "
+                      f"mem/dev={res['memory']['peak_bytes']/1e9:.2f} GB "
+                      f"compile+analysis={res['elapsed_s']:.1f}s")
+        return
+
+    # --all: fan out one subprocess per cell (isolation + parallelism)
+    jobs = []
+    for arch, shape_name in all_cells():
+        for mp in meshes:
+            tag = "multi" if mp else "single"
+            path = os.path.join(args.out, f"{arch}__{shape_name}__{tag}.json")
+            if os.path.exists(path) and not args.force:
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape_name, "--out", args.out]
+            if mp:
+                cmd.append("--multi-pod")
+            if args.no_calibrate:
+                cmd.append("--no-calibrate")
+            jobs.append((arch, shape_name, tag, cmd))
+
+    running = []
+    failures = []
+    while jobs or running:
+        while jobs and len(running) < args.jobs:
+            arch, shape_name, tag, cmd = jobs.pop(0)
+            print(f"[dryrun] start {arch} x {shape_name} ({tag})", flush=True)
+            pr = subprocess.Popen(cmd, stdout=subprocess.DEVNULL,
+                                  stderr=subprocess.PIPE)
+            running.append((arch, shape_name, tag, pr))
+        time.sleep(1.0)
+        still = []
+        for arch, shape_name, tag, pr in running:
+            if pr.poll() is None:
+                still.append((arch, shape_name, tag, pr))
+            elif pr.returncode != 0:
+                err = pr.stderr.read().decode()[-2000:]
+                failures.append((arch, shape_name, tag, err))
+                print(f"[dryrun] FAIL {arch} x {shape_name} ({tag}):\n{err}",
+                      flush=True)
+            else:
+                print(f"[dryrun] done {arch} x {shape_name} ({tag})", flush=True)
+        running = still
+    if failures:
+        print(f"[dryrun] {len(failures)} failures")
+        sys.exit(1)
+    print("[dryrun] all cells complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""kNN service launcher — the paper's own workload as a server.
+
+Builds a buffer k-d tree over a reference catalog and answers batched kNN
+queries (optionally with chunked leaf streaming, the paper's §3 mode).
+
+Example:
+  PYTHONPATH=src python -m repro.launch.knn --n 100000 --m 10000 --d 10 \\
+      --k 10 --chunks 3
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import BufferKDTree, knn_brute
+from repro.data.pipeline import PointCloud
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=100_000)
+    ap.add_argument("--m", type=int, default=10_000)
+    ap.add_argument("--d", type=int, default=10)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--height", type=int, default=0, help="0 = auto")
+    ap.add_argument("--chunks", type=int, default=1)
+    ap.add_argument("--verify", type=int, default=256,
+                    help="verify this many queries against brute force")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    pc = PointCloud(args.n, args.d, seed=args.seed)
+    pts = pc.points()
+    q = pc.queries(args.m)
+
+    t0 = time.time()
+    idx = BufferKDTree(pts, height=args.height or None, n_chunks=args.chunks)
+    t_build = time.time() - t0
+    t0 = time.time()
+    dd, di = idx.query(q, k=args.k)
+    t_query = time.time() - t0
+    print(f"[knn] n={args.n} m={args.m} d={args.d} k={args.k} "
+          f"chunks={args.chunks} h={idx.tree.height}")
+    print(f"[knn] train {t_build:.2f}s  test {t_query:.2f}s  "
+          f"({args.m / t_query:.0f} q/s)  "
+          f"scanned {idx.stats.points_scanned / (args.m * args.n):.3%} of brute")
+
+    if args.verify:
+        v = min(args.verify, args.m)
+        bd, bi = knn_brute(q[:v], pts, args.k)
+        ok = np.allclose(dd[:v], bd, rtol=1e-4, atol=1e-4)
+        recall = float((di[:v] == bi).mean())
+        print(f"[knn] verify: dists_ok={ok} recall@{args.k}={recall:.4f}")
+
+
+if __name__ == "__main__":
+    main()

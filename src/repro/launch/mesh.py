@@ -1,0 +1,32 @@
+"""Production mesh construction (multi-pod dry-run contract).
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; everything else sees the real device count).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import AxisType
+
+__all__ = ["make_production_mesh", "data_axes_of", "tp_of"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """(16, 16) = one 256-chip pod; (2, 16, 16) = two pods / 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def data_axes_of(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    """The batch-sharding axes of a production mesh."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def tp_of(mesh: jax.sharding.Mesh) -> int:
+    return mesh.shape["model"]

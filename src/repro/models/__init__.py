@@ -1,0 +1,5 @@
+"""LM substrate: composable model definitions for the assigned architectures."""
+
+from repro.models.model import LanguageModel
+
+__all__ = ["LanguageModel"]

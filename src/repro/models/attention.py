@@ -1,0 +1,362 @@
+"""GQA attention: full / chunked(online-softmax) / sliding-window / decode.
+
+Design notes (TPU):
+
+* **Chunked prefill**: for S > ``full_attn_threshold`` the [S, S] score
+  matrix is never materialized — queries and keys are processed in blocks
+  with an online softmax (flash-attention recurrence in pure jnp).  The
+  block loops are *python-unrolled*, which (a) lets fully-masked blocks be
+  skipped at trace time (sliding-window attention really does less work,
+  not just masked work), and (b) keeps `cost_analysis` exact (no inner
+  `while` bodies counted once — see roofline/ methodology).
+* **GQA grouped einsum**: K/V are never repeated to H heads; scores are
+  computed group-wise ([B,S,KV,G,dh] x [B,T,KV,dh]) so KV-sharded layouts
+  stay small.
+* **TP head padding**: if the q-head count does not divide the model axis,
+  configs request padded heads (extra heads zero-initialized => function
+  identical to the unpadded model; FLOP inflation is charged to the
+  roofline "useful ratio", DESIGN.md §5).
+* **Decode** reads a [B, S_cache, KV, dh] cache (or a rolling window cache
+  for local layers — O(window) memory at 500k context) and masks by
+  position.  Softcapping (Gemma-2) applies before masking.
+
+Positions are assumed to be ``start + arange(S)`` with static ``start``
+(standard unpacked batches), which is what makes trace-time block skipping
+sound.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import DATA, MODEL, _winit, apply_rope, cdtype, pdtype
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+def heads_padded(cfg, tp: int) -> int:
+    h = cfg.n_heads
+    if tp > 1 and h % tp:
+        return ((h + tp - 1) // tp) * tp
+    return h
+
+
+def kv_sharded(cfg, tp: int) -> bool:
+    return tp > 1 and cfg.n_kv_heads % tp == 0
+
+
+def init_attention(cfg, key, tp: int = 1):
+    d, dh, kv = cfg.d_model, cfg.d_head, cfg.n_kv_heads
+    hp = heads_padded(cfg, tp)
+    ks = jax.random.split(key, 4)
+    dt = pdtype(cfg)
+
+    wq = _winit(ks[0], (d, hp, dh), d, dt)
+    wo = _winit(ks[3], (hp, dh, d), hp * dh, dt)
+    if hp != cfg.n_heads:
+        # zero the padded heads: function == unpadded model (see module doc)
+        g = hp // kv
+        real_per_group = cfg.n_heads // kv
+        live = (jnp.arange(hp) % g) < real_per_group
+        wq = wq * live[None, :, None].astype(dt)
+        wo = wo * live[:, None, None].astype(dt)
+
+    p = {
+        "w_q": wq,
+        "w_k": _winit(ks[1], (d, kv, dh), d, dt),
+        "w_v": _winit(ks[2], (d, kv, dh), d, dt),
+        "w_o": wo,
+    }
+    kv_spec = P(None, MODEL, None) if kv_sharded(cfg, tp) else P(None, None, None)
+    s = {
+        "w_q": P(None, MODEL, None),
+        "w_k": kv_spec,
+        "w_v": kv_spec,
+        "w_o": P(MODEL, None, None),
+    }
+    if cfg.attn_bias:
+        p["b_q"] = jnp.zeros((hp, dh), dt)
+        p["b_k"] = jnp.zeros((kv, dh), dt)
+        p["b_v"] = jnp.zeros((kv, dh), dt)
+        s["b_q"] = P(MODEL, None)
+        bkv = P(MODEL, None) if kv_sharded(cfg, tp) else P(None, None)
+        s["b_k"] = bkv
+        s["b_v"] = bkv
+    return p, s
+
+
+def _rms(x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    return (xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)).astype(x.dtype)
+
+
+def _qkv(p, x, cfg, positions):
+    dt = cdtype(cfg)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["w_k"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["w_v"].astype(dt))
+    if cfg.attn_bias:
+        q = q + p["b_q"].astype(dt)
+        k = k + p["b_k"].astype(dt)
+        v = v + p["b_v"].astype(dt)
+    if cfg.qk_norm:
+        q = _rms(q)
+        k = _rms(k)
+    q = apply_rope(q, positions, rope_pct=cfg.rope_pct, theta=cfg.rope_theta)
+    k = apply_rope(k, positions, rope_pct=cfg.rope_pct, theta=cfg.rope_theta)
+    return q, k, v
+
+
+def attn_scale(cfg) -> float:
+    return cfg.attn_scale if cfg.attn_scale else 1.0 / np.sqrt(cfg.d_head)
+
+
+def _softcap(s, cap):
+    if cap:
+        return jnp.tanh(s / cap) * cap
+    return s
+
+
+# --------------------------------------------------------------------------
+# block attention core (online softmax)
+# --------------------------------------------------------------------------
+def _block_scores(qb, kb, cfg):
+    """qb: [B,qc,KV,G,dh]  kb: [B,kc,KV,dh] -> f32 [B,KV,G,qc,kc]."""
+    s = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qb, kb, preferred_element_type=jnp.float32
+    )
+    return _softcap(s * attn_scale(cfg), cfg.attn_softcap)
+
+
+def _attend_blocks(q, k, v, cfg, *, start: int, causal: bool, window: int,
+                   q_chunk: int, kv_chunk: int):
+    """Online-softmax blocked attention (see module docstring).
+
+    q: [B,S,H,dh] (H = padded heads), k/v: [B,T,KV,dh]; token i sits at
+    absolute position start + i (both q and kv; self-attention).
+    """
+    b, s_len, h, dh = q.shape
+    t_len = k.shape[1]
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s_len, kv, g, dh)
+
+    n_qb = (s_len + q_chunk - 1) // q_chunk
+    n_kb = (t_len + kv_chunk - 1) // kv_chunk
+    outs = []
+    for i in range(n_qb):
+        q0, q1 = i * q_chunk, min((i + 1) * q_chunk, s_len)
+        qb = qg[:, q0:q1]
+        m = jnp.full((b, kv, g, q1 - q0), NEG_INF, jnp.float32)
+        l = jnp.zeros((b, kv, g, q1 - q0), jnp.float32)
+        acc = jnp.zeros((b, q1 - q0, kv, g, dh), jnp.float32)
+        for j in range(n_kb):
+            k0, k1 = j * kv_chunk, min((j + 1) * kv_chunk, t_len)
+            # trace-time skipping of fully-masked blocks (static indices)
+            if causal and k0 > q1 - 1:
+                continue  # block strictly in the future
+            if window and (k1 - 1) < q0 - window + 1:
+                continue  # block strictly outside the window
+            kb = k[:, k0:k1]
+            vb = v[:, k0:k1]
+            sc = _block_scores(qb, kb, cfg)                     # [B,KV,G,qc,kc]
+            need_mask = (causal and k1 - 1 > q0) or (
+                window and k0 <= (q1 - 1) - window + 1
+            )
+            if need_mask:
+                qp = start + jnp.arange(q0, q1, dtype=jnp.int32)
+                kp = start + jnp.arange(k0, k1, dtype=jnp.int32)
+                msk = jnp.ones((q1 - q0, k1 - k0), bool)
+                if causal:
+                    msk &= kp[None, :] <= qp[:, None]
+                if window:
+                    msk &= kp[None, :] > qp[:, None] - window
+                sc = jnp.where(msk[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            pexp = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(pexp, axis=-1)
+            acc = acc * corr.transpose(0, 3, 1, 2)[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bqhgd", pexp.astype(v.dtype), vb,
+                preferred_element_type=jnp.float32,
+            )
+            m = m_new
+        l_safe = jnp.maximum(l.transpose(0, 3, 1, 2)[..., None], 1e-30)
+        outs.append((acc / l_safe).astype(q.dtype))
+    out = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    return out.reshape(b, s_len, h, dh)
+
+
+def _attend_full(q, k, v, cfg, *, start: int, causal: bool, window: int):
+    b, s_len, h, dh = q.shape
+    t_len = k.shape[1]
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s_len, kv, g, dh)
+    sc = _block_scores(qg, k, cfg)                               # [B,KV,G,S,T]
+    if causal or window:
+        qp = start + jnp.arange(s_len, dtype=jnp.int32)
+        kp = start + jnp.arange(t_len, dtype=jnp.int32)
+        msk = jnp.ones((s_len, t_len), bool)
+        if causal:
+            msk &= kp[None, :] <= qp[:, None]
+        if window:
+            msk &= kp[None, :] > qp[:, None] - window
+        sc = jnp.where(msk[None, None, None], sc, NEG_INF)
+    pa = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum(
+        "bhgqk,bkhd->bqhgd", pa.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    ).astype(q.dtype)
+    return out.reshape(b, s_len, h, dh)
+
+
+# --------------------------------------------------------------------------
+# public entry points
+# --------------------------------------------------------------------------
+def attn_forward(p, x, cfg, *, layer_window: int, causal: bool, start: int = 0,
+                 return_kv: bool = False):
+    """Training / prefill attention.  x: [B, S, D] -> [B, S, D]
+    (+ decode-layout KV cache when ``return_kv``, for serving prefill)."""
+    b, s_len, _ = x.shape
+    positions = start + jnp.arange(s_len, dtype=jnp.int32)
+    q, k, v = _qkv(p, x, cfg, positions)
+    if s_len <= cfg.full_attn_threshold:
+        out = _attend_full(q, k, v, cfg, start=start, causal=causal,
+                           window=layer_window)
+    else:
+        qc = cfg.attn_q_chunk or 2048
+        kc = cfg.attn_kv_chunk or 2048
+        out = _attend_blocks(q, k, v, cfg, start=start, causal=causal,
+                             window=layer_window, q_chunk=qc, kv_chunk=kc)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["w_o"].astype(cdtype(cfg)))
+    if not return_kv:
+        return y
+    if layer_window and layer_window < s_len:
+        # rolling cache: last W positions at slots (start+i) % W
+        w = layer_window
+        tail_pos = start + jnp.arange(s_len - w, s_len, dtype=jnp.int32)
+        slots = tail_pos % w
+        order = jnp.argsort(slots)
+        cache = {"k": k[:, s_len - w :][:, order], "v": v[:, s_len - w :][:, order]}
+    else:
+        cache = {"k": k, "v": v}
+    return y, cache
+
+
+def make_cache(cfg, batch: int, max_len: int, layer_window: int, tp: int = 1):
+    """KV cache (+specs) for one attention layer.  Local layers get a rolling
+    window buffer (O(window) memory — what makes 500k-context decode feasible
+    for the hybrid archs).  ``cfg.kv_cache_dtype == "int8"`` stores quantized
+    K/V with per-(token, head) scales — halves cache capacity pressure at
+    32k contexts (KIVI/KVQuant-style, per-token symmetric)."""
+    kv, dh = cfg.n_kv_heads, cfg.d_head
+    length = min(layer_window, max_len) if layer_window else max_len
+    shape = (batch, length, kv, dh)
+    kv_axis = MODEL if kv_sharded(cfg, tp) else None
+    seq_axis = None if kv_axis == MODEL else MODEL
+    spec = P(DATA, seq_axis, kv_axis, None)
+    if cfg.kv_cache_dtype == "int8":
+        sshape = (batch, length, kv, 1)
+        sspec = P(DATA, seq_axis, kv_axis, None)
+        return (
+            {"k": jnp.zeros(shape, jnp.int8), "v": jnp.zeros(shape, jnp.int8),
+             "k_scale": jnp.zeros(sshape, jnp.bfloat16),
+             "v_scale": jnp.zeros(sshape, jnp.bfloat16)},
+            {"k": spec, "v": spec, "k_scale": sspec, "v_scale": sspec},
+        )
+    return (
+        {"k": jnp.zeros(shape, cdtype(cfg)), "v": jnp.zeros(shape, cdtype(cfg))},
+        {"k": spec, "v": spec},
+    )
+
+
+def _quantize_kv(x):
+    """x: [B, 1, KV, dh] -> (int8 values, bf16 per-(token, head) scales)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / jnp.maximum(scale, 1e-9)),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def attn_decode(p, x, cache: Dict[str, jnp.ndarray], pos: jnp.ndarray, cfg, *,
+                layer_window: int, active: Optional[jnp.ndarray] = None):
+    """Single-token decode.  x: [B, 1, D]; pos: i32[] (lockstep) or i32[B]
+    (per-slot, continuous batching); active: bool[B] rows whose cache may be
+    written (None => all).  Returns (out [B, 1, D], new_cache)."""
+    b = x.shape[0]
+    per_slot = pos.ndim == 1
+    pos_b = pos if per_slot else jnp.broadcast_to(pos, (b,))
+    rope_pos = pos_b[:, None].astype(jnp.int32)                  # [B, 1]
+    q, k_new, v_new = _qkv(p, x, cfg, rope_pos)
+    quantized = cfg.kv_cache_dtype == "int8"
+    if quantized:
+        k_w, ks_new = _quantize_kv(k_new)
+        v_w, vs_new = _quantize_kv(v_new)
+    else:
+        k_w, v_w = k_new, v_new
+    length = cache["k"].shape[1]
+    if layer_window:
+        slot = pos_b % length
+    else:
+        slot = jnp.minimum(pos_b, length - 1)
+    idx = jnp.arange(length, dtype=jnp.int32)
+    if per_slot or active is not None:
+        # masked per-row write (continuous batching path)
+        wmask = idx[None, :] == slot[:, None]                    # [B, T]
+        if active is not None:
+            wmask &= active[:, None]
+        ck = jnp.where(wmask[..., None, None], k_w, cache["k"])
+        cv = jnp.where(wmask[..., None, None], v_w, cache["v"])
+        if quantized:
+            ks = jnp.where(wmask[..., None, None], ks_new, cache["k_scale"])
+            vs = jnp.where(wmask[..., None, None], vs_new, cache["v_scale"])
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k_w, (0, slot[0], 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v_w, (0, slot[0], 0, 0))
+        if quantized:
+            ks = jax.lax.dynamic_update_slice(cache["k_scale"], ks_new,
+                                              (0, slot[0], 0, 0))
+            vs = jax.lax.dynamic_update_slice(cache["v_scale"], vs_new,
+                                              (0, slot[0], 0, 0))
+
+    kv, dh = cfg.n_kv_heads, cfg.d_head
+    h = q.shape[2]
+    g = h // kv
+    qg = q.reshape(b, 1, kv, g, dh)
+    if quantized:
+        ck_r = ck.astype(cdtype(cfg)) * ks.astype(cdtype(cfg))
+        cv_r = cv.astype(cdtype(cfg)) * vs.astype(cdtype(cfg))
+    else:
+        ck_r, cv_r = ck, cv
+    sc = _block_scores(qg, ck_r, cfg)[..., 0, :]                 # [B,KV,G,T]
+
+    # positions actually stored in each cache slot (per batch row)
+    pb = pos_b[:, None]
+    if layer_window:
+        # rolling buffer: slot i holds the largest p' <= pos with p' % L == i
+        stored = pb - ((pb - idx[None, :]) % length)
+        valid = (stored >= 0) & (stored > pb - layer_window)
+    else:
+        valid = idx[None, :] <= pb
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    pa = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum(
+        "bhgk,bkhd->bhgd", pa.astype(cv_r.dtype), cv_r,
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+    out = out.reshape(b, 1, h, dh)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["w_o"].astype(cdtype(cfg)))
+    new_cache = {"k": ck, "v": cv}
+    if quantized:
+        new_cache["k_scale"] = ks
+        new_cache["v_scale"] = vs
+    return y, new_cache

@@ -1,0 +1,40 @@
+"""Modality frontends — STUBS by assignment.
+
+Per the architecture spec, [vlm]/[audio] entries cover the transformer
+BACKBONE only; the modality frontend supplies *precomputed* frame/patch
+embeddings through ``input_specs()``.  What remains model-side is the
+projection into d_model (+ the prefix-merge for VLM anyres tiles).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import MODEL, _winit, cdtype, pdtype
+
+__all__ = ["init_frontend", "apply_frontend"]
+
+
+def init_frontend(cfg, key):
+    if cfg.frontend == "none":
+        return {}, {}
+    p = {"w_proj": _winit(key, (cfg.frontend_dim, cfg.d_model), cfg.frontend_dim,
+                          pdtype(cfg))}
+    s = {"w_proj": P(None, None)}
+    if cfg.frontend == "vision":
+        # anyres tile-position embedding (llava-next: tiles of the base grid)
+        p["tile_pos"] = jnp.zeros((cfg.frontend_tokens, cfg.d_model), pdtype(cfg))
+        s["tile_pos"] = P(None, None)
+    return p, s
+
+
+def apply_frontend(p, feats, cfg):
+    """feats: [B, T_f, frontend_dim] -> [B, T_f, d_model]."""
+    x = feats.astype(cdtype(cfg)) @ p["w_proj"].astype(cdtype(cfg))
+    if cfg.frontend == "vision":
+        x = x + p["tile_pos"].astype(cdtype(cfg))[None]
+    return x

@@ -1,0 +1,223 @@
+"""Shared layers: norms, RoPE, gated MLPs, embeddings (+ their shardings).
+
+Every ``init_*`` returns ``(params, specs)`` — a param pytree and a
+matching pytree of ``PartitionSpec`` — so sharding rules can never drift
+from parameter structure.  Axis-name conventions:
+
+  MODEL = the tensor-parallel mesh axis ("model")
+  None  = replicated
+
+Weights are stored in ``cfg.param_dtype`` (fp32 by default) and cast to
+``cfg.dtype`` (bf16) at use — the usual mixed-precision training setup.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+MODEL = "model"
+# Placeholder for "the batch-sharding axes" — resolved to ("data",) or
+# ("pod", "data") once the mesh is known (see resolve_specs).
+DATA = "__data__"
+
+
+def resolve_specs(tree, data_axes):
+    """Replace the DATA placeholder in a PartitionSpec pytree with the
+    mesh's actual batch axes (tuple)."""
+    from jax.sharding import PartitionSpec
+
+    def fix(spec):
+        if not isinstance(spec, PartitionSpec):
+            return spec
+        parts = tuple(
+            tuple(data_axes) if p == DATA else p for p in spec
+        )
+        return PartitionSpec(*parts)
+
+    return jax.tree.map(fix, tree, is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+# --------------------------------------------------------------------------
+# dtype helpers
+# --------------------------------------------------------------------------
+def cdtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def cast(x, cfg):
+    return x.astype(cdtype(cfg))
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def init_norm(cfg, d: int):
+    if cfg.norm == "layernorm":
+        p = {"scale": jnp.ones((d,), pdtype(cfg)), "bias": jnp.zeros((d,), pdtype(cfg))}
+        s = {"scale": P(None), "bias": P(None)}
+    else:
+        p = {"scale": jnp.ones((d,), pdtype(cfg))}
+        s = {"scale": P(None)}
+    return p, s
+
+
+def apply_norm(p, x, cfg, eps: float = 1e-6):
+    """Norm with fp32 *statistics* but compute-dtype *application*: the
+    reductions stay accurate while the [B, S, D]-sized elementwise chain
+    never materializes in fp32 (2x HBM traffic + temp memory otherwise)."""
+    if cfg.norm == "layernorm":
+        xf = x.astype(jnp.float32)
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        rs = jax.lax.rsqrt(var + eps)
+        y = (x - mu.astype(x.dtype)) * rs.astype(x.dtype)
+        y = y * p["scale"].astype(x.dtype) + p["bias"].astype(x.dtype)
+    else:  # rmsnorm
+        # einsum with f32 accumulation: no f32 [B,S,D] convert materializes
+        sq = jnp.einsum("...d,...d->...", x, x,
+                        preferred_element_type=jnp.float32)
+        var = (sq / x.shape[-1])[..., None]
+        rs = jax.lax.rsqrt(var + eps)
+        scale = p["scale"].astype(jnp.float32)
+        if getattr(cfg, "gemma_norm_plus_one", False):
+            scale = scale + 1.0
+        y = x * rs.astype(x.dtype) * scale.astype(x.dtype)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope_frequencies(d_head: int, rope_pct: float, theta: float):
+    """Inverse frequencies for the rotated fraction of head dims."""
+    d_rot = int(d_head * rope_pct) // 2 * 2
+    inv = 1.0 / (theta ** (np.arange(0, d_rot, 2, dtype=np.float32) / d_rot))
+    return d_rot, jnp.asarray(inv, jnp.float32)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, *, rope_pct: float, theta: float):
+    """x: [..., S, H, Dh]; positions: broadcastable [..., S] int32."""
+    d_head = x.shape[-1]
+    d_rot, inv = rope_frequencies(d_head, rope_pct, theta)
+    if d_rot == 0:
+        return x
+    ang = positions[..., :, None].astype(jnp.float32) * inv[None, :]   # [..., S, d_rot/2]
+    sin = jnp.sin(ang)[..., :, None, :]                                # [..., S, 1, d_rot/2]
+    cos = jnp.cos(ang)[..., :, None, :]
+    xr, xp = x[..., :d_rot], x[..., d_rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr.astype(x.dtype), xp], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# dense / gated MLP
+# --------------------------------------------------------------------------
+def _winit(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape) / np.sqrt(fan_in)).astype(dtype)
+
+
+def init_mlp(cfg, key):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = pdtype(cfg)
+    if cfg.mlp_gated:
+        p = {
+            "w_gate": _winit(ks[0], (d, f), d, dt),
+            "w_up": _winit(ks[1], (d, f), d, dt),
+            "w_down": _winit(ks[2], (f, d), f, dt),
+        }
+        s = {"w_gate": P(None, MODEL), "w_up": P(None, MODEL), "w_down": P(MODEL, None)}
+    else:
+        p = {
+            "w_up": _winit(ks[1], (d, f), d, dt),
+            "w_down": _winit(ks[2], (f, d), f, dt),
+        }
+        s = {"w_up": P(None, MODEL), "w_down": P(MODEL, None)}
+    return p, s
+
+
+def _act(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if kind == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def apply_mlp(p, x, cfg):
+    dt = cdtype(cfg)
+    if cfg.mlp_gated:
+        h = _act(x @ p["w_gate"].astype(dt), cfg.act) * (x @ p["w_up"].astype(dt))
+    else:
+        h = _act(x @ p["w_up"].astype(dt), cfg.act)
+    return h @ p["w_down"].astype(dt)
+
+
+# --------------------------------------------------------------------------
+# embeddings / unembedding
+# --------------------------------------------------------------------------
+def padded_vocab(cfg) -> int:
+    vp = cfg.vocab_pad_multiple
+    return ((cfg.vocab_size + vp - 1) // vp) * vp
+
+
+def init_embed(cfg, key):
+    v = padded_vocab(cfg)
+    d = cfg.d_model
+    p = {"embedding": _winit(key, (v, d), d, pdtype(cfg))}
+    s = {"embedding": P(MODEL, None)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = _winit(jax.random.fold_in(key, 1), (d, v), d, pdtype(cfg))
+        s["unembed"] = P(None, MODEL)
+    return p, s
+
+
+def apply_embed(p, tokens, cfg):
+    x = jnp.take(p["embedding"].astype(cdtype(cfg)), tokens, axis=0)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), cdtype(cfg))
+    return x
+
+
+def apply_unembed(p, x, cfg):
+    """Returns fp32 logits [*, V_pad] (softcapped if configured)."""
+    if cfg.tie_embeddings:
+        w = p["embedding"].astype(cdtype(cfg)).T
+    else:
+        w = p["unembed"].astype(cdtype(cfg))
+    logits = (x @ w).astype(jnp.float32)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray, vocab_size: int):
+    """Mean CE over tokens; labels < 0 are masked.  Pads beyond vocab_size
+    are excluded by masking their logits."""
+    v_pad = logits.shape[-1]
+    if v_pad != vocab_size:
+        pad_mask = jnp.arange(v_pad) >= vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, jnp.clip(labels, 0, vocab_size - 1)[..., None], axis=-1
+    )[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (lse - ll) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)

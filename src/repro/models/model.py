@@ -1,0 +1,166 @@
+"""LanguageModel: embed -> block stack -> norm -> unembed (+loss, +decode).
+
+Functional wrapper tying the substrate together for all ten architectures.
+``init`` returns (params, specs) so distribution code can pjit directly.
+
+Batch contract (matches data/ and launch/):
+  train/prefill: {"tokens": i32[B, S]} (+ "frontend_feats" for vlm/audio,
+                  + "labels": i32[B, S] for training; -1 = masked)
+  decode:        {"tokens": i32[B, 1], "pos": i32[]} + cache pytree
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer
+from repro.models.frontends import apply_frontend, init_frontend
+from repro.models.layers import (
+    DATA,
+    MODEL,
+    apply_embed,
+    apply_norm,
+    apply_unembed,
+    init_embed,
+    init_norm,
+    padded_vocab,
+    resolve_specs,
+    softmax_xent,
+)
+
+__all__ = ["LanguageModel"]
+
+
+class LanguageModel:
+    """Stateless model namespace bound to a config (+ TP degree)."""
+
+    def __init__(self, cfg, tp: int = 1):
+        self.cfg = cfg
+        self.tp = tp
+
+    # -- params ------------------------------------------------------------
+    def init(self, key) -> Tuple[Any, Any]:
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        pe, se = init_embed(cfg, ks[0])
+        pf, sf = init_frontend(cfg, ks[1])
+        pb, sb = transformer.init_stack(cfg, ks[2], self.tp)
+        pn, sn = init_norm(cfg, cfg.d_model)
+        params = {"embed": pe, "frontend": pf, "blocks": pb, "final_norm": pn}
+        specs = {"embed": se, "frontend": sf, "blocks": sb, "final_norm": sn}
+        return params, specs
+
+    def abstract_init(self) -> Tuple[Any, Any]:
+        """(ShapeDtypeStruct params, PartitionSpec specs) without allocating.
+
+        Specs are plain Python objects built alongside params, so they are
+        captured through a side channel while eval_shape traces the array
+        part (PartitionSpec is not a JAX type and cannot be an output).
+        """
+        box = {}
+
+        def f(k):
+            p, s = self.init(k)
+            box["specs"] = s
+            return p
+
+        shapes = jax.eval_shape(f, jax.random.key(0))
+        return shapes, box["specs"]
+
+    def param_specs(self) -> Any:
+        return self.abstract_init()[1]
+
+    # -- embed (+ frontend prefix) ------------------------------------------
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        if cfg.frontend == "audio":
+            # encoder input is the (stub) frame-embedding stream directly
+            return apply_frontend(params["frontend"], batch["frontend_feats"], cfg)
+        x = apply_embed(params["embed"], batch["tokens"], cfg)
+        if cfg.frontend == "vision":
+            # anyres image tiles form a prefix before the text tokens
+            feats = apply_frontend(params["frontend"], batch["frontend_feats"], cfg)
+            x = jnp.concatenate([feats, x], axis=1)
+        return x
+
+    # -- forward ------------------------------------------------------------
+    def forward(self, params, batch, dist=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Returns (logits f32[B, S_total, V_pad], moe_aux f32[3])."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        x, aux = transformer.stack_forward(params["blocks"], x, cfg, dist)
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = apply_unembed(params["embed"], x, cfg)
+        return logits, aux
+
+    def loss(self, params, batch, dist=None) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch, dist)
+        labels = batch["labels"]
+        if cfg.frontend == "vision":
+            # image-prefix positions carry no LM loss
+            pad = jnp.full(
+                (labels.shape[0], cfg.frontend_tokens), -1, labels.dtype
+            )
+            labels = jnp.concatenate([pad, labels], axis=1)
+        ce = softmax_xent(logits, labels, cfg.vocab_size)
+        total = ce
+        metrics = {"ce": ce}
+        if cfg.n_experts:
+            total = total + cfg.moe_aux_coef * aux[0] + cfg.moe_z_coef * aux[1]
+            metrics.update(
+                {"moe_load_balance": aux[0], "moe_z": aux[1], "moe_drop": aux[2]}
+            )
+        metrics["loss"] = total
+        return total, metrics
+
+    def prefill(self, params, batch, dist=None):
+        """Serving prefill: returns (last-position logits f32[B, 1, V_pad],
+        decode-layout caches).  Only the final position is unembedded — the
+        full [B, S, V] logits tensor is never materialized."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        x, caches = transformer.stack_prefill(params["blocks"], x, cfg, dist)
+        x = apply_norm(params["final_norm"], x[:, -1:], cfg)
+        logits = apply_unembed(params["embed"], x, cfg)
+        return logits, caches
+
+    # -- decode ---------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        return transformer.init_stack_cache(self.cfg, batch, max_len, self.tp)
+
+    def abstract_cache(self, batch: int, max_len: int) -> Tuple[Any, Any]:
+        """(ShapeDtypeStruct caches, specs) without allocating (dry-run)."""
+        box = {}
+
+        def f():
+            c, s = self.init_cache(batch, max_len)
+            box["specs"] = s
+            return c
+
+        shapes = jax.eval_shape(f)
+        return shapes, box["specs"]
+
+    def decode_step(self, params, batch, caches, dist=None):
+        """batch: {"tokens": i32[B,1], "pos": i32[]} ->
+        (logits f32[B, 1, V_pad], new caches)."""
+        cfg = self.cfg
+        if not cfg.supports_decode():
+            raise ValueError(f"{cfg.name} is encoder-only; no decode step")
+        x = apply_embed(params["embed"], batch["tokens"], cfg)
+        x, caches = transformer.stack_decode(
+            params["blocks"], x, caches, batch["pos"], cfg, dist,
+            active=batch.get("active"),
+        )
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = apply_unembed(params["embed"], x, cfg)
+        return logits, caches
+
+    # -- sharding helpers ------------------------------------------------------
+    def sharded_specs(self, specs, data_axes) -> Any:
+        return resolve_specs(specs, data_axes)

@@ -1,0 +1,213 @@
+"""Top-k routed MoE with expert parallelism over the ``model`` axis.
+
+Dispatch design (and its deliberate echo of the paper): the buffer k-d tree
+wins by *batching queries by destination leaf* before brute-force scanning;
+token routing has exactly the same shape — tokens are ranked into fixed-
+capacity per-expert queues ("buffers") and each expert processes its queue
+as one dense matmul.  The ranking is a cumsum over destination one-hots,
+i.e. the jit-friendly form of sort-by-destination.
+
+Parallel layout: activations are sharded over the batch axes and replicated
+over ``model``; expert weights are sharded over ``model`` (EP).  Every model
+chip therefore already holds all tokens of its data row, dispatches only to
+its E/TP local experts, and the combine is a single psum over ``model`` —
+the same collective cost as a Megatron row-parallel matmul, no all-to-all.
+Capacity overflow drops (GShard-style), counted in ``aux.drop_frac``.
+
+The module exposes one code path used three ways:
+  * ``moe_mlp(..., dist=None)``  — single-device (smoke tests, examples)
+  * under ``shard_map``          — via ``moe_shard_body`` (training/serving)
+  * aux losses: switch load-balancing loss + router z-loss.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import DATA, MODEL, _act, _winit, cdtype, pdtype
+
+__all__ = ["init_moe", "moe_mlp", "MoEAux"]
+
+
+class MoEAux(NamedTuple):
+    load_balance: jnp.ndarray   # scalar f32 (switch aux loss)
+    z_loss: jnp.ndarray         # scalar f32 (router logit z-loss)
+    drop_frac: jnp.ndarray      # scalar f32 (fraction of assignments dropped)
+
+
+def init_moe(cfg, key, tp: int = 1):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    dt = pdtype(cfg)
+    p = {
+        "router": _winit(ks[0], (d, e), d, dt).astype(jnp.float32),
+        "w_gate": _winit(ks[1], (e, d, f), d, dt),
+        "w_up": _winit(ks[2], (e, d, f), d, dt),
+        "w_down": _winit(ks[3], (e, f, d), f, dt),
+    }
+    s = {
+        "router": P(None, None),
+        "w_gate": P(MODEL, None, None),
+        "w_up": P(MODEL, None, None),
+        "w_down": P(MODEL, None, None),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * f
+        p["w_gate_sh"] = _winit(jax.random.fold_in(ks[4], 0), (d, fs), d, dt)
+        p["w_up_sh"] = _winit(jax.random.fold_in(ks[4], 1), (d, fs), d, dt)
+        p["w_down_sh"] = _winit(jax.random.fold_in(ks[4], 2), (fs, d), fs, dt)
+        s["w_gate_sh"] = P(None, MODEL)
+        s["w_up_sh"] = P(None, MODEL)
+        s["w_down_sh"] = P(MODEL, None)
+    return p, s
+
+
+def _capacity(t_tokens: int, cfg) -> int:
+    c = int(np.ceil(t_tokens * cfg.moe_top_k / cfg.n_experts * cfg.moe_capacity_factor))
+    return max(c, cfg.moe_top_k)
+
+
+def _dispatch_compute_combine(p, x2d, cfg, e0: int, e_local: int):
+    """Core MoE for one chip's token pool against its local experts.
+
+    x2d: [T, D].  Returns (y_partial [T, D], probs f32 [T, E], dropped).
+    """
+    dt = cdtype(cfg)
+    t = x2d.shape[0]
+    e = cfg.n_experts
+    topk = cfg.moe_top_k
+    cap = _capacity(t, cfg)
+
+    logits = (x2d.astype(jnp.float32)) @ p["router"]             # [T, E] f32
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, topk)                      # [T, K]
+    if cfg.moe_renorm:
+        topv = topv / jnp.maximum(jnp.sum(topv, -1, keepdims=True), 1e-9)
+
+    local = topi - e0                                            # [T, K]
+    is_local = (local >= 0) & (local < e_local)
+    safe_local = jnp.where(is_local, local, 0)
+
+    # rank within each local expert's queue (token-major, the "buffer fill")
+    oh = jax.nn.one_hot(safe_local, e_local, dtype=jnp.int32) * is_local[..., None]
+    ohf = oh.reshape(t * topk, e_local)
+    ranks = jnp.cumsum(ohf, axis=0) - ohf                        # exclusive
+    pos = jnp.sum(ranks * ohf, axis=-1).reshape(t, topk)
+    keep = is_local & (pos < cap)
+
+    # scatter tokens into [E_local * cap (+dump), D]; one scatter per slot so
+    # the [T*K, D] token replication is never materialized
+    dest = jnp.where(keep, safe_local * cap + pos, e_local * cap)
+    xe = jnp.zeros((e_local * cap + 1, x2d.shape[1]), dt)
+    for kk in range(topk):
+        xe = xe.at[dest[:, kk]].add(x2d * keep[:, kk, None].astype(dt))
+    xe = xe[:-1].reshape(e_local, cap, -1)
+
+    # expert FFNs (dense per-expert batched matmuls)
+    wg = p["w_gate"].astype(dt)
+    wu = p["w_up"].astype(dt)
+    wd = p["w_down"].astype(dt)
+    h = _act(jnp.einsum("ecd,edf->ecf", xe, wg), cfg.act) * jnp.einsum(
+        "ecd,edf->ecf", xe, wu
+    )
+    ye = jnp.einsum("ecf,efd->ecd", h, wd)                       # [E_l, cap, D]
+
+    # combine: gather each (t, slot)'s expert output, weight by router prob
+    yef = jnp.concatenate([ye.reshape(e_local * cap, -1),
+                           jnp.zeros((1, ye.shape[-1]), dt)], axis=0)
+    y = jnp.zeros_like(x2d)
+    for kk in range(topk):
+        w = (topv[:, kk] * keep[:, kk]).astype(dt)
+        y = y + w[:, None] * yef[dest[:, kk]]
+
+    dropped = jnp.sum(is_local & ~keep) / jnp.maximum(jnp.sum(is_local), 1)
+    return y, probs, topi, dropped.astype(jnp.float32)
+
+
+def _aux_losses(probs, topi, cfg):
+    """Switch load-balance loss + z-loss from (replicated) router stats."""
+    e = cfg.n_experts
+    # fraction of (token, slot) assignments per expert
+    fr = jnp.mean(
+        jax.nn.one_hot(topi, e, dtype=jnp.float32).sum(axis=1), axis=0
+    ) / cfg.moe_top_k
+    pe = jnp.mean(probs, axis=0)
+    lb = e * jnp.sum(fr * pe)
+    z = jnp.mean(jax.nn.logsumexp(jnp.log(jnp.maximum(probs, 1e-30)), axis=-1) ** 2)
+    return lb, z
+
+
+def _shared_expert(p, x2d, cfg):
+    dt = cdtype(cfg)
+    h = _act(x2d @ p["w_gate_sh"].astype(dt), cfg.act) * (x2d @ p["w_up_sh"].astype(dt))
+    return h @ p["w_down_sh"].astype(dt)
+
+
+def moe_mlp(p, x, cfg, dist=None) -> Tuple[jnp.ndarray, MoEAux]:
+    """MoE FFN.  x: [B, S, D] -> ([B, S, D], MoEAux).
+
+    ``dist`` (models.transformer.Dist) enables the shard_map EP path; with
+    ``dist=None`` (or tp==1) the whole expert set is local.
+    """
+    b, s, d = x.shape
+    e = cfg.n_experts
+
+    if dist is None or dist.tp == 1:
+        x2 = x.reshape(b * s, d)
+        y, probs, topi, drop = _dispatch_compute_combine(p, x2, cfg, 0, e)
+        if cfg.n_shared_experts:
+            y = y + _shared_expert(p, x2, cfg)
+        lb, z = _aux_losses(probs, topi, cfg)
+        return y.reshape(b, s, d), MoEAux(lb, z, drop)
+
+    mesh = dist.mesh
+    model_axis = dist.model_axis
+    e_local = e // dist.tp
+
+    def body(x_local, pp):
+        me = jax.lax.axis_index(model_axis)
+        bl, sl = x_local.shape[0], x_local.shape[1]
+        x2 = x_local.reshape(bl * sl, d)
+        # local expert slice of the stacked weights
+        y, probs, topi, drop = _dispatch_compute_combine(
+            pp, x2, cfg, me * e_local, e_local
+        )
+        y = jax.lax.psum(y, model_axis)
+        if cfg.n_shared_experts:
+            # shared expert is TP-sharded on f: partial sums join the psum
+            y = y + jax.lax.psum(_shared_expert(pp, x2, cfg), model_axis)
+        lb, z = _aux_losses(probs, topi, cfg)
+        # router stats are replicated over `model` (same tokens, same router)
+        # but differ per data shard -> average over the batch axes
+        lb = jax.lax.pmean(lb, dist.data_axes)
+        z = jax.lax.pmean(z, dist.data_axes)
+        drop = jax.lax.pmean(drop, dist.data_axes + (model_axis,))
+        return y.reshape(bl, sl, d), lb, z, drop
+
+    pspec = {
+        "router": P(None, None),
+        "w_gate": P(model_axis, None, None),
+        "w_up": P(model_axis, None, None),
+        "w_down": P(model_axis, None, None),
+    }
+    if cfg.n_shared_experts:
+        pspec.update({
+            "w_gate_sh": P(None, model_axis),
+            "w_up_sh": P(None, model_axis),
+            "w_down_sh": P(model_axis, None),
+        })
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(dist.data_axes, None, None), pspec),
+        out_specs=(P(dist.data_axes, None, None), P(), P(), P()),
+        check_vma=False,
+    )
+    y, lb, z, drop = fn(x, p)
+    return y, MoEAux(lb, z, drop)

@@ -1,0 +1,147 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block structure (Griffin Fig. 2, recurrent residual block's mixer):
+
+    u  = conv1d_causal(W_in1 x)              # temporal conv, width 4
+    r  = sigmoid(W_a x + b_a)                # recurrence gate
+    i  = sigmoid(W_x x + b_x)                # input gate
+    a  = exp(-c * softplus(Lambda) * r)      # per-channel decay, c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)     # RG-LRU
+    out = W_out (h * gelu(W_in2 x))          # gated output
+
+The linear recurrence runs as ``jax.lax.associative_scan`` over time —
+O(T) work / log-depth HLO (exactly counted by cost_analysis, no while
+loops), and O(1)-state decode.  Gates are computed from the block input x
+(model-axis-replicated) so the gate matmuls are column-parallel without
+resharding; DESIGN.md notes this simplification vs gating on u.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import DATA, MODEL, _winit, cdtype, pdtype
+
+__all__ = ["init_rglru", "rglru_forward", "make_rglru_state", "rglru_decode"]
+
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+def _lru_dim(cfg):
+    return cfg.lru_width or cfg.d_model
+
+
+def init_rglru(cfg, key, tp: int = 1):
+    d = cfg.d_model
+    r = _lru_dim(cfg)
+    ks = jax.random.split(key, 6)
+    dt = pdtype(cfg)
+    # Lambda init so a^c in [0.9, 0.999] at r=1 (Griffin app. A)
+    lam0 = np.log(np.expm1(-np.log(np.linspace(0.9, 0.999, r)) / _C))
+    p = {
+        "w_in1": _winit(ks[0], (d, r), d, dt),
+        "w_in2": _winit(ks[1], (d, r), d, dt),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv1d_width, r)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((r,), dt),
+        "w_a": _winit(ks[3], (d, r), d, dt),
+        "b_a": jnp.zeros((r,), dt),
+        "w_x": _winit(ks[4], (d, r), d, dt),
+        "b_x": jnp.zeros((r,), dt),
+        "lam": jnp.asarray(lam0, jnp.float32),
+        "w_out": _winit(ks[5], (r, d), r, dt),
+    }
+    s = {
+        "w_in1": P(None, MODEL),
+        "w_in2": P(None, MODEL),
+        "conv_w": P(None, MODEL),
+        "conv_b": P(MODEL),
+        "w_a": P(None, MODEL),
+        "b_a": P(MODEL),
+        "w_x": P(None, MODEL),
+        "b_x": P(MODEL),
+        "lam": P(MODEL),
+        "w_out": P(MODEL, None),
+    }
+    return p, s
+
+
+def _conv1d(x, w, b, state=None):
+    width = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    t_len = x.shape[1]
+    y = jnp.zeros_like(x)
+    for i in range(width):
+        y = y + xp[:, i : i + t_len, :] * w[i]
+    return y + b
+
+
+def _gates(p, x, cfg):
+    dt = cdtype(cfg)
+    r = jax.nn.sigmoid((x @ p["w_a"].astype(dt) + p["b_a"].astype(dt)).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ p["w_x"].astype(dt) + p["b_x"].astype(dt)).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r                 # [B,T,R] f32, <0
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, mult * i
+
+
+def rglru_forward(p, x, cfg, return_state: bool = False):
+    """x: [B, T, D] -> [B, T, D] (training / prefill).
+    ``return_state`` additionally emits the decode state (serving prefill)."""
+    dt = cdtype(cfg)
+    pre = x @ p["w_in1"].astype(dt)
+    u = _conv1d(pre, p["conv_w"].astype(dt), p["conv_b"].astype(dt))
+    a, gate_in = _gates(p, x, cfg)
+    b = gate_in * u.astype(jnp.float32)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    g = jax.nn.gelu(x @ p["w_in2"].astype(dt), approximate=True)
+    y = h.astype(dt) * g
+    y = y @ p["w_out"].astype(dt)
+    if not return_state:
+        return y
+    width = p["conv_w"].shape[0]
+    state = {"conv": pre[:, -(width - 1):], "h": h[:, -1]}
+    return y, state
+
+
+def make_rglru_state(cfg, batch: int, tp: int = 1):
+    r = _lru_dim(cfg)
+    st = {
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, r), cdtype(cfg)),
+        "h": jnp.zeros((batch, r), jnp.float32),
+    }
+    sp = {"conv": P(DATA, None, MODEL), "h": P(DATA, MODEL)}
+    return st, sp
+
+
+def rglru_decode(p, x, state: Dict[str, jnp.ndarray], cfg, active=None):
+    """Single-token decode.  x: [B, 1, D] -> ([B, 1, D], new state).
+    ``active``: bool[B]; inactive rows keep their previous state."""
+    dt = cdtype(cfg)
+    pre = x @ p["w_in1"].astype(dt)                             # [B, 1, R]
+    conv_in = jnp.concatenate([state["conv"], pre], axis=1)
+    u = _conv1d(pre, p["conv_w"].astype(dt), p["conv_b"].astype(dt),
+                state=state["conv"])
+    a, gate_in = _gates(p, x, cfg)
+    h = a[:, 0] * state["h"] + (gate_in * u.astype(jnp.float32))[:, 0]
+    g = jax.nn.gelu(x @ p["w_in2"].astype(dt), approximate=True)
+    y = h[:, None, :].astype(dt) * g
+    new_conv = conv_in[:, 1:]
+    if active is not None:
+        new_conv = jnp.where(active[:, None, None], new_conv, state["conv"])
+        h = jnp.where(active[:, None], h, state["h"])
+    return y @ p["w_out"].astype(dt), {"conv": new_conv, "h": h}

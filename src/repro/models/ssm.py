@@ -1,0 +1,237 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Chunked SSD form: the sequence is cut into chunks of length Q
+(``cfg.ssm_chunk``); within a chunk the output is the masked quadratic
+"attention-like" term, across chunks a linear state recurrence carries
+[H, N, P] states.  The cross-chunk recurrence is a ``jax.lax.
+associative_scan`` — O(T) work, log depth, *no while loops*, so
+``cost_analysis`` counts it exactly (roofline methodology) and 500k-token
+sequences lower with bounded memory.
+
+Layout/sharding: d_inner = H * P with heads H sharded over ``model``;
+B/C projections (n_groups = 1) are replicated (small), out_proj is
+row-parallel.  Decode carries (conv_state [B, W-1, d_inner],
+ssm_state [B, H, N, P]) — O(1) per token, the reason ``long_500k`` is an
+SSM cell.
+
+Simplifications vs the reference CUDA impl (documented in DESIGN.md):
+causal conv1d is applied to the x path only (not B/C), and in_proj is kept
+as separate matrices instead of one fused projection.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import DATA, MODEL, _winit, cdtype, pdtype
+
+__all__ = ["init_ssm", "ssm_forward", "make_ssm_state", "ssm_decode"]
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    h = cfg.ssm_heads or d_inner // 64
+    p_head = d_inner // h
+    n = cfg.ssm_state
+    return d_inner, h, p_head, n
+
+
+def init_ssm(cfg, key, tp: int = 1):
+    d = cfg.d_model
+    d_inner, h, p_head, n = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    dt = pdtype(cfg)
+    p = {
+        "w_z": _winit(ks[0], (d, d_inner), d, dt),
+        "w_x": _winit(ks[1], (d, d_inner), d, dt),
+        "w_b": _winit(ks[2], (d, n), d, dt),
+        "w_c": _winit(ks[3], (d, n), d, dt),
+        "w_dt": _winit(ks[4], (d, h), d, dt),
+        "dt_bias": jnp.zeros((h,), dt),
+        # A in (-inf, 0): init a = -exp(A_log) in [-1, -e]; standard S6 init
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D_skip": jnp.ones((h,), dt),
+        "conv_w": (jax.random.normal(ks[5], (cfg.conv1d_width, d_inner)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((d_inner,), dt),
+        "norm_scale": jnp.ones((d_inner,), dt),
+        "w_out": _winit(ks[6], (d_inner, d), d_inner, dt),
+    }
+    s = {
+        "w_z": P(None, MODEL),
+        "w_x": P(None, MODEL),
+        "w_b": P(None, None),
+        "w_c": P(None, None),
+        "w_dt": P(None, MODEL),
+        "dt_bias": P(MODEL),
+        "A_log": P(MODEL),
+        "D_skip": P(MODEL),
+        "conv_w": P(None, MODEL),
+        "conv_b": P(MODEL),
+        "norm_scale": P(MODEL),
+        "w_out": P(MODEL, None),
+    }
+    return p, s
+
+
+def _causal_conv1d(x, w, b, state=None):
+    """Depthwise causal conv as W unrolled shifted adds.  x: [B, T, C];
+    w: [W, C].  ``state``: [B, W-1, C] previous inputs (decode prefix)."""
+    width = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    t_len = x.shape[1]
+    y = jnp.zeros_like(x)
+    for i in range(width):
+        y = y + xp[:, i : i + t_len, :] * w[i]
+    return y + b
+
+
+def _gated_rmsnorm(y, z, scale, eps=1e-6):
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    return (
+        gf * jax.lax.rsqrt(jnp.mean(gf * gf, -1, keepdims=True) + eps)
+    ).astype(y.dtype) * scale
+
+
+def _proj(p, x, cfg):
+    dt = cdtype(cfg)
+    z = x @ p["w_z"].astype(dt)
+    xin = x @ p["w_x"].astype(dt)
+    b_ = x @ p["w_b"].astype(dt)
+    c_ = x @ p["w_c"].astype(dt)
+    dtv = jax.nn.softplus(
+        (x @ p["w_dt"].astype(dt)).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )
+    return z, xin, b_, c_, dtv
+
+
+def ssm_forward(p, x, cfg, return_state: bool = False):
+    """x: [B, T, D] -> [B, T, D] (training / prefill).
+    ``return_state`` additionally emits the decode state (serving prefill)."""
+    bsz, t_len, d = x.shape
+    d_inner, h, p_head, n = _dims(cfg)
+    q = min(cfg.ssm_chunk, t_len)
+    pad = (-t_len) % q
+    if pad:
+        # LEFT-pad to a chunk multiple: zero inputs contribute nothing to the
+        # zero-initialized state, so outputs/states for real tokens are exact.
+        x = jnp.pad(x, ((0, 0), (pad, 0), (0, 0)))
+        t_len = t_len + pad
+    nc = t_len // q
+    dt = cdtype(cfg)
+
+    z, xin, b_, c_, dtv = _proj(p, x, cfg)
+    xin_pre = xin
+    xin = _causal_conv1d(xin, p["conv_w"].astype(dt), p["conv_b"].astype(dt))
+    xin = jax.nn.silu(xin)
+
+    # heads
+    xh = xin.reshape(bsz, nc, q, h, p_head)
+    bch = b_.reshape(bsz, nc, q, n)
+    cch = c_.reshape(bsz, nc, q, n)
+    dtc = dtv.reshape(bsz, nc, q, h)                           # f32
+    a = -jnp.exp(p["A_log"])                                   # [H] f32, < 0
+    la = dtc * a                                               # log-decay per step
+    cla = jnp.cumsum(la, axis=2)                               # [B,C,Q,H] cum log decay
+
+    # ---- intra-chunk (quadratic within Q) -------------------------------
+    # decay(i, j) = exp(cla_i - cla_j) for j <= i
+    seg = cla[:, :, :, None, :] - cla[:, :, None, :, :]        # [B,C,Q,Q,H]
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    dec = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    sc = jnp.einsum("bcin,bcjn->bcij", cch, bch,
+                    preferred_element_type=jnp.float32)        # [B,C,Q,Q]
+    w_ij = (sc[..., None] * dec).astype(dt)                    # [B,C,Q,Q,H]
+    xdt = (xh.astype(jnp.float32) * dtc[..., None]).astype(dt)  # dt-scaled input
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w_ij, xdt)
+
+    # ---- chunk states + cross-chunk recurrence --------------------------
+    # state_c = sum_j exp(cla_end - cla_j) * B_j (x_j dt_j)
+    dec_end = jnp.exp(cla[:, :, -1:, :] - cla)                 # [B,C,Q,H]
+    sb = jnp.einsum("bcjn,bcjh,bcjhp->bchnp",
+                    bch.astype(jnp.float32), dec_end, xdt.astype(jnp.float32))
+    chunk_decay = jnp.exp(cla[:, :, -1, :])                    # [B,C,H]
+
+    def combine(e1, e2):
+        a1, s1 = e1
+        a2, s2 = e2
+        return a1 * a2, s2 + a2[..., None, None] * s1
+
+    dec_run, s_run = jax.lax.associative_scan(
+        combine, (chunk_decay, sb), axis=1
+    )
+    # state entering chunk c = s_run shifted right by one chunk
+    s_prev = jnp.concatenate(
+        [jnp.zeros_like(s_run[:, :1]), s_run[:, :-1]], axis=1
+    )                                                          # [B,C,H,N,P]
+
+    # y_inter_i = exp(cla_i) * C_i . s_prev
+    y_inter = jnp.einsum(
+        "bcin,bcih,bchnp->bcihp",
+        cch.astype(jnp.float32), jnp.exp(cla), s_prev,
+    ).astype(dt)
+
+    y = (y_intra + y_inter + xh * p["D_skip"].astype(dt)[None, None, None, :, None])
+    y = y.reshape(bsz, t_len, d_inner)
+    if pad:
+        y = y[:, pad:]
+        z = z[:, pad:]
+    y = _gated_rmsnorm(y, z, p["norm_scale"].astype(dt))
+    y = y @ p["w_out"].astype(dt)
+    if not return_state:
+        return y
+    width = p["conv_w"].shape[0]
+    state = {"conv": xin_pre[:, -(width - 1):], "ssm": s_run[:, -1]}
+    return y, state
+
+
+def make_ssm_state(cfg, batch: int, tp: int = 1):
+    d_inner, h, p_head, n = _dims(cfg)
+    width = cfg.conv1d_width
+    st = {
+        "conv": jnp.zeros((batch, width - 1, d_inner), cdtype(cfg)),
+        "ssm": jnp.zeros((batch, h, n, p_head), jnp.float32),
+    }
+    sp = {
+        "conv": P(DATA, None, MODEL),
+        "ssm": P(DATA, MODEL, None, None),
+    }
+    return st, sp
+
+
+def ssm_decode(p, x, state: Dict[str, jnp.ndarray], cfg, active=None):
+    """Single-token decode.  x: [B, 1, D] -> ([B, 1, D], new state).
+    ``active``: bool[B]; inactive rows keep their previous state."""
+    bsz = x.shape[0]
+    d_inner, h, p_head, n = _dims(cfg)
+    dt = cdtype(cfg)
+
+    z, xin, b_, c_, dtv = _proj(p, x, cfg)
+    conv_in = jnp.concatenate([state["conv"], xin], axis=1)     # [B, W, C]
+    xin = _causal_conv1d(xin, p["conv_w"].astype(dt), p["conv_b"].astype(dt),
+                         state=state["conv"])
+    xin = jax.nn.silu(xin)
+    new_conv = conv_in[:, 1:]
+
+    xh = xin.reshape(bsz, h, p_head).astype(jnp.float32)
+    dt1 = dtv.reshape(bsz, h)                                   # f32
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt1 * a)                                    # [B, H]
+    bx = jnp.einsum("bn,bh,bhp->bhnp", b_[:, 0].astype(jnp.float32), dt1, xh)
+    hnew = decay[..., None, None] * state["ssm"] + bx
+    y = jnp.einsum("bn,bhnp->bhp", c_[:, 0].astype(jnp.float32), hnew)
+    y = (y + xh * p["D_skip"].astype(jnp.float32)[None, :, None]).astype(dt)
+    y = y.reshape(bsz, 1, d_inner)
+    y = _gated_rmsnorm(y, z, p["norm_scale"].astype(dt))
+    if active is not None:
+        new_conv = jnp.where(active[:, None, None], new_conv, state["conv"])
+        hnew = jnp.where(active[:, None, None, None], hnew, state["ssm"])
+    return y @ p["w_out"].astype(dt), {"conv": new_conv, "ssm": hnew}

@@ -1,0 +1,454 @@
+"""Block stack: scan-over-layer-groups with heterogeneous patterns.
+
+A *group* is one full cycle of ``cfg.layer_pattern`` (e.g. (local, global)
+for Gemma-2, (rglru, rglru, local) for RecurrentGemma).  Parameters are
+stacked per group -> ``jax.lax.scan`` over groups keeps the HLO size
+O(group), independent of depth (compile time for 48-layer models at 512
+devices stays seconds).  Layers beyond ``n_groups * group_size`` (pattern
+remainder, e.g. RecurrentGemma's 38 = 12*3 + 2) run unrolled with their own
+params.  Remat policy wraps the group body.
+
+``Dist`` carries the mesh context (mesh, batch axes, model axis, TP degree);
+``dist=None`` is the single-device path used by smoke tests and examples.
+
+Modes:
+  * ``stack_forward``: train/prefill, returns (x, moe_aux_sum)
+  * ``stack_decode`` : one token; caches/states are pytrees stacked like
+    params, scanned through jointly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention, moe, rglru, ssm
+from repro.models.layers import (
+    DATA,
+    MODEL,
+    apply_mlp,
+    apply_norm,
+    cdtype,
+    init_mlp,
+    init_norm,
+)
+
+__all__ = ["Dist", "init_stack", "stack_forward", "stack_prefill",
+           "init_stack_cache", "stack_decode", "grow_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Dist:
+    mesh: Any
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    tp: int = 1
+
+    def __hash__(self):
+        return hash((id(self.mesh), self.data_axes, self.model_axis, self.tp))
+
+
+# --------------------------------------------------------------------------
+# per-layer init/apply
+# --------------------------------------------------------------------------
+def _init_layer(cfg, key, kind: Tuple[str, str], tp: int):
+    mixer_kind, mlp_kind = kind
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {}
+    s: Dict[str, Any] = {}
+    p["norm1"], s["norm1"] = init_norm(cfg, cfg.d_model)
+    if mixer_kind in ("global", "local"):
+        p["mixer"], s["mixer"] = attention.init_attention(cfg, ks[0], tp)
+    elif mixer_kind == "rglru":
+        p["mixer"], s["mixer"] = rglru.init_rglru(cfg, ks[0], tp)
+    elif mixer_kind == "ssm":
+        p["mixer"], s["mixer"] = ssm.init_ssm(cfg, ks[0], tp)
+    else:
+        raise ValueError(f"unknown mixer {mixer_kind!r}")
+    if cfg.post_norm:
+        p["norm1_post"], s["norm1_post"] = init_norm(cfg, cfg.d_model)
+    if mlp_kind != "none":
+        p["norm2"], s["norm2"] = init_norm(cfg, cfg.d_model)
+        if mlp_kind == "dense":
+            p["mlp"], s["mlp"] = init_mlp(cfg, ks[1])
+        elif mlp_kind == "moe":
+            p["mlp"], s["mlp"] = moe.init_moe(cfg, ks[1], tp)
+        else:
+            raise ValueError(f"unknown mlp {mlp_kind!r}")
+        if cfg.post_norm:
+            p["norm2_post"], s["norm2_post"] = init_norm(cfg, cfg.d_model)
+    return p, s
+
+
+def _maybe_seq_shard(x, cfg, dist):
+    """Megatron-style sequence parallelism: between blocks the residual
+    stream lives sharded over `model` along the sequence axis, so norms/
+    residual/elementwise math touches 1/TP of the bytes."""
+    if dist is None or not cfg.seq_shard or dist.tp == 1:
+        return x
+    from jax.sharding import NamedSharding
+
+    spec = P(dist.data_axes, dist.model_axis, None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(dist.mesh, spec))
+
+
+def _maybe_seq_full(x, cfg, dist):
+    """The inverse boundary: gather the sequence axis before a TP mixer/MLP
+    so GSPMD partitions those matmuls over heads/d_ff (without this pin it
+    happily keeps seq sharding and computes the full d_ff per chip)."""
+    if dist is None or not cfg.seq_shard or dist.tp == 1:
+        return x
+    from jax.sharding import NamedSharding
+
+    spec = P(dist.data_axes, None, None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(dist.mesh, spec))
+
+
+def _apply_mixer_fwd(p, x, cfg, mixer_kind, dist, start):
+    if mixer_kind == "global":
+        return attention.attn_forward(p, x, cfg, layer_window=0, causal=not cfg.encoder_only, start=start)
+    if mixer_kind == "local":
+        return attention.attn_forward(p, x, cfg, layer_window=cfg.window, causal=not cfg.encoder_only, start=start)
+    if mixer_kind == "rglru":
+        return rglru.rglru_forward(p, x, cfg)
+    if mixer_kind == "ssm":
+        return ssm.ssm_forward(p, x, cfg)
+    raise ValueError(mixer_kind)
+
+
+def _apply_layer_fwd(p, x, cfg, kind, dist, start):
+    mixer_kind, mlp_kind = kind
+    aux = jnp.zeros((3,), jnp.float32)  # (load_balance, z_loss, drop_frac)
+
+    h = _maybe_seq_full(apply_norm(p["norm1"], x, cfg), cfg, dist)
+    h = _apply_mixer_fwd(p["mixer"], h, cfg, mixer_kind, dist, start)
+    h = _maybe_seq_shard(h, cfg, dist)
+    if cfg.post_norm:
+        h = apply_norm(p["norm1_post"], h, cfg)
+    x = _maybe_seq_shard(x, cfg, dist) + h
+
+    if mlp_kind != "none":
+        h = _maybe_seq_full(apply_norm(p["norm2"], x, cfg), cfg, dist)
+        if mlp_kind == "dense":
+            h = apply_mlp(p["mlp"], h, cfg)
+        else:
+            h, mo = moe.moe_mlp(p["mlp"], h, cfg, dist)
+            aux = aux + jnp.stack([mo.load_balance, mo.z_loss, mo.drop_frac])
+        h = _maybe_seq_shard(h, cfg, dist)
+        if cfg.post_norm:
+            h = apply_norm(p["norm2_post"], h, cfg)
+        x = x + h
+    return x, aux
+
+
+# --------------------------------------------------------------------------
+# stack init
+# --------------------------------------------------------------------------
+def init_stack(cfg, key, tp: int = 1):
+    """Returns (params, specs).  params = {"groups": [stacked over G],
+    "rest": [per remainder layer]}."""
+    pat = cfg.layer_pattern
+    gs = cfg.group_size()
+    ng = cfg.n_groups()
+    nr = cfg.n_remainder()
+
+    group_params: List[Any] = []
+    specs_one: Optional[Any] = None
+    for g in range(ng):
+        layer_ps = []
+        for li, kind in enumerate(pat):
+            p, s = _init_layer(cfg, jax.random.fold_in(key, g * gs + li), kind, tp)
+            layer_ps.append(p)
+            if g == 0:
+                specs_one = (specs_one or []) + [s]
+        group_params.append(layer_ps)
+    if ng:
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *group_params)
+        # specs gain a leading (unsharded) group axis
+        gspecs = jax.tree.map(
+            lambda sp: P(*((None,) + tuple(sp))),
+            specs_one,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+    else:
+        stacked, gspecs = [], []
+
+    rest, rspecs = [], []
+    for r in range(nr):
+        kind = pat[r % gs]
+        p, s = _init_layer(cfg, jax.random.fold_in(key, ng * gs + r), kind, tp)
+        rest.append(p)
+        rspecs.append(s)
+
+    return {"groups": stacked, "rest": rest}, {"groups": gspecs, "rest": rspecs}
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+def _remat_wrap(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)  # "full"
+
+
+def stack_forward(params, x, cfg, dist=None, start: int = 0):
+    """x: [B, S, D] -> ([B, S, D], aux f32[3])."""
+    pat = cfg.layer_pattern
+    aux0 = jnp.zeros((3,), jnp.float32)
+
+    def group_body(x, gp):
+        ga = jnp.zeros((3,), jnp.float32)
+        for li, kind in enumerate(pat):
+            x, a = _apply_layer_fwd(gp[li], x, cfg, kind, dist, start)
+            ga = ga + a
+        return x, ga
+
+    body = _remat_wrap(group_body, cfg)
+
+    if cfg.n_groups():
+        if cfg.scan_layers:
+            x, auxs = jax.lax.scan(lambda c, gp: body(c, gp), x, params["groups"])
+            aux0 = aux0 + jnp.sum(auxs, axis=0)
+        else:
+            ng = cfg.n_groups()
+            for g in range(ng):
+                gp = jax.tree.map(lambda a: a[g], params["groups"])
+                x, a = body(x, gp)
+                aux0 = aux0 + a
+    for r, p in enumerate(params["rest"]):
+        kind = pat[r % cfg.group_size()]
+        x, a = _apply_layer_fwd(p, x, cfg, kind, dist, start)
+        aux0 = aux0 + a
+    return x, aux0
+
+
+# --------------------------------------------------------------------------
+# decode (single token) + caches
+# --------------------------------------------------------------------------
+def _init_layer_cache(cfg, kind, batch, max_len, tp):
+    mixer_kind, _ = kind
+    if mixer_kind == "global":
+        return attention.make_cache(cfg, batch, max_len, 0, tp)
+    if mixer_kind == "local":
+        return attention.make_cache(cfg, batch, max_len, cfg.window, tp)
+    if mixer_kind == "rglru":
+        return rglru.make_rglru_state(cfg, batch, tp)
+    if mixer_kind == "ssm":
+        return ssm.make_ssm_state(cfg, batch, tp)
+    raise ValueError(mixer_kind)
+
+
+def init_stack_cache(cfg, batch: int, max_len: int, tp: int = 1):
+    """Cache pytree mirroring the params layout ({"groups": stacked, "rest"})."""
+    pat = cfg.layer_pattern
+    gs, ng, nr = cfg.group_size(), cfg.n_groups(), cfg.n_remainder()
+    one_group, one_specs = [], []
+    for kind in pat:
+        c, s = _init_layer_cache(cfg, kind, batch, max_len, tp)
+        one_group.append(c)
+        one_specs.append(s)
+    if ng:
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (ng,) + a.shape), one_group
+        )
+        gspecs = jax.tree.map(
+            lambda sp: P(*((None,) + tuple(sp))),
+            one_specs,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+    else:
+        stacked, gspecs = [], []
+    rest, rspecs = [], []
+    for r in range(nr):
+        c, s = _init_layer_cache(cfg, pat[r % gs], batch, max_len, tp)
+        rest.append(c)
+        rspecs.append(s)
+    return {"groups": stacked, "rest": rest}, {"groups": gspecs, "rest": rspecs}
+
+
+def _apply_layer_decode(p, x, cache, pos, cfg, kind, dist, active=None):
+    mixer_kind, mlp_kind = kind
+    h = apply_norm(p["norm1"], x, cfg)
+    if mixer_kind in ("global", "local"):
+        w = cfg.window if mixer_kind == "local" else 0
+        h, cache = attention.attn_decode(p["mixer"], h, cache, pos, cfg,
+                                         layer_window=w, active=active)
+    elif mixer_kind == "rglru":
+        h, cache = rglru.rglru_decode(p["mixer"], h, cache, cfg, active=active)
+    else:
+        h, cache = ssm.ssm_decode(p["mixer"], h, cache, cfg, active=active)
+    if cfg.post_norm:
+        h = apply_norm(p["norm1_post"], h, cfg)
+    x = x + h
+    if mlp_kind != "none":
+        h = apply_norm(p["norm2"], x, cfg)
+        if mlp_kind == "dense":
+            h = apply_mlp(p["mlp"], h, cfg)
+        else:
+            h, _ = moe.moe_mlp(p["mlp"], h, cfg, dist)
+        if cfg.post_norm:
+            h = apply_norm(p["norm2_post"], h, cfg)
+        x = x + h
+    x = _maybe_seq_shard(x, cfg, dist)
+    return x, cache
+
+
+def stack_decode(params, x, caches, pos, cfg, dist=None, active=None):
+    """x: [B, 1, D]; pos: i32[] or i32[B] -> ([B, 1, D], new caches)."""
+    pat = cfg.layer_pattern
+
+    def group_body(x, gp_gc):
+        gp, gc = gp_gc
+        new_c = []
+        for li, kind in enumerate(pat):
+            x, c = _apply_layer_decode(gp[li], x, gc[li], pos, cfg, kind, dist,
+                                       active=active)
+            new_c.append(c)
+        return x, new_c
+
+    if cfg.n_groups():
+        if cfg.scan_layers:
+            x, new_groups = jax.lax.scan(
+                group_body, x, (params["groups"], caches["groups"])
+            )
+        else:
+            outs = []
+            ng = cfg.n_groups()
+            for g in range(ng):
+                gp = jax.tree.map(lambda a: a[g], params["groups"])
+                gc = jax.tree.map(lambda a: a[g], caches["groups"])
+                x, c = group_body(x, (gp, gc))
+                outs.append(c)
+            new_groups = jax.tree.map(lambda *a: jnp.stack(a), *outs)
+    else:
+        new_groups = caches["groups"]
+    new_rest = []
+    for r, p in enumerate(params["rest"]):
+        kind = pat[r % cfg.group_size()]
+        x, c = _apply_layer_decode(p, x, caches["rest"][r], pos, cfg, kind, dist,
+                                   active=active)
+        new_rest.append(c)
+    return x, {"groups": new_groups, "rest": new_rest}
+
+# --------------------------------------------------------------------------
+# prefill (forward + decode-layout cache emission, for serving)
+# --------------------------------------------------------------------------
+def _apply_mixer_prefill(p, x, cfg, mixer_kind, dist, start):
+    if mixer_kind == "global":
+        return attention.attn_forward(p, x, cfg, layer_window=0,
+                                      causal=not cfg.encoder_only, start=start,
+                                      return_kv=True)
+    if mixer_kind == "local":
+        return attention.attn_forward(p, x, cfg, layer_window=cfg.window,
+                                      causal=not cfg.encoder_only, start=start,
+                                      return_kv=True)
+    if mixer_kind == "rglru":
+        return rglru.rglru_forward(p, x, cfg, return_state=True)
+    if mixer_kind == "ssm":
+        return ssm.ssm_forward(p, x, cfg, return_state=True)
+    raise ValueError(mixer_kind)
+
+
+def _apply_layer_prefill(p, x, cfg, kind, dist, start):
+    mixer_kind, mlp_kind = kind
+    h = _maybe_seq_full(apply_norm(p["norm1"], x, cfg), cfg, dist)
+    h, cache = _apply_mixer_prefill(p["mixer"], h, cfg, mixer_kind, dist, start)
+    h = _maybe_seq_shard(h, cfg, dist)
+    if cfg.post_norm:
+        h = apply_norm(p["norm1_post"], h, cfg)
+    x = _maybe_seq_shard(x, cfg, dist) + h
+    if mlp_kind != "none":
+        h = _maybe_seq_full(apply_norm(p["norm2"], x, cfg), cfg, dist)
+        if mlp_kind == "dense":
+            h = apply_mlp(p["mlp"], h, cfg)
+        else:
+            h, _ = moe.moe_mlp(p["mlp"], h, cfg, dist)
+        h = _maybe_seq_shard(h, cfg, dist)
+        if cfg.post_norm:
+            h = apply_norm(p["norm2_post"], h, cfg)
+        x = x + h
+    return x, cache
+
+
+def stack_prefill(params, x, cfg, dist=None, start: int = 0):
+    """Forward pass that also emits the decode-layout cache pytree
+    ({"groups": stacked, "rest": [...]}, matching init_stack_cache)."""
+    pat = cfg.layer_pattern
+
+    def group_body(x, gp):
+        caches = []
+        for li, kind in enumerate(pat):
+            x, c = _apply_layer_prefill(gp[li], x, cfg, kind, dist, start)
+            caches.append(c)
+        return x, caches
+
+    if cfg.n_groups():
+        if cfg.scan_layers:
+            x, group_caches = jax.lax.scan(group_body, x, params["groups"])
+        else:
+            outs = []
+            for g in range(cfg.n_groups()):
+                gp = jax.tree.map(lambda a: a[g], params["groups"])
+                x, c = group_body(x, gp)
+                outs.append(c)
+            group_caches = jax.tree.map(lambda *a: jnp.stack(a), *outs)
+    else:
+        group_caches = []
+    rest = []
+    for r, p in enumerate(params["rest"]):
+        kind = pat[r % cfg.group_size()]
+        x, c = _apply_layer_prefill(p, x, cfg, kind, dist, start)
+        rest.append(c)
+    return x, {"groups": group_caches, "rest": rest}
+
+def grow_cache(caches, cfg, max_len: int):
+    """Pad prefill-emitted caches to decode capacity.
+
+    Full-attention KV caches grow (seq axis) to ``max_len``; local (window)
+    caches grow only up to ``min(window, max_len)`` — their rolling-slot
+    semantics require length == window; recurrent states are fixed-size.
+    Zero-padded slots are masked by decode's stored-position validity check.
+    Structure-aware: the layer kind comes from the cache pytree's position in
+    the pattern (mirrors init_stack_cache)."""
+    pat = cfg.layer_pattern
+
+    def target_len(kind):
+        mixer = kind[0]
+        if mixer == "global":
+            return max_len
+        if mixer == "local":
+            return min(cfg.window, max_len)
+        return None  # recurrent state: fixed
+
+    def grow_kv(node, tgt):
+        if tgt is None:
+            return node
+        k = node["k"]
+        pad = tgt - k.shape[-3]
+        if pad <= 0:
+            return node
+        widths = [(0, 0)] * k.ndim
+        widths[-3] = (0, pad)
+        return {kk: jnp.pad(vv, widths) for kk, vv in node.items()}
+
+    def is_kv(c):
+        return isinstance(c, dict) and {"k", "v"} <= set(c)
+
+    groups = [
+        grow_kv(c, target_len(pat[li])) if is_kv(c) else c
+        for li, c in enumerate(caches["groups"])
+    ]
+    rest = [
+        grow_kv(c, target_len(pat[r % cfg.group_size()])) if is_kv(c) else c
+        for r, c in enumerate(caches["rest"])
+    ]
+    return {"groups": groups, "rest": rest}

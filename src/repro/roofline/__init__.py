@@ -1,0 +1,18 @@
+"""Roofline analysis: HLO cost extraction, collective parsing, 3-term model."""
+
+from repro.roofline.analysis import (
+    HW,
+    collective_bytes,
+    roofline_terms,
+    dominant_term,
+)
+from repro.roofline.model_flops import param_counts, model_flops
+
+__all__ = [
+    "HW",
+    "collective_bytes",
+    "roofline_terms",
+    "dominant_term",
+    "param_counts",
+    "model_flops",
+]

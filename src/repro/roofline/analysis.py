@@ -1,0 +1,146 @@
+"""Roofline terms from compiled HLO (TPU v5e-class constants).
+
+    compute term    = HLO_FLOPs / (chips * PEAK_FLOPS)
+    memory term     = HLO_bytes / (chips * HBM_BW)
+    collective term = collective_bytes / (chips * ICI_BW)
+
+``cost_analysis()`` on this jax/xla reports **per-device** flops/bytes and
+counts scan bodies once (verified in tests/test_roofline_calibration.py);
+callers therefore use the scan-calibrated totals from roofline/calibrate.py
+and multiply per-device values by ``chips`` before feeding ``roofline_terms``
+(which divides back).  collective_bytes parses the *optimized* HLO
+(``compiled.as_text()``) and reports bytes **entering the fabric per
+device**: operand bytes per collective (result bytes scaled to operand size
+for all-gather; reduce-scatter is its dual).  A secondary ring-model wire
+estimate (2(P-1)/P factor for all-reduce) is also returned for reference.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HW", "collective_bytes", "roofline_terms", "dominant_term",
+           "parse_shape_bytes", "CollectiveStats"]
+
+# TPU v5e-class, per chip (assignment constants)
+HW = {
+    "peak_flops": 197e12,   # bf16 FLOP/s
+    "hbm_bw": 819e9,        # B/s
+    "ici_bw": 50e9,         # B/s per link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16, "u4": 1, "s4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:%?[\w.\-]+\s*=\s*)?"
+    r"(\([^)]*\)|\w+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.MULTILINE,
+)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def parse_shape_bytes(shape_str: str) -> int:
+    """'bf16[16,1184]{1,0}' or '(f32[2], bf16[4,4])' -> total bytes."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_op: Dict[str, int]          # op kind -> operand bytes (per device)
+    count: Dict[str, int]           # op kind -> #instructions
+    total: int                      # Σ operand bytes (per device)
+    wire_ring: float                # ring-model wire bytes (per device)
+
+    def as_dict(self):
+        return {
+            "per_op": self.per_op,
+            "count": self.count,
+            "total": self.total,
+            "wire_ring": self.wire_ring,
+        }
+
+
+def _group_size(line: str) -> Optional[int]:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return None
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum collective operand bytes per device from optimized HLO text."""
+    per_op: Dict[str, int] = {}
+    count: Dict[str, int] = {}
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue  # count the -start, not the -done
+        result_bytes = parse_shape_bytes(shape_str)
+        p = _group_size(line) or 1
+        if kind == "all-gather":
+            operand = result_bytes // max(p, 1)
+            wire += operand * (p - 1)
+        elif kind == "reduce-scatter":
+            operand = result_bytes * max(p, 1)
+            wire += result_bytes * (p - 1)
+        elif kind == "all-reduce":
+            operand = result_bytes
+            wire += 2.0 * operand * (p - 1) / max(p, 1)
+        elif kind == "all-to-all":
+            operand = result_bytes
+            wire += operand * (p - 1) / max(p, 1)
+        else:  # collective-permute
+            operand = result_bytes
+            wire += operand
+        per_op[kind] = per_op.get(kind, 0) + operand
+        count[kind] = count.get(kind, 0) + 1
+    return CollectiveStats(per_op, count, sum(per_op.values()), wire)
+
+
+def roofline_terms(
+    total_flops: float,
+    total_bytes: float,
+    total_coll_bytes: float,
+    chips: int,
+) -> Dict[str, float]:
+    """Three roofline terms in SECONDS (totals are whole-job; /chips)."""
+    return {
+        "compute_s": total_flops / (chips * HW["peak_flops"]),
+        "memory_s": total_bytes / (chips * HW["hbm_bw"]),
+        "collective_s": total_coll_bytes / (chips * HW["ici_bw"]),
+    }
+
+
+def dominant_term(terms: Dict[str, float]) -> str:
+    return max(
+        (("compute", terms["compute_s"]),
+         ("memory", terms["memory_s"]),
+         ("collective", terms["collective_s"])),
+        key=lambda kv: kv[1],
+    )[0]

@@ -1,0 +1,6 @@
+"""Serving substrate: batched decode engine + kNN-LM retrieval."""
+
+from repro.serving.engine import ServeEngine
+from repro.serving.knnlm import KNNLM
+
+__all__ = ["ServeEngine", "KNNLM"]

@@ -1,0 +1,126 @@
+"""Batched serving engine: continuous batching over fixed decode slots.
+
+A fixed number of decode *slots* (the batch dimension) advance together per
+jitted step, each at its OWN position (``pos: i32[B]``); an ``active``
+mask confines cache/state writes to live slots.  A host-side queue fills
+free slots (prompt replay through the decode path keeps cache layouts
+uniform), finished sequences (EOS or budget) free them — the standard
+continuous-batching control loop, single-controller edition.
+
+Sampling: greedy or temperature categorical per request.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import LanguageModel
+
+__all__ = ["ServeEngine", "Request"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # i32[prompt_len]
+    max_new_tokens: int = 32
+    temperature: float = 0.0     # 0 => greedy
+    out_tokens: Optional[List[int]] = None
+
+
+class ServeEngine:
+    def __init__(self, lm: LanguageModel, params, *, slots: int = 4,
+                 max_len: int = 512, eos_id: int = -1, seed: int = 0):
+        cfg = lm.cfg
+        if not cfg.supports_decode():
+            raise ValueError(f"{cfg.name} is encoder-only; cannot serve decode")
+        self.lm = lm
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.caches, _ = lm.init_cache(slots, max_len)
+        self.slot_req: List[Optional[Request]] = [None] * slots
+        self.slot_pos = np.zeros((slots,), np.int64)   # next position to write
+        self.key = jax.random.key(seed)
+        self._decode = jax.jit(lambda p, b, c: lm.decode_step(p, b, c))
+        self.queue: List[Request] = []
+        self.done: Dict[int, Request] = {}
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        req.out_tokens = []
+        self.queue.append(req)
+
+    def _run_tokens(self, tokens: np.ndarray, pos: np.ndarray, active: np.ndarray):
+        batch = {
+            "tokens": jnp.asarray(tokens.reshape(self.slots, 1), jnp.int32),
+            "pos": jnp.asarray(pos, jnp.int32),
+            "active": jnp.asarray(active),
+        }
+        logits, self.caches = self._decode(self.params, batch, self.caches)
+        return logits
+
+    def _admit(self):
+        """Fill free slots by replaying prompts through the decode path with
+        only the admitted slot's `active` bit set (other slots' caches and
+        recurrent states are untouched)."""
+        for s in range(self.slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slot_req[s] = req
+                active = np.zeros((self.slots,), bool)
+                active[s] = True
+                toks = np.zeros((self.slots,), np.int32)
+                pos = self.slot_pos.astype(np.int64).copy()
+                for t, tok in enumerate(req.prompt[:-1].tolist()):
+                    toks[s] = tok
+                    pos[s] = t
+                    self._run_tokens(toks, pos, active)
+                self.slot_pos[s] = max(len(req.prompt) - 1, 0)
+
+    # ------------------------------------------------------------------
+    def _sample(self, logits_row: np.ndarray, temp: float) -> int:
+        if temp <= 0:
+            return int(np.argmax(logits_row))
+        self.key, sub = jax.random.split(self.key)
+        return int(
+            jax.random.categorical(sub, jnp.asarray(logits_row) / temp)
+        )
+
+    def step(self) -> int:
+        """One decode step over all active slots; returns #active."""
+        self._admit()
+        active_idx = [s for s in range(self.slots) if self.slot_req[s] is not None]
+        if not active_idx:
+            return 0
+        active = np.zeros((self.slots,), bool)
+        toks = np.zeros((self.slots,), np.int32)
+        pos = self.slot_pos.astype(np.int64).copy()
+        for s in active_idx:
+            req = self.slot_req[s]
+            active[s] = True
+            toks[s] = req.out_tokens[-1] if req.out_tokens else int(req.prompt[-1])
+        logits = self._run_tokens(toks, pos, active)
+        lg = np.asarray(logits[:, 0, : self.lm.cfg.vocab_size], np.float32)
+        for s in active_idx:
+            req = self.slot_req[s]
+            nxt = self._sample(lg[s], req.temperature)
+            req.out_tokens.append(nxt)
+            self.slot_pos[s] += 1
+            if len(req.out_tokens) >= req.max_new_tokens or nxt == self.eos_id:
+                self.done[req.rid] = req
+                self.slot_req[s] = None
+                self.slot_pos[s] = 0
+        return len(active_idx)
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
+        for _ in range(max_steps):
+            if not self.step() and not self.queue:
+                break
+        return self.done

@@ -1,0 +1,14 @@
+"""Training substrate: optimizer, step builder, checkpointing, compression."""
+
+from repro.training.optimizer import adamw_init, adamw_update, lr_schedule
+from repro.training.step import build_train_step, make_sharded_train_step
+from repro.training.checkpoint import CheckpointManager
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "lr_schedule",
+    "build_train_step",
+    "make_sharded_train_step",
+    "CheckpointManager",
+]

@@ -1,0 +1,127 @@
+"""AdamW + global-norm clipping + LR schedules (native JAX, no deps).
+
+Optimizer state moments are fp32 and inherit each parameter's sharding
+(specs helper included), so ZeRO-style placement is a matter of passing the
+same PartitionSpecs to pjit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Hyper", "adamw_init", "adamw_update", "lr_schedule", "opt_state_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Hyper:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    grad_accum: int = 1
+    unroll_accum: bool = False
+
+
+def lr_schedule(step: jnp.ndarray, h: Hyper) -> jnp.ndarray:
+    """Linear warmup -> cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(1.0, h.warmup_steps)
+    prog = jnp.clip(
+        (step - h.warmup_steps) / jnp.maximum(1.0, h.total_steps - h.warmup_steps),
+        0.0,
+        1.0,
+    )
+    cos = h.min_lr_frac + (1 - h.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return h.lr * jnp.where(step < h.warmup_steps, warm, cos)
+
+
+def adamw_init(params, *, master_fp32: bool = False) -> Dict[str, Any]:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    state = {
+        "m": zeros,
+        "v": jax.tree.map(jnp.copy, zeros),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    if master_fp32:
+        # mixed precision: params are stored/gathered in bf16; the fp32
+        # master copy lives (ZeRO-sharded) in optimizer state
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params
+        )
+    return state
+
+
+def opt_state_specs(param_specs, *, master_fp32: bool = False) -> Dict[str, Any]:
+    from jax.sharding import PartitionSpec as P
+
+    def cp(tree):
+        return jax.tree.map(lambda s: s, tree, is_leaf=lambda x: isinstance(x, P))
+
+    out = {"m": cp(param_specs), "v": cp(param_specs), "count": P()}
+    if master_fp32:
+        out["master"] = cp(param_specs)
+    return out
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    grads, state, params, step: jnp.ndarray, h: Hyper
+) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    """One AdamW step.  Returns (new_params, new_state, metrics).
+
+    If the state carries a "master" tree (mixed precision), the update is
+    applied to the fp32 master and the (bf16) params are re-derived from it.
+    """
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, h.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_schedule(step, h)
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - h.b1 ** c
+    bc2 = 1.0 - h.b2 ** c
+    has_master = "master" in state
+
+    def upd(p, g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m = h.b1 * m + (1 - h.b1) * g
+        v = h.b2 * v + (1 - h.b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        w32 = w.astype(jnp.float32)
+        step_ = mhat / (jnp.sqrt(vhat) + h.eps) + h.weight_decay * w32
+        new_w = w32 - lr * step_
+        return new_w.astype(p.dtype), m, v, new_w
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_w = jax.tree.leaves(state["master"]) if has_master else flat_p
+    new_p, new_m, new_v, new_w = [], [], [], []
+    for p, g, m, v, w in zip(flat_p, flat_g, flat_m, flat_v, flat_w):
+        a, b_, c_, d_ = upd(p, g, m, v, w)
+        new_p.append(a)
+        new_m.append(b_)
+        new_v.append(c_)
+        new_w.append(d_)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    new_state = {"m": jax.tree.unflatten(tdef, new_m),
+                 "v": jax.tree.unflatten(tdef, new_v),
+                 "count": count}
+    if has_master:
+        new_state["master"] = jax.tree.unflatten(tdef, new_w)
+    return jax.tree.unflatten(tdef, new_p), new_state, metrics

@@ -1,0 +1,24 @@
+"""Shared test config.
+
+NOTE: no XLA_FLAGS / device-count manipulation here — smoke tests and
+benches must see the real (1-CPU) device count.  Multi-device tests spawn
+subprocesses that set ``--xla_force_host_platform_device_count`` themselves.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, settings
+
+# JAX tracing/compilation makes per-example deadlines meaningless.
+settings.register_profile(
+    "repro",
+    deadline=None,
+    max_examples=20,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("repro")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

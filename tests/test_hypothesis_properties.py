@@ -1,0 +1,72 @@
+"""Property-based tests for the system's geometric/algorithmic invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BufferKDTree, knn_brute
+
+
+def _pts(n, d, seed):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+@given(seed=st.integers(0, 1000), d=st.integers(2, 6))
+@settings(max_examples=8)
+def test_distances_sorted_ascending(seed, d):
+    pts, q = _pts(500, d, seed), _pts(30, d, seed + 1)
+    dd, _ = BufferKDTree(pts, height=3, tile_q=32).query(q, k=6)
+    assert (np.diff(dd, axis=1) >= -1e-6).all()
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=8)
+def test_monotone_under_reference_growth(seed):
+    """Adding reference points can only shrink (or keep) the k-th distance."""
+    pts = _pts(400, 5, seed)
+    q = _pts(25, 5, seed + 1)
+    d1, _ = BufferKDTree(pts[:200], height=2, tile_q=32).query(q, k=5)
+    d2, _ = BufferKDTree(pts, height=2, tile_q=32).query(q, k=5)
+    assert (d2 <= d1 + 1e-5).all()
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=8)
+def test_query_permutation_invariance(seed):
+    pts = _pts(300, 4, seed)
+    q = _pts(40, 4, seed + 1)
+    idx = BufferKDTree(pts, height=2, tile_q=32)
+    d1, i1 = idx.query(q, k=4)
+    perm = np.random.default_rng(seed).permutation(40)
+    d2, i2 = idx.query(q[perm], k=4)
+    np.testing.assert_allclose(d1[perm], d2, rtol=1e-5, atol=1e-6)
+    assert (i1[perm] == i2).all()
+
+
+@given(seed=st.integers(0, 1000), shift=st.floats(-5, 5))
+@settings(max_examples=8)
+def test_translation_invariance(seed, shift):
+    """Shifting both sets by the same vector preserves distances."""
+    pts = _pts(300, 4, seed)
+    q = _pts(20, 4, seed + 1)
+    d1, i1 = BufferKDTree(pts, height=2, tile_q=32).query(q, k=3)
+    d2, i2 = BufferKDTree(pts + shift, height=2, tile_q=32).query(q + shift, k=3)
+    np.testing.assert_allclose(d1, d2, rtol=1e-3, atol=1e-3)
+
+
+@given(seed=st.integers(0, 1000), k=st.integers(1, 10))
+@settings(max_examples=8)
+def test_self_query_zero_distance(seed, k):
+    pts = _pts(256, 5, seed)
+    dd, di = BufferKDTree(pts, height=2, tile_q=32).query(pts[:30], k=k)
+    assert np.allclose(dd[:, 0], 0.0, atol=1e-5)
+
+
+@given(seed=st.integers(0, 500), height=st.integers(1, 5))
+@settings(max_examples=8)
+def test_height_invariance(seed, height):
+    """Results must not depend on the tree height (pure perf knob)."""
+    pts = _pts(512, 5, seed)
+    q = _pts(20, 5, seed + 1)
+    d_ref, _ = knn_brute(q, pts, 5)
+    dd, _ = BufferKDTree(pts, height=height, tile_q=32).query(q, k=5)
+    np.testing.assert_allclose(dd, d_ref, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,130 @@
+"""Pallas leaf-scan kernel vs pure-jnp oracle: shape/dtype sweeps + fuzz.
+
+The kernel runs in interpret mode on CPU (the TPU lowering path is the
+target; interpret executes the same kernel body).  Selection is a
+discrete-boundary problem, so index agreement is checked permutation-aware
+(distances must match exactly; ties may reorder).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.knn_scan import leaf_scan_pallas
+from repro.kernels.ops import leaf_scan
+from repro.kernels.ref import PAD_COORD, knn_brute_ref, leaf_scan_ref
+
+
+def _inputs(w, tq, lp, d, d_pad, seed=0, pad_rows=0):
+    rng = np.random.default_rng(seed)
+    q = np.zeros((w, tq, d_pad), np.float32)
+    q[..., :d] = rng.normal(size=(w, tq, d))
+    x = np.zeros((w, lp, d_pad), np.float32)
+    x[..., :d] = rng.normal(size=(w, lp, d))
+    if pad_rows:
+        x[:, lp - pad_rows :, :d] = PAD_COORD
+    return jnp.asarray(q), jnp.asarray(x)
+
+
+def _check(q, x, k, tq=None, tx=None):
+    rd, ri = leaf_scan_ref(q, x, k=k)
+    pd_, pi = leaf_scan_pallas(q, x, k=k, interpret=True,
+                               **({"tq": tq} if tq else {}),
+                               **({"tx": tx} if tx else {}))
+    np.testing.assert_allclose(np.asarray(rd), np.asarray(pd_),
+                               rtol=1e-5, atol=1e-5)
+    # permutation-aware index check: same distance at every rank
+    d_of_pi = np.take_along_axis(
+        np.asarray(_all_dists(q, x)), np.asarray(pi), axis=-1
+    )
+    np.testing.assert_allclose(d_of_pi, np.asarray(rd), rtol=1e-5, atol=1e-5)
+    # ascending order
+    assert (np.diff(np.asarray(pd_), axis=-1) >= -1e-6).all()
+
+
+def _all_dists(q, x):
+    qn = jnp.sum(q * q, axis=-1)[..., :, None]
+    xn = jnp.sum(x * x, axis=-1)[..., None, :]
+    cross = jnp.einsum("wqd,wld->wql", q, x)
+    return jnp.maximum(qn - 2 * cross + xn, 0.0)
+
+
+SWEEP = [
+    # (W, TQ, L_pad, d, d_pad, k, tx)
+    (1, 8, 64, 3, 8, 1, 64),
+    (2, 64, 128, 5, 8, 5, 64),
+    (4, 128, 512, 10, 16, 10, 256),
+    (3, 32, 256, 15, 16, 7, 128),
+    (1, 16, 1024, 7, 8, 10, 512),
+    (5, 64, 96, 2, 8, 3, 32),
+]
+
+
+@pytest.mark.parametrize("w,tq,lp,d,d_pad,k,tx", SWEEP)
+def test_kernel_shape_sweep(w, tq, lp, d, d_pad, k, tx):
+    q, x = _inputs(w, tq, lp, d, d_pad, seed=w * 7 + k)
+    _check(q, x, k, tq=tq, tx=tx)
+
+
+def test_kernel_with_padded_rows(self=None):
+    q, x = _inputs(2, 32, 128, 6, 8, seed=9, pad_rows=37)
+    _check(q, x, 8, tq=32, tx=64)
+
+
+def test_kernel_padded_rows_never_win():
+    q, x = _inputs(1, 16, 64, 4, 8, seed=11, pad_rows=60)
+    # only 4 real rows; k=4 must select exactly those
+    pd_, pi = leaf_scan_pallas(q, x, k=4, tq=16, tx=32, interpret=True)
+    assert (np.asarray(pi) < 4).all()
+    assert (np.asarray(pd_) < 1e29).all()
+
+
+def test_kernel_multi_tile_accumulation():
+    """Running top-k must carry across slab tiles: plant the true NNs in the
+    LAST tile."""
+    rng = np.random.default_rng(13)
+    q = jnp.asarray(rng.normal(size=(1, 8, 8)).astype(np.float32))
+    x = np.full((1, 256, 8), 50.0, np.float32)
+    x[0, -8:] = np.asarray(q[0])  # exact matches at the end
+    pd_, pi = leaf_scan_pallas(q, jnp.asarray(x), k=1, tq=8, tx=64,
+                               interpret=True)
+    np.testing.assert_allclose(np.asarray(pd_)[..., 0], 0.0, atol=1e-4)
+    assert (np.asarray(pi)[0, :, 0] == np.arange(248, 256)).all()
+
+
+def test_ops_dispatch_matches():
+    q, x = _inputs(2, 32, 128, 5, 8, seed=17)
+    rd, ri = leaf_scan(q, x, k=5, backend="ref")
+    pd_, pi = leaf_scan(q, x, k=5, backend="pallas_interpret", tq=32, tx=64)
+    np.testing.assert_allclose(np.asarray(rd), np.asarray(pd_), rtol=1e-5)
+
+
+def test_brute_oracle_self_consistency():
+    rng = np.random.default_rng(19)
+    q = jnp.asarray(rng.normal(size=(10, 4)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(50, 4)).astype(np.float32))
+    d2, idx = knn_brute_ref(q, x, k=3)
+    naive = np.sum((np.asarray(q)[:, None] - np.asarray(x)[None]) ** 2, -1)
+    np.testing.assert_allclose(np.sort(naive, 1)[:, :3], np.asarray(d2),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(
+    w=st.integers(1, 3),
+    tq=st.sampled_from([8, 16, 32]),
+    lp_mult=st.integers(1, 4),
+    d=st.integers(1, 12),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 500),
+)
+@settings(max_examples=10)
+def test_kernel_fuzz(w, tq, lp_mult, d, k, seed):
+    tx = 32
+    lp = tx * lp_mult
+    d_pad = ((d + 7) // 8) * 8
+    if k > lp:
+        return
+    q, x = _inputs(w, tq, lp, d, d_pad, seed=seed)
+    _check(q, x, k, tq=tq, tx=tx)

@@ -1,0 +1,137 @@
+"""Per-architecture smoke tests (assignment requirement): reduced config of
+the same family, one forward/train step on CPU, asserting output shapes and
+no NaNs; decode step where the family supports it."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_config, registry
+from repro.configs.shapes import SHAPES, cell_supported
+from repro.models.layers import padded_vocab
+from repro.models.model import LanguageModel
+from repro.training.optimizer import Hyper, adamw_init
+from repro.training.step import build_train_step
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    batch = {}
+    if cfg.frontend == "vision":
+        st_ = S - cfg.frontend_tokens
+        batch["tokens"] = jax.random.randint(key, (B, st_), 0, cfg.vocab_size)
+        batch["frontend_feats"] = jnp.ones(
+            (B, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+        batch["labels"] = jax.random.randint(key, (B, st_), 0, cfg.vocab_size)
+    elif cfg.frontend == "audio":
+        batch["frontend_feats"] = jnp.ones((B, S, cfg.frontend_dim), jnp.bfloat16)
+        batch["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    else:
+        batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+        batch["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestArchSmoke:
+    def test_forward_shapes_and_finite(self, arch):
+        cfg = get_config(arch, smoke=True)
+        lm = LanguageModel(cfg)
+        params, specs = lm.init(jax.random.key(0))
+        batch = _batch(cfg, jax.random.key(1))
+        logits, aux = jax.jit(lambda p, b: lm.forward(p, b))(params, batch)
+        s_total = S if cfg.frontend != "vision" else S
+        assert logits.shape == (B, s_total, padded_vocab(cfg))
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_train_step_runs(self, arch):
+        cfg = get_config(arch, smoke=True)
+        lm = LanguageModel(cfg)
+        params, _ = lm.init(jax.random.key(0))
+        opt = adamw_init(params)
+        step = jax.jit(build_train_step(lm, Hyper(lr=1e-3, warmup_steps=0,
+                                                  total_steps=10)))
+        batch = _batch(cfg, jax.random.key(1))
+        p2, o2, m = step(params, opt, batch, jnp.int32(1))
+        assert bool(jnp.isfinite(m["loss"]))
+        assert bool(jnp.isfinite(m["grad_norm"])) and float(m["grad_norm"]) > 0
+        # params actually moved
+        moved = any(
+            not np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+            for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2))
+        )
+        assert moved
+
+    def test_decode_if_supported(self, arch):
+        cfg = get_config(arch, smoke=True)
+        lm = LanguageModel(cfg)
+        if not cfg.supports_decode():
+            with pytest.raises(ValueError):
+                lm.decode_step(None, None, None)
+            return
+        params, _ = lm.init(jax.random.key(0))
+        caches, _ = lm.init_cache(B, 64)
+        logits, caches = jax.jit(lambda p, b, c: lm.decode_step(p, b, c))(
+            params,
+            {"tokens": jnp.zeros((B, 1), jnp.int32), "pos": jnp.int32(3)},
+            caches,
+        )
+        assert logits.shape == (B, 1, padded_vocab(cfg))
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_registry_complete():
+    reg = registry()
+    assert set(reg) == set(ARCH_IDS)
+    for aid, cfg in reg.items():
+        assert cfg.n_layers > 0 and cfg.d_model > 0
+        # layer pattern expands to exactly n_layers
+        assert len(cfg.layer_kinds()) == cfg.n_layers
+
+
+def test_assigned_dims_match_spec():
+    """Exact dims from the assignment table."""
+    reg = registry()
+    expect = {
+        "qwen2_7b": (28, 3584, 28, 4, 18944, 152064),
+        "stablelm_1_6b": (24, 2048, 32, 32, 5632, 100352),
+        "qwen15_0_5b": (24, 1024, 16, 16, 2816, 151936),
+        "gemma2_27b": (46, 4608, 32, 16, 36864, 256000),
+        "llava_next_mistral_7b": (32, 4096, 32, 8, 14336, 32000),
+        "olmoe_1b_7b": (16, 2048, 16, 16, 1024, 50304),
+        "moonshot_v1_16b_a3b": (48, 2048, 16, 16, 1408, 163840),
+        "recurrentgemma_9b": (38, 4096, 16, 1, 12288, 256000),
+        "mamba2_370m": (48, 1024, None, None, 0, 50280),
+        "hubert_xlarge": (48, 1280, 16, 16, 5120, 504),
+    }
+    for aid, (nl, dm, nh, kv, ff, vs) in expect.items():
+        cfg = reg[aid]
+        assert cfg.n_layers == nl and cfg.d_model == dm
+        assert cfg.d_ff == ff and cfg.vocab_size == vs
+        if nh is not None:
+            assert cfg.n_heads == nh and cfg.n_kv_heads == kv
+    assert reg["olmoe_1b_7b"].n_experts == 64 and reg["olmoe_1b_7b"].moe_top_k == 8
+    assert reg["moonshot_v1_16b_a3b"].n_experts == 64
+    assert reg["moonshot_v1_16b_a3b"].moe_top_k == 6
+    assert reg["mamba2_370m"].ssm_state == 128
+    assert reg["hubert_xlarge"].encoder_only
+
+
+def test_cell_skip_rules():
+    reg = registry()
+    ok, _ = cell_supported(reg["qwen2_7b"], SHAPES["long_500k"])
+    assert not ok
+    ok, _ = cell_supported(reg["mamba2_370m"], SHAPES["long_500k"])
+    assert ok
+    ok, _ = cell_supported(reg["recurrentgemma_9b"], SHAPES["long_500k"])
+    assert ok
+    ok, _ = cell_supported(reg["hubert_xlarge"], SHAPES["decode_32k"])
+    assert not ok
+    # 40-cell accounting: 31 runnable + 9 skips
+    runnable = sum(
+        cell_supported(cfg, sh)[0]
+        for cfg in reg.values() for sh in SHAPES.values()
+    )
+    assert runnable == 31

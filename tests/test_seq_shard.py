@@ -1,0 +1,50 @@
+"""Sequence-parallel residual stream: numerical equivalence (subprocess,
+4 host devices) — the §Perf B1 optimization must not change the function."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def test_seq_shard_equivalence():
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+        from repro.configs.base import get_config
+        from repro.models.model import LanguageModel
+        from repro.models.transformer import Dist
+
+        mesh = jax.make_mesh((2, 2), ("data", "model"),
+                             axis_types=(AxisType.Auto,)*2)
+        cfg = get_config("gemma2_27b", smoke=True)
+        lm = LanguageModel(cfg, tp=2)
+        params, _ = lm.init(jax.random.key(0))
+        toks = jax.random.randint(jax.random.key(1), (4, 32), 0, cfg.vocab_size)
+
+        def logits_with(seq_shard):
+            c = cfg.replace(seq_shard=seq_shard)
+            l2 = LanguageModel(c, tp=2)
+            dist = Dist(mesh=mesh, data_axes=("data",), model_axis="model", tp=2)
+            with mesh:
+                out, _ = jax.jit(lambda p, b: l2.forward(p, b, dist))(
+                    params, {"tokens": toks})
+            return np.asarray(out, np.float32)
+
+        a = logits_with(False)
+        b = logits_with(True)
+        err = np.max(np.abs(a - b)) / (np.max(np.abs(a)) + 1e-9)
+        assert err < 2e-2, err
+        print("SEQ_SHARD_OK", err)
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, env=env, timeout=1800)
+    assert out.returncode == 0, f"subprocess failed:\n{out.stderr[-3000:]}"
+    assert "SEQ_SHARD_OK" in out.stdout

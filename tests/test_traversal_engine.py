@@ -1,0 +1,93 @@
+"""Traversal state machine + LazySearch engine correctness vs brute force."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BufferKDTree, build_top_tree, knn_brute, knn_host_kdtree
+from repro.core.traversal import reference_knn_via_traversal
+
+
+def _data(n, m, d, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(n, d)).astype(np.float32),
+            rng.normal(size=(m, d)).astype(np.float32))
+
+
+class TestReferenceTraversal:
+    def test_exact_vs_brute(self):
+        pts, q = _data(2000, 64, 6, seed=1)
+        t = build_top_tree(pts, 4)
+        dref, _ = reference_knn_via_traversal(q, t, 5)
+        db, _ = knn_brute(q, pts, 5)
+        np.testing.assert_allclose(dref, db, rtol=1e-4, atol=1e-5)
+
+
+class TestLazySearchEngine:
+    @pytest.mark.parametrize("n_chunks", [1, 2, 5])
+    def test_exact_vs_brute(self, n_chunks):
+        pts, q = _data(6000, 500, 8, seed=2)
+        db, bi = knn_brute(q, pts, 10)
+        idx = BufferKDTree(pts, height=5, n_chunks=n_chunks,
+                           buffer_size=128, tile_q=64)
+        dd, di = idx.query(q, k=10)
+        np.testing.assert_allclose(dd, db, rtol=1e-4, atol=1e-4)
+        assert (di == bi).mean() > 0.999  # ties may permute
+
+    def test_k_edge_cases(self):
+        pts, q = _data(300, 40, 4, seed=3)
+        idx = BufferKDTree(pts, height=2, tile_q=32)
+        for k in (1, 7):
+            dd, di = idx.query(q, k=k)
+            db, _ = knn_brute(q, pts, k)
+            np.testing.assert_allclose(dd, db, rtol=1e-4, atol=1e-4)
+
+    def test_duplicate_points(self):
+        rng = np.random.default_rng(4)
+        base = rng.normal(size=(50, 3)).astype(np.float32)
+        pts = np.concatenate([base] * 4)  # every point 4x
+        q = base[:20] + 1e-3
+        idx = BufferKDTree(pts, height=3, tile_q=32)
+        dd, di = idx.query(q, k=4)
+        db, _ = knn_brute(q, pts, 4)
+        np.testing.assert_allclose(dd, db, rtol=1e-4, atol=1e-4)
+
+    def test_query_points_in_reference_set(self):
+        pts, _ = _data(1000, 1, 5, seed=5)
+        idx = BufferKDTree(pts, height=3, tile_q=32)
+        dd, di = idx.query(pts[:64], k=1)
+        assert np.allclose(dd[:, 0], 0.0, atol=1e-5)
+        assert (di[:, 0] == np.arange(64)).all()
+
+    def test_stats_show_pruning(self):
+        pts, q = _data(20000, 256, 8, seed=6)
+        idx = BufferKDTree(pts, height=6, tile_q=64)
+        idx.query(q, k=5)
+        # brute would be m*n; the tree should scan far less
+        assert idx.stats.points_scanned < 0.6 * 256 * 20000
+
+    def test_hostkdtree_baseline(self):
+        pts, q = _data(3000, 128, 6, seed=7)
+        t = build_top_tree(pts, 4)
+        dd, di = knn_host_kdtree(q, t, 5)
+        db, bi = knn_brute(q, pts, 5)
+        np.testing.assert_allclose(dd, db, rtol=1e-4, atol=1e-4)
+
+
+@given(
+    n=st.integers(64, 600),
+    m=st.integers(1, 60),
+    d=st.integers(2, 7),
+    k=st.integers(1, 8),
+    h=st.integers(1, 4),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=12)
+def test_lazysearch_matches_brute_fuzz(n, m, d, k, h, seed):
+    if (1 << h) > n or k > n:
+        return
+    pts, q = _data(n, m, d, seed)
+    idx = BufferKDTree(pts, height=h, tile_q=32, buffer_size=64)
+    dd, _ = idx.query(q, k=k)
+    db, _ = knn_brute(q, pts, k)
+    np.testing.assert_allclose(dd, db, rtol=1e-3, atol=1e-4)
