@@ -1,0 +1,85 @@
+"""End-to-end ``BufferKDTree.query`` engine benchmark (the perf trajectory).
+
+Canonical CPU smoke shape: 20k x 8 reference points, 2k queries, height 7,
+n_chunks=2, k=10 — the configuration the seed repo measured at ~7.8 s on the
+host-loop engine (129 host round trips + per-W recompiles).  Emits
+``BENCH_engine.json`` at the repo root:
+
+  chunked_s / host_s       median wall seconds per engine tier
+  speedup_vs_seed          7.8 s seed reference / chunked_s
+  round_compiles_*         fused-round jit cache entries before/after the
+                           timed queries — equality is the recompile-free
+                           guarantee (work-unit counts are loop bounds, not
+                           shapes)
+
+Run via ``python -m benchmarks.run --only engine`` (host tier included at
+scale >= 1.0; it is ~10x slower than the chunked tier).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks import common
+
+SEED_REFERENCE_S = 7.8   # host-loop engine, same shape, seed measurement
+N, D, M, HEIGHT, N_CHUNKS, K = 20_000, 8, 2_000, 7, 2, 10
+
+
+def run(scale: float = 1.0) -> None:
+    from repro.core import BufferKDTree
+    from repro.core.chunked_jit import chunk_round_cache_size
+
+    rng = np.random.default_rng(0)
+    pts = rng.normal(size=(N, D)).astype(np.float32)
+    q = rng.normal(size=(M, D)).astype(np.float32)
+
+    idx = BufferKDTree(pts, height=HEIGHT, n_chunks=N_CHUNKS)
+    idx.query(q, k=K)                         # warm: compiles the round
+    compiles_warm = chunk_round_cache_size()
+    t_chunked = common.timeit(lambda: idx.query(q, k=K), repeat=3, warmup=0)
+    # vary the query content: flush/work-unit counts change, shapes may not
+    q2 = rng.normal(size=(M, D)).astype(np.float32)
+    idx.query(q2, k=K)
+    compiles_after = chunk_round_cache_size()
+    common.row("engine/chunked_query", t_chunked,
+               f"n={N};m={M};h={HEIGHT};chunks={N_CHUNKS};k={K}")
+
+    result = {
+        "shape": {"n": N, "d": D, "m": M, "height": HEIGHT,
+                  "n_chunks": N_CHUNKS, "k": K},
+        "seed_reference_s": SEED_REFERENCE_S,
+        "chunked_s": t_chunked,
+        "speedup_vs_seed": SEED_REFERENCE_S / t_chunked,
+        "round_compiles_after_warmup": compiles_warm,
+        "round_compiles_after_varied_flushes": compiles_after,
+        "recompile_free": compiles_warm == compiles_after,
+        "stats": {
+            "rounds": idx.stats.iterations,
+            "chunk_rounds": idx.stats.chunk_rounds,
+            "units_scanned": idx.stats.units_scanned,
+        },
+    }
+    assert result["recompile_free"], (
+        f"fused round recompiled across flushes: {compiles_warm} -> "
+        f"{compiles_after}"
+    )
+
+    if scale >= 1.0:
+        host = BufferKDTree(pts, height=HEIGHT, n_chunks=N_CHUNKS,
+                            engine="host")
+        t_host = common.timeit(lambda: host.query(q, k=K), repeat=1, warmup=1)
+        common.row("engine/host_query", t_host, "legacy host loop")
+        result["host_s"] = t_host
+        result["host_plan_shapes"] = host.stats.plan_shapes
+
+    out = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json")
+    with open(os.path.abspath(out), "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(f"# BENCH_engine.json: speedup_vs_seed="
+          f"{result['speedup_vs_seed']:.1f}x "
+          f"recompile_free={result['recompile_free']}", flush=True)

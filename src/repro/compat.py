@@ -1,0 +1,69 @@
+"""JAX version compatibility shims.
+
+The repo targets the modern sharding API (``jax.shard_map``,
+``jax.sharding.AxisType``), but the pinned container runs jax 0.4.x where
+those names live elsewhere (or do not exist).  Every module that builds a
+mesh or wraps a shard_map body goes through these two helpers so the same
+code runs on both lines.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+
+__all__ = ["make_mesh", "shard_map", "axis_size", "cost_analysis"]
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict (0.4.x wraps it in a
+    one-element list per device)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+def axis_size(axis: str) -> int:
+    """``jax.lax.axis_size`` (new) or the psum-of-one idiom (0.4.x), both of
+    which produce a static size usable in Python control flow."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    return jax.lax.psum(1, axis)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> "jax.sharding.Mesh":
+    """``jax.make_mesh`` with Auto axis types when the API supports them."""
+    try:
+        from jax.sharding import AxisType
+
+        return jax.make_mesh(
+            tuple(shape), tuple(axes), axis_types=(AxisType.Auto,) * len(axes)
+        )
+    except ImportError:
+        return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def shard_map(
+    f: Callable[..., Any],
+    *,
+    mesh: "jax.sharding.Mesh",
+    in_specs: Any,
+    out_specs: Any,
+    check: bool = False,
+) -> Callable[..., Any]:
+    """``jax.shard_map`` (new) or ``jax.experimental.shard_map`` (0.4.x).
+
+    ``check`` maps to ``check_vma`` on the new API and ``check_rep`` on the
+    old one (both default False here: the kNN bodies do manual collectives).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check
+    )

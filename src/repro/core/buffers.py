@@ -18,7 +18,8 @@ leaf-scan kernel consumes directly.  Plan construction is vectorized numpy
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -73,29 +74,51 @@ class QueryQueues:
     ``fetch(M)`` drains reinsert first, then input (Alg. 1 line 4 fetches
     from both; reinsert-first keeps in-flight traversals moving so their
     buffers refill fastest — matches the reference implementation).
+
+    Queues are deques of int32 ARRAY SEGMENTS, drained by numpy slicing:
+    both ``push_reinsert`` and ``fetch`` are O(segments), never O(elements)
+    Python-loop work — the old per-int list shuffling was a measurable
+    host-side cost at large m (every query id passed through it once per
+    leaf visit).
     """
 
     def __init__(self, m: int):
-        self._input = list(range(m))[::-1]  # pop() from the end == FIFO order
-        self._reinsert: List[int] = []
+        self._input: Deque[np.ndarray] = deque()
+        if m:
+            self._input.append(np.arange(m, dtype=np.int32))
+        self._reinsert: Deque[np.ndarray] = deque()
+        self._n = int(m)
 
     def push_reinsert(self, idx: np.ndarray) -> None:
-        self._reinsert.extend(int(i) for i in idx[::-1])
+        idx = np.asarray(idx, dtype=np.int32)
+        if idx.size:
+            self._reinsert.append(idx)
+            self._n += int(idx.size)
 
     def fetch(self, m_fetch: int) -> np.ndarray:
-        out: List[int] = []
-        while len(out) < m_fetch and self._reinsert:
-            out.append(self._reinsert.pop())
-        while len(out) < m_fetch and self._input:
-            out.append(self._input.pop())
-        return np.asarray(out, dtype=np.int32)
+        out: List[np.ndarray] = []
+        need = int(m_fetch)
+        for dq in (self._reinsert, self._input):
+            while need and dq:
+                seg = dq[0]
+                if seg.size <= need:
+                    out.append(seg)
+                    dq.popleft()
+                    need -= seg.size
+                else:
+                    out.append(seg[:need])
+                    dq[0] = seg[need:]
+                    need = 0
+        got = np.concatenate(out) if out else np.zeros((0,), np.int32)
+        self._n -= int(got.size)
+        return got
 
     def __len__(self) -> int:
-        return len(self._input) + len(self._reinsert)
+        return self._n
 
     @property
     def empty(self) -> bool:
-        return not (self._input or self._reinsert)
+        return self._n == 0
 
 
 class LeafBuffers:

@@ -69,6 +69,8 @@ class ChunkedLeafStore:
         n_chunks: int = 1,
         *,
         device: Optional[jax.Device] = None,
+        uniform: bool = False,
+        pad_coord: float = 1.0e18,
     ):
         if leaf_slabs.ndim != 3:
             raise ValueError(f"leaf_slabs must be [n_leaves, leaf_pad, d], got {leaf_slabs.shape}")
@@ -79,12 +81,36 @@ class ChunkedLeafStore:
         if not 1 <= n_chunks <= self.n_leaves:
             raise ValueError(f"n_chunks={n_chunks} out of range [1, {self.n_leaves}]")
         self.n_chunks = n_chunks
-        # Leaf-aligned chunk boundaries, ceil-spread like the paper's C_j.
-        bounds = np.ceil(np.arange(n_chunks + 1) * self.n_leaves / n_chunks).astype(np.int64)
-        self.chunk_lo = bounds[:-1]
-        self.chunk_hi = bounds[1:]
+        self.uniform = bool(uniform)
+        if self.uniform:
+            # Equal-sized chunks of C = ceil(L / n_chunks) leaves; the host
+            # array is padded once with PAD_COORD leaves so every streamed
+            # slab has the SAME [C, leaf_pad, d] shape -> one jit compile
+            # serves every chunk (the chunk-resident engine relies on this).
+            # Pad leaves sit beyond the real leaf range and can never be a
+            # traversal target; their coordinates lose every distance contest.
+            c = -(-self.n_leaves // n_chunks)
+            total = c * n_chunks
+            if total != self.n_leaves:
+                pad = np.full(
+                    (total - self.n_leaves,) + self.host.shape[1:],
+                    np.float32(pad_coord), dtype=self.host.dtype,
+                )
+                self.host = np.concatenate([self.host, pad], axis=0)
+            self.chunk_leaves = c
+            lo = np.arange(n_chunks, dtype=np.int64) * c
+            self.chunk_lo = lo
+            # ownership bounds stay clipped to REAL leaves (chunk_of_leaf)
+            self.chunk_hi = np.minimum(lo + c, self.n_leaves)
+        else:
+            # Leaf-aligned chunk boundaries, ceil-spread like the paper's C_j.
+            bounds = np.ceil(np.arange(n_chunks + 1) * self.n_leaves / n_chunks).astype(np.int64)
+            self.chunk_lo = bounds[:-1]
+            self.chunk_hi = bounds[1:]
+            self.chunk_leaves = int((self.chunk_hi - self.chunk_lo).max())
         self._slots = (_Slot(), _Slot())
         self._resident: Optional[jax.Array] = None
+        self.copies = 0   # host->device chunk transfers issued (lifetime)
         if n_chunks == 1:
             self._resident = jax.device_put(self.host, self.device)
 
@@ -94,20 +120,30 @@ class ChunkedLeafStore:
         return (np.searchsorted(self.chunk_hi, np.asarray(leaf), side="right")).astype(np.int32)
 
     def chunk_leaf_range(self, j: int) -> Tuple[int, int]:
+        """Real leaves owned by chunk j (traversal targets)."""
         return int(self.chunk_lo[j]), int(self.chunk_hi[j])
+
+    def _slab_range(self, j: int) -> Tuple[int, int]:
+        """Host-array rows backing chunk j's device slab (uniform mode keeps
+        every slab ``chunk_leaves`` rows, PAD_COORD rows included)."""
+        lo = int(self.chunk_lo[j])
+        if self.uniform:
+            return lo, lo + self.chunk_leaves
+        return lo, int(self.chunk_hi[j])
 
     @property
     def chunk_bytes(self) -> int:
-        lo, hi = self.chunk_leaf_range(0)
+        lo, hi = self._slab_range(0)
         return int((hi - lo) * self.host.shape[1] * self.host.shape[2] * self.host.itemsize)
 
     # -- streaming ----------------------------------------------------------
     def _copy_chunk(self, j: int, slot: _Slot) -> None:
         """Phase (2): host->device transfer of chunk j into a free slot.
         ``jax.device_put`` dispatches asynchronously; we do not block here."""
-        lo, hi = self.chunk_leaf_range(j)
+        lo, hi = self._slab_range(j)
         slot.buf = jax.device_put(self.host[lo:hi], self.device)
         slot.chunk_id = j
+        self.copies += 1
 
     def stream(self, chunk_ids: Sequence[int]) -> Iterator[Tuple[int, jax.Array, int]]:
         """Yield ``(chunk_id, device_slab_buffer, leaf_lo)`` per requested

@@ -1,0 +1,281 @@
+"""Chunk-resident bulk-synchronous LazySearch (the out-of-core fast path).
+
+The legacy host engine (``lazysearch.BufferKDTree.query`` with
+``engine="host"``) orchestrates the paper's Algorithm 1 queue-by-queue: per
+iteration it gathers queue slices, calls three small jitted phases, and syncs
+``np.asarray`` results back — ~130 host round trips and hundreds of tiny
+chunk dispatches for a 2k-query CPU smoke shape.  ``jitsearch.lazy_knn_jit``
+proved the cure on the device-resident path: fuse advance -> plan -> scan ->
+merge -> exit into one jitted fixed point.  This module applies the same
+bulk-synchronous re-derivation to the paper's §3 *out-of-core* setting,
+where only two chunk-sized slabs of the leaf structure fit on the device:
+
+  host                             device (one fused jitted call per visit)
+  ----                             --------------------------------------
+  stream chunk slab j   ------>    restrict to queries paused at a leaf of
+  (double-buffered copy,           chunk j -> static-shape work plan
+   ChunkedLeafStore)               (jitsearch._build_plan) -> block-looped
+                                   leaf scans -> top-k merge -> exit+advance
+  read back leaf[m] once per round: schedule next chunk visits
+
+Key properties:
+
+  * ONE device->host sync per bulk round (the i32[m] pending-leaf map); all
+    queue/buffer bookkeeping from the paper collapses into the on-device
+    sort-by-leaf plan.
+  * The work plan has a single static shape per (m, tq, chunk_leaves)
+    triple: ``ChunkedLeafStore(uniform=True)`` pads every chunk to the same
+    leaf count, so ONE compiled round serves every chunk and every visit —
+    zero recompiles across flushes regardless of how many work units a
+    flush produces (the occupied-unit count is a dynamic while-loop bound,
+    not a shape).
+  * ``knn_d``/``knn_i`` (the O(m*k) neighbor state) and the traversal state
+    are donated, so each round updates them in place instead of copying.
+  * The paper's B/2 buffer-fill heuristic survives as the chunk-visit
+    scheduling policy: a chunk is visited when >= B/2 queries pend on it,
+    or unconditionally when no chunk meets the threshold (forced flush).
+    Skipping a cold chunk leaves its queries paused (their ``in_chunk`` mask
+    is recomputed on device at visit time, so late visits are always
+    consistent) and lets its buffer fill for a denser later visit — fewer
+    host->device slab transfers, exactly what B/2 bought the paper.
+"""
+
+from __future__ import annotations
+
+import functools
+import warnings
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import traversal
+from repro.core.chunked import ChunkedLeafStore
+from repro.core.jitsearch import _build_plan
+from repro.kernels import ops as kops
+
+__all__ = ["ChunkResidentEngine", "chunk_round_cache_size"]
+
+DEFAULT_UNIT_BLOCK = 8
+
+
+@functools.partial(jax.jit, static_argnames=("first_leaf_heap",))
+def _initial_advance(qpad, split_dim, split_val, *, first_leaf_heap):
+    """Round 0: descend every query to its home leaf (no chunk needed)."""
+    m = qpad.shape[0]
+    st = traversal.init_state(m)
+    radius = jnp.full((m,), jnp.inf, jnp.float32)
+    leaf, st = traversal.advance(
+        st, qpad, radius, split_dim, split_val, first_leaf_heap=first_leaf_heap
+    )
+    return leaf, st.node, st.fromc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "tq", "first_leaf_heap", "ub", "backend"),
+    donate_argnums=(0, 1, 2, 3, 4),
+)
+def _chunk_round(
+    node,          # i32[m]   traversal heap position      (donated)
+    fromc,         # i32[m]   traversal arrival direction  (donated)
+    leaf,          # i32[m]   pending leaf per query, -1 done (donated)
+    knn_d,         # f32[m+1, k] running top-k sq-dists    (donated)
+    knn_i,         # i32[m+1, k] reordered-global indices  (donated)
+    qpad,          # f32[m, d_pad] zero-padded queries
+    dev_slab,      # f32[C, L_pad, d_pad] resident chunk slab
+    lo,            # i32[] first leaf id of the chunk
+    leaf_start,    # i32[n_leaves]
+    leaf_size,     # i32[n_leaves]
+    split_dim,     # i32[2**h]
+    split_val,     # f32[2**h]
+    *,
+    k: int,
+    tq: int,
+    first_leaf_heap: int,
+    ub: int,
+    backend: str,
+):
+    """One fused bulk-synchronous round over the resident chunk.
+
+    Scans every query paused at a leaf of this chunk, merges its candidates,
+    exits its leaf and advances it to its next pending leaf (which may be in
+    any chunk).  Queries paused elsewhere are untouched.  Returns the
+    updated (node, fromc, leaf, knn_d, knn_i, n_units).
+    """
+    m = leaf.shape[0]
+    c = dev_slab.shape[0]
+
+    in_chunk = (leaf >= lo) & (leaf < lo + c)
+    local = jnp.where(in_chunk, leaf - lo, -1)
+    unit_leaf, unit_query, n_units = _build_plan(local, tq, c)
+
+    # pad the plan to a whole number of unit blocks so dynamic_slice starts
+    # stay in bounds; the occupied prefix [0, n_units) is what gets processed
+    w_rows = unit_leaf.shape[0]
+    w_pad = -(-w_rows // ub) * ub
+    unit_leaf = jnp.concatenate(
+        [unit_leaf, jnp.zeros((w_pad - w_rows,), jnp.int32)]
+    )
+    unit_query = jnp.concatenate(
+        [unit_query, jnp.full((w_pad - w_rows, tq), -1, jnp.int32)]
+    )
+    n_blocks = (n_units + ub - 1) // ub
+
+    def body(carry):
+        i, knn_d, knn_i = carry
+        ul = jax.lax.dynamic_slice_in_dim(unit_leaf, i * ub, ub)
+        uq = jax.lax.dynamic_slice_in_dim(unit_query, i * ub, ub)
+        q_tiles = jnp.where(
+            (uq >= 0)[..., None], qpad[jnp.clip(uq, 0, m - 1)], 0.0
+        )                                                  # [ub, tq, d_pad]
+        slabs = dev_slab[ul]                               # [ub, L_pad, d_pad]
+        nd, nli = kops.leaf_scan(q_tiles, slabs, k=k, backend=backend, tq=tq)
+
+        gl = ul + lo
+        ustart = leaf_start[gl]
+        usize = leaf_size[gl]
+        valid = nli < usize[:, None, None]
+        gidx = jnp.where(valid, nli + ustart[:, None, None], -1)
+        ndm = jnp.where(valid, nd, jnp.float32(kops.INVALID_DIST)).reshape(-1, k)
+        nim = gidx.reshape(-1, k)
+        flat_q = uq.reshape(-1)
+        safe_q = jnp.where(flat_q < 0, m, flat_q)
+        cd = jnp.concatenate([knn_d[safe_q], ndm], axis=1)
+        ci = jnp.concatenate([knn_i[safe_q], nim], axis=1)
+        neg, sel = jax.lax.top_k(-cd, k)
+        knn_d = knn_d.at[safe_q].set(-neg, mode="drop")
+        knn_i = knn_i.at[safe_q].set(
+            jnp.take_along_axis(ci, sel, axis=1), mode="drop"
+        )
+        return i + 1, knn_d, knn_i
+
+    _, knn_d, knn_i = jax.lax.while_loop(
+        lambda carry: carry[0] < n_blocks, body, (jnp.int32(0), knn_d, knn_i)
+    )
+
+    # exit the just-scanned leaves (only this chunk's queries move) and
+    # advance them to their next pending leaf; everyone else is frozen by
+    # advance()'s own pause predicate (at-leaf, descending, or done)
+    st = traversal.TraversalState(node=node, fromc=fromc)
+    ex = traversal.exit_leaf(st, first_leaf_heap)
+    st = traversal.TraversalState(
+        node=jnp.where(in_chunk, ex.node, node).astype(jnp.int32),
+        fromc=jnp.where(in_chunk, ex.fromc, fromc).astype(jnp.int32),
+    )
+    radius = jnp.sqrt(knn_d[:m, k - 1])
+    new_leaf, st = traversal.advance(
+        st, qpad, radius, split_dim, split_val, first_leaf_heap=first_leaf_heap
+    )
+    return st.node, st.fromc, new_leaf, knn_d, knn_i, n_units
+
+
+def chunk_round_cache_size() -> int:
+    """Number of compiled specializations of the fused round (one per
+    (m, tq, chunk-shape, k, backend) combination — flush sizes and work-unit
+    counts must NOT add entries; the engine bench asserts this)."""
+    return _chunk_round._cache_size()
+
+
+class ChunkResidentEngine:
+    """Bulk-synchronous out-of-core query engine over a ``ChunkedLeafStore``.
+
+    Built once per ``BufferKDTree``; ``run`` executes one full query batch.
+    The store must be uniform (equal chunk slab shapes) so one compiled
+    round serves every chunk.
+    """
+
+    def __init__(
+        self,
+        store: ChunkedLeafStore,
+        split_dim: jnp.ndarray,
+        split_val: jnp.ndarray,
+        leaf_start: jnp.ndarray,
+        leaf_size: jnp.ndarray,
+        first_leaf_heap: int,
+        *,
+        backend: str = "ref",
+        unit_block: int = DEFAULT_UNIT_BLOCK,
+    ):
+        if store.n_chunks > 1 and not store.uniform:
+            raise ValueError(
+                "ChunkResidentEngine needs ChunkedLeafStore(uniform=True)"
+            )
+        self.store = store
+        self._split_dim = split_dim
+        self._split_val = split_val
+        self._leaf_start = leaf_start
+        self._leaf_size = leaf_size
+        self.first_leaf_heap = int(first_leaf_heap)
+        self.backend = backend
+        self.unit_block = int(unit_block)
+
+    def run(
+        self,
+        qpad: jnp.ndarray,      # f32[m, d_pad] zero-padded queries
+        k: int,
+        tq: int,
+        buffer_size: int,
+    ) -> Tuple[np.ndarray, np.ndarray, Dict[str, int]]:
+        """Returns (sq-dists f32[m, k], reordered-global idx i32[m, k],
+        info counters).  Distances are pre-rescoring (caller refines)."""
+        m = qpad.shape[0]
+        store = self.store
+        first_leaf = self.first_leaf_heap
+
+        knn_d = jnp.full((m + 1, k), kops.INVALID_DIST, jnp.float32)
+        knn_i = jnp.full((m + 1, k), -1, jnp.int32)
+        leaf, node, fromc = _initial_advance(
+            qpad, self._split_dim, self._split_val, first_leaf_heap=first_leaf
+        )
+        # commit the round state to the store's device: round outputs are
+        # committed (the slab input is), and a committed/uncommitted avals
+        # mismatch would cost a second (pointless) round specialization
+        qpad, leaf, node, fromc, knn_d, knn_i = jax.device_put(
+            (qpad, leaf, node, fromc, knn_d, knn_i), store.device
+        )
+
+        # visit threshold: the paper's B/2 fill heuristic, capped so small
+        # query batches still flush
+        threshold = max(1, min(int(buffer_size), m) // 2)
+        info = {"rounds": 0, "chunk_rounds": 0, "units": 0}
+        copies_before = store.copies
+        unit_counts = []
+
+        while True:
+            leaf_host = np.asarray(leaf)          # the ONE sync per round
+            pending = leaf_host >= 0
+            if not pending.any():
+                break
+            counts = np.bincount(
+                store.chunk_of_leaf(leaf_host[pending]),
+                minlength=store.n_chunks,
+            )
+            visit = np.nonzero(counts >= threshold)[0]
+            if visit.size == 0:
+                visit = np.nonzero(counts > 0)[0]   # forced flush
+            for _cid, dev_slab, lo in store.stream(visit.tolist()):
+                with warnings.catch_warnings():
+                    # donation is a no-op on CPU; the warning fires at the
+                    # (one) compile — scoped here so the process-global
+                    # filter is untouched
+                    warnings.filterwarnings(
+                        "ignore",
+                        message="Some donated buffers were not usable",
+                    )
+                    node, fromc, leaf, knn_d, knn_i, nu = _chunk_round(
+                        node, fromc, leaf, knn_d, knn_i,
+                        qpad, dev_slab, jnp.int32(lo),
+                        self._leaf_start, self._leaf_size,
+                        self._split_dim, self._split_val,
+                        k=k, tq=tq, first_leaf_heap=first_leaf,
+                        ub=self.unit_block, backend=self.backend,
+                    )
+                unit_counts.append(nu)
+                info["chunk_rounds"] += 1
+            info["rounds"] += 1
+
+        info["units"] = int(sum(int(u) for u in unit_counts))
+        info["chunk_copies"] = store.copies - copies_before
+        return np.asarray(knn_d[:m]), np.asarray(knn_i[:m]), info

@@ -76,7 +76,10 @@ def _build_plan(leaf: jnp.ndarray, tq: int, n_leaves: int):
     """Vectorized work-plan construction (the jit'd form of buffers.py).
 
     leaf: i32[m] target leaf per query, -1 for retired queries.
-    Returns (unit_leaf i32[W+1], unit_query i32[W+1, TQ]); dump unit last.
+    Returns (unit_leaf i32[W+1], unit_query i32[W+1, TQ], n_units i32[]);
+    dump unit last.  Occupied units form the prefix [0, n_units) — retired
+    queries land in the dump unit, so consumers may process exactly
+    ``n_units`` rows (the chunk-resident engine's block loop does).
     """
     m = leaf.shape[0]
     w_max = (m + tq - 1) // tq + n_leaves
@@ -95,6 +98,7 @@ def _build_plan(leaf: jnp.ndarray, tq: int, n_leaves: int):
     unit_id = jnp.cumsum(newunit.astype(jnp.int32)) - 1
     unit_id = jnp.where(active, jnp.minimum(unit_id, w_max - 1), w_max)
     slot = within % tq
+    n_units = jnp.sum(jnp.where(active, newunit, False).astype(jnp.int32))
 
     unit_leaf = jnp.zeros((w_max + 1,), jnp.int32).at[unit_id].set(
         jnp.where(active, sl, 0).astype(jnp.int32), mode="drop"
@@ -102,7 +106,7 @@ def _build_plan(leaf: jnp.ndarray, tq: int, n_leaves: int):
     unit_query = jnp.full((w_max + 1, tq), -1, jnp.int32).at[unit_id, slot].set(
         jnp.where(active, order, -1).astype(jnp.int32), mode="drop"
     )
-    return unit_leaf, unit_query
+    return unit_leaf, unit_query, n_units
 
 
 @functools.partial(
@@ -133,7 +137,7 @@ def lazy_knn_jit(
             st, queries, radius, tree.split_dim, tree.split_val,
             first_leaf_heap=first_leaf_heap,
         )
-        unit_leaf, unit_query = _build_plan(leaf, tq, n_leaves)
+        unit_leaf, unit_query, _ = _build_plan(leaf, tq, n_leaves)
 
         q_tiles = jnp.where(
             (unit_query >= 0)[..., None],

@@ -1,12 +1,27 @@
 """LazySearch: the buffer k-d tree query engine (paper Algorithm 1 + §3.2).
 
-Host-side orchestration (queues, buffers, work plans — the paper also keeps
-these on the host) around three jitted device phases:
+Three engine tiers share one traversal state machine (``traversal.py``), one
+work-plan shape and one leaf-scan kernel contract:
 
-  FindLeafBatch      -> traversal.advance            (vectorized descent)
-  ProcessAllBuffers  -> kernels.ops.leaf_scan        (brute leaf scans)
-                        + _merge_knn                 (running top-k update)
-  re-insert          -> traversal.exit_leaf
+  * ``engine="host"`` — the paper-faithful HOST LOOP: queues, leaf buffers
+    and work plans live on the host (as in the paper), wrapped around three
+    jitted device phases
+        FindLeafBatch      -> traversal.advance      (vectorized descent)
+        ProcessAllBuffers  -> kernels.ops.leaf_scan  (brute leaf scans)
+                              + _merge_knn           (running top-k update)
+        re-insert          -> traversal.exit_leaf
+    Pedagogical/reference tier; every flush costs host round trips.
+  * ``engine="chunked"`` (default) — CHUNK-RESIDENT bulk-synchronous engine
+    (``chunked_jit.ChunkResidentEngine``): the host only streams leaf-
+    structure chunks (double-buffered ``ChunkedLeafStore``) and reads one
+    i32[m] pending-leaf map per round; everything else — plan construction,
+    leaf scans, top-k merge, leaf exit, re-advance — is ONE fused jitted
+    call per chunk visit, with the neighbor state donated (updated in
+    place).  The paper's B/2 buffer-fill rule becomes the chunk-visit
+    scheduling policy.  This is the out-of-core fast path.
+  * ``jitsearch.lazy_knn_jit`` — FULLY-JITTED device-resident fixed point
+    (one ``lax.while_loop``, no host involvement), for reference sets that
+    fit on the device; the per-device body of ``distributed/forest.py``.
 
 The leaf structure is held by a ``ChunkedLeafStore`` (paper §3: host-resident
 slabs, two device chunk buffers, compute/copy overlap).  ``n_chunks=1``
@@ -31,10 +46,11 @@ import numpy as np
 from repro.core import traversal
 from repro.core.buffers import LeafBuffers, QueryQueues, build_work_plan
 from repro.core.chunked import ChunkedLeafStore
+from repro.core.chunked_jit import ChunkResidentEngine
 from repro.core.toptree import TopTree, build_top_tree, suggest_height
 from repro.kernels import ops as kops
 
-__all__ = ["BufferKDTree", "SearchStats"]
+__all__ = ["BufferKDTree", "SearchStats", "PLAN_LADDER"]
 
 
 @dataclasses.dataclass
@@ -45,14 +61,27 @@ class SearchStats:
     points_scanned: int = 0
     queries_advanced: int = 0
     chunk_rounds: int = 0
+    plan_shapes: int = 0     # distinct padded plan widths seen (host engine)
 
 
-def _bucket(n: int, lo: int = 16) -> int:
-    """Round up to a power of two (bounds jit recompiles for variable W)."""
-    b = lo
-    while b < n:
-        b <<= 1
-    return b
+# Fixed ladder of padded work-plan widths, shared across flushes, queries and
+# trees: every host-engine flush pads its W work units up to a rung, so the
+# number of jitted scan/merge specializations is bounded by len(PLAN_LADDER)
+# for the LIFETIME OF THE PROCESS — not by how many distinct W values flushes
+# happen to produce (the old power-of-two rounding gave up to 2x as many
+# shapes, and any fresh W between flushes meant a fresh XLA compile).
+PLAN_LADDER = (16, 64, 256, 1024, 4096, 16384, 65536)
+
+
+def _plan_pad(w: int) -> int:
+    """Smallest ladder rung >= w (quadrupling beyond the table)."""
+    for rung in PLAN_LADDER:
+        if w <= rung:
+            return rung
+    rung = PLAN_LADDER[-1]
+    while rung < w:
+        rung *= 4
+    return rung
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
@@ -139,6 +168,9 @@ class BufferKDTree:
         tile_q: int = 128,
         d_pad_multiple: int = 8,
         device: Optional[jax.Device] = None,
+        engine: str = "chunked",
+        engine_tile_q: Optional[int] = None,
+        unit_block: int = 8,
     ):
         points = np.asarray(points, dtype=np.float32)
         n, d = points.shape
@@ -148,6 +180,9 @@ class BufferKDTree:
         h = self.tree.height
         self.k_backend = backend
         self.tile_q = int(tile_q)
+        if engine not in ("chunked", "host"):
+            raise ValueError(f"engine={engine!r} not in ('chunked', 'host')")
+        self.engine = engine
 
         # Feature padding for the kernel (pad dims contribute 0 distance;
         # PAD rows already carry PAD_COORD in the real dims).
@@ -160,7 +195,10 @@ class BufferKDTree:
                 (slabs.shape[0], slabs.shape[1], self.d_pad - d), dtype=np.float32
             )
             slabs = np.concatenate([slabs, pad], axis=-1)
-        self.store = ChunkedLeafStore(slabs, n_chunks=n_chunks, device=device)
+        # uniform chunk slabs: one compiled chunk round serves every chunk
+        self.store = ChunkedLeafStore(
+            slabs, n_chunks=n_chunks, device=device, uniform=True
+        )
 
         self.buffer_size = int(
             buffer_size if buffer_size is not None else min(1 << max(1, 24 - h), 4096)
@@ -173,6 +211,26 @@ class BufferKDTree:
         self._leaf_start_np = self.tree.leaf_start
         self._leaf_size_np = self.tree.leaf_sizes().astype(np.int32)
         self.stats = SearchStats()
+
+        resolved = kops.default_backend() if backend == "auto" else backend
+        # query-tile width for the fused engine: MXU wants the full 128-row
+        # tile; on the jnp/CPU path smaller tiles waste far less padding in
+        # sparse rounds (most units are partially filled)
+        self.engine_tile_q = int(
+            engine_tile_q
+            if engine_tile_q is not None
+            else (self.tile_q if resolved.startswith("pallas") else min(self.tile_q, 16))
+        )
+        self._engine = ChunkResidentEngine(
+            self.store,
+            self._split_dim,
+            self._split_val,
+            jnp.asarray(self._leaf_start_np),
+            jnp.asarray(self._leaf_size_np),
+            self.tree.first_leaf_heap,
+            backend=resolved,
+            unit_block=unit_block,
+        )
 
     # ------------------------------------------------------------------
     @property
@@ -196,7 +254,9 @@ class BufferKDTree:
     ):
         """Run the leaf-scan kernel for one chunk's work units + merge."""
         w = unit_leaf.shape[0]
-        wp = _bucket(w)
+        wp = _plan_pad(w)
+        self._plan_widths.add((wp, unit_q.shape[1]))
+        self.stats.plan_shapes = len(self._plan_widths)
         tq = unit_q.shape[1]
         m = queries_pad.shape[0] - 1
 
@@ -235,7 +295,9 @@ class BufferKDTree:
         """k nearest neighbors for every query (paper Alg. 1).
 
         Returns (dists f32[m, k] ascending Euclidean, idx i64[m, k] into the
-        caller's original ``points`` ordering).
+        caller's original ``points`` ordering).  Dispatches to the chunk-
+        resident bulk-synchronous engine (default) or the paper-faithful
+        host loop (``engine="host"``); both are exact.
         """
         queries = np.asarray(queries, dtype=np.float32)
         m, d = queries.shape
@@ -244,11 +306,27 @@ class BufferKDTree:
         if k > self.n:
             raise ValueError(f"k={k} > n={self.n}")
         self.stats = SearchStats()
-        h = self.tree.height
+        self._plan_widths = set()
         first_leaf = self.tree.first_leaf_heap
         tq = self.tile_q
 
         qs = jnp.asarray(queries)
+
+        if self.engine == "chunked":
+            qpad_m = jnp.zeros((m, self.d_pad), jnp.float32).at[:, :d].set(qs)
+            _d2, gi, info = self._engine.run(
+                qpad_m, k, self.engine_tile_q, self.buffer_size
+            )
+            self.stats.iterations = info["rounds"]
+            self.stats.flushes = info["rounds"]
+            self.stats.chunk_rounds = info["chunk_rounds"]
+            self.stats.units_scanned = info["units"]
+            self.stats.points_scanned = (
+                info["units"] * self.store.host.shape[1]
+            )
+            self.stats.queries_advanced = info["rounds"] * m
+            return self._finalize(gi, queries)
+
         qpad = jnp.zeros((m + 1, self.d_pad), jnp.float32)
         qpad = qpad.at[:m, :d].set(qs)
 
@@ -333,11 +411,16 @@ class BufferKDTree:
                 raise RuntimeError("LazySearch made no progress (engine bug)")
 
         gi = np.asarray(knn_i[:m])
-        # Exact rescoring pass: the MXU decomposition ||q||^2 - 2qx + ||x||^2
-        # carries O(eps * |q||x|) absolute error — at near-zero distances the
-        # relative error explodes (duplicate/self queries).  Recompute the k
-        # selected candidates directly ((q-x)^2, error O(eps * d^2)) and
-        # re-sort; FAISS-style refinement, cost O(m k d).
+        return self._finalize(gi, queries)
+
+    def _finalize(
+        self, gi: np.ndarray, queries: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Exact rescoring pass: the MXU decomposition ||q||^2 - 2qx + ||x||^2
+        carries O(eps * |q||x|) absolute error — at near-zero distances the
+        relative error explodes (duplicate/self queries).  Recompute the k
+        selected candidates directly ((q-x)^2, error O(eps * d^2)) and
+        re-sort; FAISS-style refinement, cost O(m k d)."""
         safe = np.clip(gi, 0, None)
         diff = self.tree.points[safe] - queries[:, None, :]
         d2 = np.einsum("mkd,mkd->mk", diff, diff)

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.jitsearch import TreeArrays, lazy_knn_jit, tree_arrays_from
 from repro.core.toptree import build_top_tree
 
@@ -115,11 +116,10 @@ def forest_knn(
         backend=backend, max_rounds=max_rounds,
     )
     specs_tree = TreeArrays(*[P(axis)] * len(TreeArrays._fields))
-    fn = jax.shard_map(
+    fn = shard_map(
         body,
         mesh=mesh,
         in_specs=(P(), specs_tree, P(axis)),
         out_specs=(P(), P()),
-        check_vma=False,
     )
     return fn(queries, tree_stk, offsets)

@@ -16,9 +16,26 @@ re-think is:
     dimension, so distance tiles are never written back to HBM.
 
 Grid: (W work units, L_pad // TX slab tiles); the slab-tile dimension is the
-inner ("arbitrary") one so scratch carries across it.  k-selection uses only
-min-reductions + masking (no variadic argmin reduce, no sort), which lowers
-cleanly on TPU and in interpret mode.
+inner ("arbitrary") one so scratch carries across it.
+
+k-selection comes in two forms (``selection=``):
+
+  * ``two_phase`` (default on compiled TPU): per slab tile, (1) a partial
+    top-k over the fresh [TQ, TX] distance tile via k min-extraction passes,
+    then (2) a SINGLE-PASS merge of the two sorted k-lists (tile top-k vs
+    VMEM scratch) by rank arithmetic — each element's merged rank is its own
+    position plus the count of smaller elements in the other list, so the
+    merge is O(k^2) data-parallel compare/accumulate ops with no sequential
+    min-extraction over the carried scratch.  Per-tile VPU work drops from
+    the min-trick's k passes over width (k + TX) to k passes over TX plus an
+    O(k^2) merge, and the scratch list is never re-scanned.
+  * ``min_trick`` (interpret-mode fallback): the original k min-extraction
+    passes over the concatenated [TQ, k + TX] candidates.  Uses only min
+    reductions + masking, the most conservative lowering.
+
+Both forms move values around without re-deriving them and break ties toward
+the lower slab index, so they are bit-identical to each other and to
+``kernels/ref.py::leaf_scan_ref`` (``lax.top_k`` tie order).
 
 Work-unit contract (shared with kernels/ref.py::leaf_scan_ref):
   q         f32[W, TQ, d_pad]   padded query tiles (pad rows = 0.0)
@@ -37,14 +54,81 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.ref import INVALID_DIST
 
-__all__ = ["leaf_scan_pallas", "DEFAULT_TQ", "DEFAULT_TX"]
+__all__ = ["leaf_scan_pallas", "DEFAULT_TQ", "DEFAULT_TX", "SELECTIONS"]
 
 DEFAULT_TQ = 128   # queries per tile (MXU sublane-friendly)
 DEFAULT_TX = 512   # slab points per tile (VMEM: 128x512 f32 dist tile = 256KB)
 _BIG_I = 2**30  # python int: avoids captured-constant arrays in the kernel
 
+SELECTIONS = ("auto", "two_phase", "min_trick")
 
-def _kernel(q_ref, x_ref, out_d_ref, out_i_ref, best_d, best_i, *, k, tx, n_tx):
+# jax 0.4.x names the params class TPUCompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
+
+def _dist_tile(q, x):
+    """[TQ, d] x [TX, d] -> [TQ, TX] squared distances (MXU decomposition)."""
+    qn = jnp.sum(q * q, axis=-1, keepdims=True)                    # [TQ, 1]
+    xn = jnp.sum(x * x, axis=-1)[None, :]                          # [1, TX]
+    cross = jax.lax.dot_general(
+        q, x, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                              # [TQ, TX]
+    return jnp.maximum(qn - 2.0 * cross + xn, 0.0)
+
+
+def _extract_topk(cand_d, cand_i, k):
+    """k min-extraction passes (min reductions + one-hot masking only).
+
+    cand_d/cand_i: [TQ, width].  Returns sorted-ascending ([TQ, k], [TQ, k]);
+    ties resolve to the first (lowest-index) position.
+    """
+    tq, width = cand_d.shape
+    pos = jax.lax.broadcasted_iota(jnp.int32, (tq, width), 1)
+    out_d, out_i = [], []
+    for _ in range(k):
+        mn = jnp.min(cand_d, axis=1)                               # [TQ]
+        # first position attaining the min (min-trick, no argmin reduce)
+        am = jnp.min(jnp.where(cand_d == mn[:, None], pos, _BIG_I), axis=1)
+        hit = pos == am[:, None]
+        iv = jnp.min(jnp.where(hit, cand_i, _BIG_I), axis=1)
+        out_d.append(mn[:, None])
+        out_i.append(iv[:, None])
+        cand_d = jnp.where(hit, jnp.float32(INVALID_DIST * 100.0), cand_d)
+    return jnp.concatenate(out_d, axis=1), jnp.concatenate(out_i, axis=1)
+
+
+def _rank_merge(a_d, a_i, b_d, b_i, k):
+    """Single-pass merge of two sorted-ascending k-lists, keeping the k
+    smallest.  a wins ties (carries lower global indices: earlier tiles).
+
+    Merged rank of a[i] = i + |{j : b[j] <  a[i]}|;
+    merged rank of b[j] = j + |{i : a[i] <= b[j]}| — a permutation of
+    0..2k-1, computed with 2D ops only (k unrolled [TQ, k] compares).
+    """
+    tq = a_d.shape[0]
+    pos_k = jax.lax.broadcasted_iota(jnp.int32, (tq, k), 1)
+    ra = pos_k
+    rb = pos_k
+    for j in range(k):
+        ra = ra + (b_d[:, j : j + 1] < a_d).astype(jnp.int32)
+        rb = rb + (a_d[:, j : j + 1] <= b_d).astype(jnp.int32)
+    out_d = jnp.full((tq, k), jnp.float32(INVALID_DIST * 10.0))
+    out_i = jnp.full((tq, k), _BIG_I, jnp.int32)
+    for j in range(k):
+        hit_a = ra[:, j : j + 1] == pos_k                          # [TQ, k]
+        out_d = jnp.where(hit_a, a_d[:, j : j + 1], out_d)
+        out_i = jnp.where(hit_a, a_i[:, j : j + 1], out_i)
+        hit_b = rb[:, j : j + 1] == pos_k
+        out_d = jnp.where(hit_b, b_d[:, j : j + 1], out_d)
+        out_i = jnp.where(hit_b, b_i[:, j : j + 1], out_i)
+    return out_d, out_i
+
+
+def _kernel(q_ref, x_ref, out_d_ref, out_i_ref, best_d, best_i, *,
+            k, tx, n_tx, selection):
     t = pl.program_id(1)
 
     @pl.when(t == 0)
@@ -54,35 +138,27 @@ def _kernel(q_ref, x_ref, out_d_ref, out_i_ref, best_d, best_i, *, k, tx, n_tx):
 
     q = q_ref[0]                     # [TQ, d_pad]
     x = x_ref[0]                     # [TX, d_pad]
-
-    # Distance tile via the MXU decomposition.
-    qn = jnp.sum(q * q, axis=-1, keepdims=True)                    # [TQ, 1]
-    xn = jnp.sum(x * x, axis=-1)[None, :]                          # [1, TX]
-    cross = jax.lax.dot_general(
-        q, x, dimension_numbers=(((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )                                                              # [TQ, TX]
-    dist = jnp.maximum(qn - 2.0 * cross + xn, 0.0)
+    dist = _dist_tile(q, x)
 
     tq = q.shape[0]
     local_base = t * tx
     col_idx = jax.lax.broadcasted_iota(jnp.int32, (tq, tx), 1) + local_base
 
-    # Merge [TQ, TX] candidates with the carried [TQ, k] best lists using
-    # k min-extraction passes (min reductions + one-hot masking only).
-    cand_d = jnp.concatenate([best_d[...], dist], axis=1)          # [TQ, k+TX]
-    cand_i = jnp.concatenate([best_i[...], col_idx], axis=1)
-    width = cand_d.shape[1]
-    pos = jax.lax.broadcasted_iota(jnp.int32, (tq, width), 1)
-    for j in range(k):
-        mn = jnp.min(cand_d, axis=1)                               # [TQ]
-        # first position attaining the min (min-trick, no argmin reduce)
-        am = jnp.min(jnp.where(cand_d == mn[:, None], pos, _BIG_I), axis=1)
-        hit = pos == am[:, None]
-        iv = jnp.min(jnp.where(hit, cand_i, _BIG_I), axis=1)
-        best_d[:, j] = mn
-        best_i[:, j] = iv
-        cand_d = jnp.where(hit, jnp.float32(INVALID_DIST * 100.0), cand_d)
+    if selection == "two_phase":
+        # phase 1: partial top-k of the fresh tile only (k passes over TX)
+        tile_d, tile_i = _extract_topk(dist, col_idx, k)
+        # phase 2: single-pass rank merge against the carried scratch;
+        # scratch first => ties keep the earlier (lower-index) tile's entry
+        new_d, new_i = _rank_merge(best_d[...], best_i[...], tile_d, tile_i, k)
+        best_d[...] = new_d
+        best_i[...] = new_i
+    else:
+        # min_trick: k min-extractions over the full [TQ, k + TX] candidates
+        cand_d = jnp.concatenate([best_d[...], dist], axis=1)
+        cand_i = jnp.concatenate([best_i[...], col_idx], axis=1)
+        new_d, new_i = _extract_topk(cand_d, cand_i, k)
+        best_d[...] = new_d
+        best_i[...] = new_i
 
     @pl.when(t == n_tx - 1)
     def _emit():
@@ -91,7 +167,7 @@ def _kernel(q_ref, x_ref, out_d_ref, out_i_ref, best_d, best_i, *, k, tx, n_tx):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "tq", "tx", "interpret")
+    jax.jit, static_argnames=("k", "tq", "tx", "interpret", "selection")
 )
 def leaf_scan_pallas(
     q: jnp.ndarray,
@@ -101,6 +177,7 @@ def leaf_scan_pallas(
     tq: int = DEFAULT_TQ,
     tx: int = DEFAULT_TX,
     interpret: bool = False,
+    selection: str = "auto",
 ):
     """Tiled Pallas leaf scan.  See module docstring for the contract."""
     w, tq_in, d_pad = q.shape
@@ -119,8 +196,15 @@ def leaf_scan_pallas(
         else:
             raise ValueError(f"L_pad={l_pad} not a multiple of tx={tx}")
     n_tx = l_pad // tx
+    if selection not in SELECTIONS:
+        raise ValueError(f"selection={selection!r} not in {SELECTIONS}")
+    if selection == "auto":
+        # two-phase on the compiled path; the min-trick form is the most
+        # conservative lowering and stays the interpret-mode fallback
+        selection = "min_trick" if interpret else "two_phase"
 
-    kernel = functools.partial(_kernel, k=k, tx=tx, n_tx=n_tx)
+    kernel = functools.partial(_kernel, k=k, tx=tx, n_tx=n_tx,
+                               selection=selection)
     out_shape = (
         jax.ShapeDtypeStruct((w, tq, k), jnp.float32),
         jax.ShapeDtypeStruct((w, tq, k), jnp.int32),
@@ -142,7 +226,7 @@ def leaf_scan_pallas(
             pltpu.VMEM((tq, k), jnp.float32),
             pltpu.VMEM((tq, k), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -36,8 +36,13 @@ def leaf_scan(
     backend: Backend = "auto",
     tq: Optional[int] = None,
     tx: Optional[int] = None,
+    selection: str = "auto",
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Work-unit leaf scan; see kernels/knn_scan.py for the contract."""
+    """Work-unit leaf scan; see kernels/knn_scan.py for the contract.
+
+    ``selection`` picks the kernel's k-selection form ("auto" | "two_phase" |
+    "min_trick"); ignored by the ref backend.
+    """
     if backend == "auto":
         backend = default_backend()
     if backend == "ref":
@@ -48,7 +53,9 @@ def leaf_scan(
     if tx is not None:
         kwargs["tx"] = tx
     interpret = backend == "pallas_interpret"
-    return _knn_scan.leaf_scan_pallas(q, leaf_pts, k=k, interpret=interpret, **kwargs)
+    return _knn_scan.leaf_scan_pallas(
+        q, leaf_pts, k=k, interpret=interpret, selection=selection, **kwargs
+    )
 
 
 def pad_dim(arr: jnp.ndarray, d_pad: int, fill: float = 0.0) -> jnp.ndarray:

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ARCH_IDS, get_config
 from repro.configs.shapes import SHAPES, cell_supported, input_specs
 from repro.launch.mesh import data_axes_of, make_production_mesh, tp_of
@@ -248,12 +249,11 @@ def compile_knn(_cfg, _shape, mesh, n_groups: Optional[int] = None):
     r_sds = jax.ShapeDtypeStruct((KNN_N, KNN_D), jnp.float32)
 
     def knn_step(queries, refs):
-        fn = jax.shard_map(
+        fn = shard_map(
             body,
             mesh=mesh,
             in_specs=(P((*dax, "model"), None), P("model", None)),
             out_specs=(P((*dax, "model"), None), P((*dax, "model"), None)),
-            check_vma=False,
         )
         return fn(queries, refs)
 

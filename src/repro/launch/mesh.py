@@ -11,7 +11,8 @@ from __future__ import annotations
 from typing import Tuple
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import make_mesh
 
 __all__ = ["make_production_mesh", "data_axes_of", "tp_of"]
 
@@ -20,7 +21,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """(16, 16) = one 256-chip pod; (2, 16, 16) = two pods / 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def data_axes_of(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import get_config
 from repro.configs.shapes import SHAPES, input_specs
 from repro.launch.mesh import data_axes_of, make_production_mesh, tp_of
@@ -144,11 +145,10 @@ def exp_a_bf16_ring():
     dax = data_axes_of(mesh)
 
     def knn_step(queries, refs):
-        fn = jax.shard_map(
+        fn = shard_map(
             body, mesh=mesh,
             in_specs=(P((*dax, "model"), None), P("model", None)),
-            out_specs=(P((*dax, "model"), None), P((*dax, "model"), None)),
-            check_vma=False)
+            out_specs=(P((*dax, "model"), None), P((*dax, "model"), None)))
         return fn(queries, refs)
 
     with mesh:

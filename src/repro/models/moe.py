@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.models.layers import DATA, MODEL, _act, _winit, cdtype, pdtype
 
 __all__ = ["init_moe", "moe_mlp", "MoEAux"]
@@ -202,12 +203,11 @@ def moe_mlp(p, x, cfg, dist=None) -> Tuple[jnp.ndarray, MoEAux]:
             "w_up_sh": P(None, model_axis),
             "w_down_sh": P(model_axis, None),
         })
-    fn = jax.shard_map(
+    fn = shard_map(
         body,
         mesh=mesh,
         in_specs=(P(dist.data_axes, None, None), pspec),
         out_specs=(P(dist.data_axes, None, None), P(), P(), P()),
-        check_vma=False,
     )
     y, lb, z, drop = fn(x, p)
     return y, MoEAux(lb, z, drop)

@@ -24,6 +24,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, Optional
 
+from repro.compat import cost_analysis
 from repro.roofline.analysis import collective_bytes
 
 __all__ = ["CellCosts", "calibrated_costs"]
@@ -48,7 +49,7 @@ class CellCosts:
 
 
 def _costs_of(compiled) -> Dict[str, float]:
-    ca = compiled.cost_analysis()
+    ca = cost_analysis(compiled)
     return {
         "flops": float(ca.get("flops", 0.0)),
         "bytes": float(ca.get("bytes accessed", 0.0)),

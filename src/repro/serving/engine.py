@@ -13,6 +13,7 @@ Sampling: greedy or temperature categorical per request.
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -22,6 +23,26 @@ import numpy as np
 from repro.models.model import LanguageModel
 
 __all__ = ["ServeEngine", "Request"]
+
+# One jitted decode step per model: engines over the same LanguageModel share
+# the executable (no recompile per engine restart, and identical numerics for
+# identical inputs — separate XLA compilations of the same bf16 graph are not
+# guaranteed bitwise-equal on CPU, which matters for greedy decoding).
+_DECODE_CACHE: "weakref.WeakKeyDictionary[LanguageModel, Any]" = (
+    weakref.WeakKeyDictionary()
+)
+
+
+def _shared_decode(lm: LanguageModel):
+    fn = _DECODE_CACHE.get(lm)
+    if fn is None:
+        # close over a weakref: a strong lm capture would make the cache
+        # value reference its own key, pinning the entry (and the model)
+        # forever
+        lm_ref = weakref.ref(lm)
+        fn = jax.jit(lambda p, b, c: lm_ref().decode_step(p, b, c))
+        _DECODE_CACHE[lm] = fn
+    return fn
 
 
 @dataclasses.dataclass
@@ -48,7 +69,7 @@ class ServeEngine:
         self.slot_req: List[Optional[Request]] = [None] * slots
         self.slot_pos = np.zeros((slots,), np.int64)   # next position to write
         self.key = jax.random.key(seed)
-        self._decode = jax.jit(lambda p, b, c: lm.decode_step(p, b, c))
+        self._decode = _shared_decode(lm)
         self.queue: List[Request] = []
         self.done: Dict[int, Request] = {}
 

@@ -3,20 +3,37 @@
 NOTE: no XLA_FLAGS / device-count manipulation here — smoke tests and
 benches must see the real (1-CPU) device count.  Multi-device tests spawn
 subprocesses that set ``--xla_force_host_platform_device_count`` themselves.
+
+hypothesis is an optional test dependency: the profile is registered only
+when the package is installed (see ``hypothesis_compat.py`` for how fuzz
+tests degrade to skips without it).
 """
 
+import jax
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, settings
 
-# JAX tracing/compilation makes per-example deadlines meaningless.
-settings.register_profile(
-    "repro",
-    deadline=None,
-    max_examples=20,
-    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
-)
-settings.load_profile("repro")
+# jax 0.4.x CPU async dispatch has a buffer race: a dispatched computation
+# occasionally reads an input while the producing computation is still
+# writing it (observed as transient multi-unit logit corruption in the
+# serving tests; reproduced 2/10 runs, 0/60 with the flag off).  Synchronous
+# dispatch costs a little pipelining on CPU and nothing in correctness.
+jax.config.update("jax_cpu_enable_async_dispatch", False)
+
+try:
+    from hypothesis import HealthCheck, settings
+except ModuleNotFoundError:
+    settings = None
+
+if settings is not None:
+    # JAX tracing/compilation makes per-example deadlines meaningless.
+    settings.register_profile(
+        "repro",
+        deadline=None,
+        max_examples=20,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+    )
+    settings.load_profile("repro")
 
 
 @pytest.fixture

@@ -20,7 +20,8 @@ def _run(body: str, devices: int = 8) -> str:
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
         import numpy as np
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType
+        jax.config.update("jax_cpu_enable_async_dispatch", False)  # see conftest
+        from repro.compat import make_mesh, shard_map
         from repro.core import knn_brute
         rng = np.random.default_rng(0)
     """) + textwrap.dedent(body)
@@ -40,7 +41,7 @@ def test_ring_knn_exact():
         n, d, m, k = 8192, 8, 512, 10
         pts = rng.normal(size=(n, d)).astype(np.float32)
         q = rng.normal(size=(m, d)).astype(np.float32)
-        mesh = jax.make_mesh((8,), ("model",), axis_types=(AxisType.Auto,))
+        mesh = make_mesh((8,), ("model",))
         d2, gi = ring_knn_brute(jnp.asarray(q), jnp.asarray(pts), k=k,
                                 mesh=mesh, axis="model")
         bd, bi = knn_brute(q, pts, k)
@@ -58,7 +59,7 @@ def test_ring_knn_tiled_inner_loop():
         n, d, m, k = 4096, 6, 256, 5
         pts = rng.normal(size=(n, d)).astype(np.float32)
         q = rng.normal(size=(m, d)).astype(np.float32)
-        mesh = jax.make_mesh((4,), ("model",), axis_types=(AxisType.Auto,))
+        mesh = make_mesh((4,), ("model",))
         # force the tiled path: tile smaller than the local shard (1024)
         orig = ring_knn.REF_TILE
         ring_knn.REF_TILE = 256
@@ -81,7 +82,7 @@ def test_forest_knn_exact():
         n, d, m, k = 16384, 10, 512, 10
         pts = rng.normal(size=(n, d)).astype(np.float32)
         q = rng.normal(size=(m, d)).astype(np.float32)
-        mesh = jax.make_mesh((8,), ("model",), axis_types=(AxisType.Auto,))
+        mesh = make_mesh((8,), ("model",))
         trees, offsets = build_forest(pts, 8, height=5)
         stk = stack_forest(trees)
         d_pad = trees[0].slabs.shape[-1]
@@ -118,17 +119,16 @@ def test_paper_multi_device_query_chunking():
 def test_ef_int8_gradient_compression():
     out = _run("""
         from repro.training.compression import ef_int8_allreduce, init_error_state
-        mesh = jax.make_mesh((4,), ("dp",), axis_types=(AxisType.Auto,))
+        mesh = make_mesh((4,), ("dp",))
         from jax.sharding import PartitionSpec as P
 
         def body(g, e):
             m, e2 = ef_int8_allreduce({"w": g}, {"w": e}, "dp")
             return m["w"], e2["w"]
 
-        fn = jax.jit(jax.shard_map(body, mesh=mesh,
-                                   in_specs=(P("dp"), P("dp")),
-                                   out_specs=(P(), P("dp")),
-                                   check_vma=False))
+        fn = jax.jit(shard_map(body, mesh=mesh,
+                               in_specs=(P("dp"), P("dp")),
+                               out_specs=(P(), P("dp"))))
         g = rng.normal(size=(4, 1000)).astype(np.float32)
         e = np.zeros((4, 1000), np.float32)
         exact = g.mean(axis=0)

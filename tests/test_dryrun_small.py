@@ -18,9 +18,9 @@ def _run(body: str, devices: int = 4) -> str:
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
         import jax, jax.numpy as jnp
         import numpy as np
-        from jax.sharding import AxisType
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(AxisType.Auto,)*2)
+        jax.config.update("jax_cpu_enable_async_dispatch", False)  # see conftest
+        from repro.compat import make_mesh, shard_map
+        mesh = make_mesh((2, 2), ("data", "model"))
     """) + textwrap.dedent(body)
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC

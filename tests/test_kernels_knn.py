@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.kernels.knn_scan import leaf_scan_pallas
 from repro.kernels.ops import leaf_scan
@@ -28,13 +28,14 @@ def _inputs(w, tq, lp, d, d_pad, seed=0, pad_rows=0):
     return jnp.asarray(q), jnp.asarray(x)
 
 
-def _check(q, x, k, tq=None, tx=None):
+def _check(q, x, k, tq=None, tx=None, selection="auto"):
     rd, ri = leaf_scan_ref(q, x, k=k)
-    pd_, pi = leaf_scan_pallas(q, x, k=k, interpret=True,
+    pd_, pi = leaf_scan_pallas(q, x, k=k, interpret=True, selection=selection,
                                **({"tq": tq} if tq else {}),
                                **({"tx": tx} if tx else {}))
-    np.testing.assert_allclose(np.asarray(rd), np.asarray(pd_),
-                               rtol=1e-5, atol=1e-5)
+    # selection only moves values, never re-derives them: the distances the
+    # kernel reports must be BIT-identical to the oracle's
+    np.testing.assert_array_equal(np.asarray(rd), np.asarray(pd_))
     # permutation-aware index check: same distance at every rank
     d_of_pi = np.take_along_axis(
         np.asarray(_all_dists(q, x)), np.asarray(pi), axis=-1
@@ -62,10 +63,11 @@ SWEEP = [
 ]
 
 
+@pytest.mark.parametrize("selection", ["min_trick", "two_phase"])
 @pytest.mark.parametrize("w,tq,lp,d,d_pad,k,tx", SWEEP)
-def test_kernel_shape_sweep(w, tq, lp, d, d_pad, k, tx):
+def test_kernel_shape_sweep(w, tq, lp, d, d_pad, k, tx, selection):
     q, x = _inputs(w, tq, lp, d, d_pad, seed=w * 7 + k)
-    _check(q, x, k, tq=tq, tx=tx)
+    _check(q, x, k, tq=tq, tx=tx, selection=selection)
 
 
 def test_kernel_with_padded_rows(self=None):
@@ -81,7 +83,8 @@ def test_kernel_padded_rows_never_win():
     assert (np.asarray(pd_) < 1e29).all()
 
 
-def test_kernel_multi_tile_accumulation():
+@pytest.mark.parametrize("selection", ["min_trick", "two_phase"])
+def test_kernel_multi_tile_accumulation(selection):
     """Running top-k must carry across slab tiles: plant the true NNs in the
     LAST tile."""
     rng = np.random.default_rng(13)
@@ -89,9 +92,33 @@ def test_kernel_multi_tile_accumulation():
     x = np.full((1, 256, 8), 50.0, np.float32)
     x[0, -8:] = np.asarray(q[0])  # exact matches at the end
     pd_, pi = leaf_scan_pallas(q, jnp.asarray(x), k=1, tq=8, tx=64,
-                               interpret=True)
+                               interpret=True, selection=selection)
     np.testing.assert_allclose(np.asarray(pd_)[..., 0], 0.0, atol=1e-4)
     assert (np.asarray(pi)[0, :, 0] == np.arange(248, 256)).all()
+
+
+@pytest.mark.parametrize("selection", ["min_trick", "two_phase"])
+def test_kernel_duplicate_distances_tie_order(selection):
+    """Equal distances must resolve to the lowest slab index (lax.top_k
+    order), within AND across slab tiles, for both selection forms."""
+    q = np.zeros((1, 8, 8), np.float32)
+    x = np.zeros((1, 128, 8), np.float32)  # every point at distance 0
+    pd_, pi = leaf_scan_pallas(jnp.asarray(q), jnp.asarray(x), k=6, tq=8,
+                               tx=32, interpret=True, selection=selection)
+    rd, ri = leaf_scan_ref(jnp.asarray(q), jnp.asarray(x), k=6)
+    np.testing.assert_array_equal(np.asarray(pd_), np.asarray(rd))
+    np.testing.assert_array_equal(np.asarray(pi), np.asarray(ri))
+
+
+def test_kernel_selections_bit_identical():
+    """two_phase and min_trick must agree bitwise on random inputs."""
+    q, x = _inputs(3, 16, 128, 6, 8, seed=23, pad_rows=11)
+    a_d, a_i = leaf_scan_pallas(q, x, k=7, tq=16, tx=32, interpret=True,
+                                selection="min_trick")
+    b_d, b_i = leaf_scan_pallas(q, x, k=7, tq=16, tx=32, interpret=True,
+                                selection="two_phase")
+    np.testing.assert_array_equal(np.asarray(a_d), np.asarray(b_d))
+    np.testing.assert_array_equal(np.asarray(a_i), np.asarray(b_i))
 
 
 def test_ops_dispatch_matches():

@@ -22,31 +22,51 @@ def lm_and_params():
 
 class TestServeEngine:
     def test_greedy_matches_reference_decode(self, lm_and_params):
-        """Engine output must equal a hand-rolled prefill+greedy loop."""
+        """Engine control flow must reproduce a hand-rolled prefill+greedy
+        loop.
+
+        The reference replays the prompt plus the ENGINE's emitted tokens and
+        checks each emitted token is (near-)argmax of the reference logits.
+        Matching logits-with-tolerance rather than exact token sequences keeps
+        the test meaningful: XLA CPU matmuls are not call-to-call bitwise
+        stable (oneDNN primitive re-selection), and this random-init smoke
+        model has tiny argmax margins, so exact greedy chains are chaotic.  A
+        real control-flow bug (wrong pos, wrong slot, cache corruption) makes
+        the reference logits disagree by far more than the tolerance.
+        """
         lm, params = lm_and_params
         cfg = lm.cfg
         prompt = np.array([3, 14, 15, 9], np.int32)
         new = 6
 
-        # reference: replay prompt through decode path, then greedy
-        caches, _ = lm.init_cache(1, 64)
-        dec = jax.jit(lambda p, b, c: lm.decode_step(p, b, c))
-        for t, tok in enumerate(prompt[:-1]):
-            _, caches = dec(params, {"tokens": jnp.full((1, 1), tok, jnp.int32),
-                                     "pos": jnp.int32(t)}, caches)
-        ref = []
-        last = int(prompt[-1])
-        for i in range(new):
-            lg, caches = dec(params,
-                             {"tokens": jnp.full((1, 1), last, jnp.int32),
-                              "pos": jnp.int32(len(prompt) - 1 + i)}, caches)
-            last = int(jnp.argmax(lg[0, 0, : cfg.vocab_size]))
-            ref.append(last)
-
         eng = ServeEngine(lm, params, slots=2, max_len=64)
+        dec = eng._decode
         eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=new))
-        done = eng.run()
-        assert done[0].out_tokens == ref
+        out = eng.run()[0].out_tokens
+        assert len(out) == new
+
+        # reference: replay prompt + engine tokens through the decode path,
+        # batched exactly like the engine (slot 1 inactive)
+        caches, _ = lm.init_cache(2, 64)
+
+        def step1(tok, pos, caches):
+            batch = {
+                "tokens": jnp.asarray(np.array([[tok], [0]], np.int32)),
+                "pos": jnp.asarray(np.array([pos, 0], np.int32)),
+                "active": jnp.asarray(np.array([True, False])),
+            }
+            return dec(params, batch, caches)
+
+        for t, tok in enumerate(prompt[:-1]):
+            _, caches = step1(int(tok), t, caches)
+        stream = [int(prompt[-1])] + out[:-1]
+        for i, tok in enumerate(stream):
+            lg, caches = step1(tok, len(prompt) - 1 + i, caches)
+            row = np.asarray(lg[0, 0, : cfg.vocab_size], np.float32)
+            assert row[out[i]] >= row.max() - 1e-3, (
+                f"step {i}: engine token {out[i]} not argmax of reference "
+                f"logits (margin {row.max() - row[out[i]]})"
+            )
 
     def test_multiple_requests_slot_reuse(self, lm_and_params):
         lm, params = lm_and_params
@@ -61,19 +81,42 @@ class TestServeEngine:
             assert len(req.out_tokens) == 3 + rid % 2
 
     def test_isolation_between_slots(self, lm_and_params):
-        """A request's output must not depend on its co-batched neighbors."""
+        """A request's logits must not depend on its co-batched neighbors.
+
+        Compares slot-0 logits (same token stream) with a lone vs an occupied
+        slot 1, with a tolerance far above benign run-to-run float jitter but
+        far below any real cross-slot leak (an unmasked cache write changes
+        logits at O(1) magnitude).
+        """
         lm, params = lm_and_params
+        cfg = lm.cfg
         prompt = np.array([7, 8, 9], np.int32)
+
         eng1 = ServeEngine(lm, params, slots=2, max_len=64)
         eng1.submit(Request(rid=0, prompt=prompt, max_new_tokens=4))
-        solo = eng1.run()[0].out_tokens
+        eng1._admit()
 
         eng2 = ServeEngine(lm, params, slots=2, max_len=64)
         eng2.submit(Request(rid=0, prompt=prompt, max_new_tokens=4))
         eng2.submit(Request(rid=1, prompt=np.array([100, 200], np.int32),
                             max_new_tokens=4))
-        both = eng2.run()[0].out_tokens
-        assert solo == both
+        eng2._admit()
+
+        # identical slot-0 stream through both engines; slot 1 decodes its
+        # own tokens in eng2 and idles in eng1
+        stream = [9, 42, 7, 300]
+        t1 = 200
+        for i, tok in enumerate(stream):
+            lg1 = eng1._run_tokens(np.array([tok, 0], np.int32),
+                                   np.array([2 + i, 0]),
+                                   np.array([True, False]))
+            lg2 = eng2._run_tokens(np.array([tok, t1], np.int32),
+                                   np.array([2 + i, 1 + i]),
+                                   np.array([True, True]))
+            r1 = np.asarray(lg1[0, 0, : cfg.vocab_size], np.float32)
+            r2 = np.asarray(lg2[0, 0, : cfg.vocab_size], np.float32)
+            np.testing.assert_allclose(r1, r2, atol=1e-3, rtol=0)
+            t1 = int(np.argmax(np.asarray(lg2[1, 0, : cfg.vocab_size])))
 
 
 class TestKNNLM:

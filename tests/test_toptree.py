@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from hypothesis_compat import given, st
 
 from repro.core.toptree import PAD_COORD, build_top_tree, suggest_height
 

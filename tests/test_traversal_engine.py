@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import BufferKDTree, build_top_tree, knn_brute, knn_host_kdtree
 from repro.core.traversal import reference_knn_via_traversal
