@@ -1,4 +1,4 @@
-"""End-to-end ``BufferKDTree.query`` engine benchmark (the perf trajectory).
+"""End-to-end ``KNNIndex.query`` engine benchmark (the perf trajectory).
 
 Canonical CPU smoke shape: 20k x 8 reference points, 2k queries, height 7,
 n_chunks=2, k=10 — the configuration the seed repo measured at ~7.8 s on the
@@ -30,20 +30,22 @@ N, D, M, HEIGHT, N_CHUNKS, K = 20_000, 8, 2_000, 7, 2, 10
 
 
 def run(scale: float = 1.0) -> None:
-    from repro.core import BufferKDTree
-    from repro.core.chunked_jit import chunk_round_cache_size
+    from repro.api import IndexSpec, KNNIndex, chunk_round_cache_size
 
     rng = np.random.default_rng(0)
     pts = rng.normal(size=(N, D)).astype(np.float32)
     q = rng.normal(size=(M, D)).astype(np.float32)
 
-    idx = BufferKDTree(pts, height=HEIGHT, n_chunks=N_CHUNKS)
+    idx = KNNIndex.build(
+        pts, spec=IndexSpec(engine="chunked", height=HEIGHT,
+                            n_chunks=N_CHUNKS, k_hint=K)
+    )
     idx.query(q, k=K)                         # warm: compiles the round
     compiles_warm = chunk_round_cache_size()
     t_chunked = common.timeit(lambda: idx.query(q, k=K), repeat=3, warmup=0)
     # vary the query content: flush/work-unit counts change, shapes may not
     q2 = rng.normal(size=(M, D)).astype(np.float32)
-    idx.query(q2, k=K)
+    res2 = idx.query(q2, k=K)
     compiles_after = chunk_round_cache_size()
     common.row("engine/chunked_query", t_chunked,
                f"n={N};m={M};h={HEIGHT};chunks={N_CHUNKS};k={K}")
@@ -58,9 +60,9 @@ def run(scale: float = 1.0) -> None:
         "round_compiles_after_varied_flushes": compiles_after,
         "recompile_free": compiles_warm == compiles_after,
         "stats": {
-            "rounds": idx.stats.iterations,
-            "chunk_rounds": idx.stats.chunk_rounds,
-            "units_scanned": idx.stats.units_scanned,
+            "rounds": res2.stats.iterations,
+            "chunk_rounds": res2.stats.chunk_rounds,
+            "units_scanned": res2.stats.units_scanned,
         },
     }
     assert result["recompile_free"], (
@@ -69,8 +71,10 @@ def run(scale: float = 1.0) -> None:
     )
 
     if scale >= 1.0:
-        host = BufferKDTree(pts, height=HEIGHT, n_chunks=N_CHUNKS,
-                            engine="host")
+        host = KNNIndex.build(
+            pts, spec=IndexSpec(engine="host", height=HEIGHT,
+                                n_chunks=N_CHUNKS, k_hint=K)
+        )
         t_host = common.timeit(lambda: host.query(q, k=K), repeat=1, warmup=1)
         common.row("engine/host_query", t_host, "legacy host loop")
         result["host_s"] = t_host

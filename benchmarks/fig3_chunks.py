@@ -12,7 +12,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import row, timeit
-from repro.core import BufferKDTree
+from repro.api import IndexSpec, KNNIndex
 from repro.data.pipeline import PointCloud
 
 
@@ -24,7 +24,10 @@ def run(scale: float = 1.0):
         q = pc.queries(m)
 
         def t_for(chunks):
-            idx = BufferKDTree(pts, height=6, n_chunks=chunks, tile_q=128)
+            idx = KNNIndex.build(
+                pts, spec=IndexSpec(engine="chunked", height=6,
+                                    n_chunks=chunks, tile_q=128, k_hint=k)
+            )
             return timeit(lambda: idx.query(q, k=k), repeat=2, warmup=1)
 
         t1 = t_for(1)

@@ -29,19 +29,23 @@ def run(scale: float = 1.0):
             import time
             import numpy as np
             import jax
-            from repro.core import BufferKDTree
+            from repro.api import IndexSpec, KNNIndex
             from repro.data.pipeline import PointCloud
-            from repro.distributed.sharded import multi_device_query
 
             pc = PointCloud({n}, 10, seed=0)
             pts = pc.points(); q = pc.queries({m})
-            idx = BufferKDTree(pts, height=6, tile_q=128)
-            idx.query(q[:256], k=10)  # warm
-            t0 = time.perf_counter(); idx.query(q, k=10)
+            one = KNNIndex.build(pts, spec=IndexSpec(
+                engine="chunked", height=6, tile_q=128,
+                devices=tuple(jax.devices()[:1])))
+            one.query(q[:256], k=10)  # warm
+            t0 = time.perf_counter(); one.query(q, k=10)
             t1 = time.perf_counter() - t0
-            multi_device_query(pts, q[:256], 10, height=6, tile_q=128)  # warm
+            four = KNNIndex.build(pts, spec=IndexSpec(
+                engine="sharded", height=6, tile_q=128,
+                devices=tuple(jax.devices())))
+            four.query(q[:256], k=10)  # warm
             t0 = time.perf_counter()
-            multi_device_query(pts, q, 10, height=6, tile_q=128)
+            four.query(q, k=10)
             t4 = time.perf_counter() - t0
             print(f"RESULT {{t1}} {{t4}}")
         """)

@@ -9,8 +9,12 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import row, timeit
-from repro.core import BufferKDTree, build_top_tree, knn_brute, knn_host_kdtree
+from repro.api import IndexSpec, KNNIndex
 from repro.data.pipeline import PointCloud
+
+
+def _spec(engine: str, k: int) -> IndexSpec:
+    return IndexSpec(engine=engine, height=6, tile_q=128, k_hint=k)
 
 
 def run(scale: float = 1.0):
@@ -21,24 +25,27 @@ def run(scale: float = 1.0):
         pts = pc.points()
         q = pc.queries(m)
 
-        t_build = timeit(lambda: BufferKDTree(pts, height=6, tile_q=128),
-                         repeat=2, warmup=0)
+        t_build = timeit(
+            lambda: KNNIndex.build(pts, spec=_spec("chunked", k)),
+            repeat=2, warmup=0,
+        )
         row(f"fig5/train_n{n}", t_build, "construction")
 
-        idx = BufferKDTree(pts, height=6, tile_q=128)
+        idx = KNNIndex.build(pts, spec=_spec("chunked", k))
         t_tree = timeit(lambda: idx.query(q, k=k), repeat=2, warmup=1)
         row(f"fig5/bufferkdtree_n{n}", t_tree, "")
 
         # estimates from reduced query sets (paper does the same for the
         # slow baselines: "runtime estimates w.r.t. the full data set")
         m_red = max(1000, m // 20)
-        t_brute = timeit(lambda: knn_brute(q[:m_red], pts, k),
+        brute = KNNIndex.build(pts, spec=IndexSpec(engine="brute"))
+        t_brute = timeit(lambda: brute.query(q[:m_red], k=k),
                          repeat=2, warmup=1) * (m / m_red)
         row(f"fig5/brute_n{n}", t_brute,
             f"estimate_from_m={m_red};speedup_tree={t_brute / t_tree:.1f}")
 
-        tree = build_top_tree(pts, 6)
-        t_kd = timeit(lambda: knn_host_kdtree(q[:m_red], tree, k),
+        kdt = KNNIndex.build(pts, spec=_spec("kdtree", k))
+        t_kd = timeit(lambda: kdt.query(q[:m_red], k=k),
                       repeat=2, warmup=0) * (m / m_red)
         row(f"fig5/kdtree_host_n{n}", t_kd,
             f"estimate_from_m={m_red};speedup_tree={t_kd / t_tree:.1f}")

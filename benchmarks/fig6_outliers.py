@@ -10,7 +10,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import row, timeit
-from repro.core import BufferKDTree, knn_brute
+from repro.api import IndexSpec, KNNIndex, knn_brute
 from repro.data.pipeline import PointCloud
 
 
@@ -19,12 +19,13 @@ def run(scale: float = 1.0):
     n = int(100_000 * scale)
     pc = PointCloud(n, d, seed=3)
     pts = pc.points()
+    spec = IndexSpec(engine="chunked", height=7, tile_q=128, k_hint=k + 1)
 
-    t_build = timeit(lambda: BufferKDTree(pts, height=7, tile_q=128),
+    t_build = timeit(lambda: KNNIndex.build(pts, spec=spec),
                      repeat=1, warmup=0)
     row(f"fig6/train_n{n}", t_build, "construction")
 
-    idx = BufferKDTree(pts, height=7, tile_q=128)
+    idx = KNNIndex.build(pts, spec=spec)
 
     def all_nn():
         dd, _ = idx.query(pts, k=k + 1)

@@ -40,7 +40,7 @@ corpus = np.concatenate(
 )
 knn.build_datastore(corpus)
 print(f"datastore: {knn.values.shape[0]} (context -> next token) pairs, "
-      f"tree height {knn.index.tree.height}")
+      f"engine={knn.index.engine_name} tree height {knn.index.height}")
 
 # evaluate: probability mass assigned to the Markov-table successors
 test = pipe.global_batch_at(2000)["tokens"][:16]

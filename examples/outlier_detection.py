@@ -11,7 +11,7 @@ import time
 
 import numpy as np
 
-from repro.core import BufferKDTree
+from repro.api import KNNIndex
 from repro.data.pipeline import PointCloud
 
 N, D, K = 200_000, 10, 10
@@ -24,7 +24,7 @@ anomalies = rng.uniform(3.0, 5.0, size=(25, D)).astype(np.float32)
 data = np.concatenate([catalog, anomalies])
 
 t0 = time.time()
-index = BufferKDTree(data, height=8)
+index = KNNIndex.build(data, height=8)
 t_build = time.time() - t0
 
 # all-nearest-neighbors: query the reference set against itself (k+1: the

@@ -1,4 +1,7 @@
-"""Quickstart: build a buffer k-d tree, run kNN queries, verify vs brute.
+"""Quickstart: one front door — ``KNNIndex.build(points).query(q, k)``.
+
+The planner picks the execution engine from data shape, device topology and
+memory budget; every knob can also be pinned through ``IndexSpec``.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,7 +10,7 @@ import time
 
 import numpy as np
 
-from repro.core import BufferKDTree, knn_brute
+from repro.api import IndexSpec, KNNIndex, available_engines, knn_brute
 from repro.data.pipeline import PointCloud
 
 # astronomy-like catalog: 100k points, d=10 (crts features)
@@ -15,30 +18,40 @@ pc = PointCloud(100_000, 10, seed=0)
 points = pc.points()
 queries = pc.queries(10_000)
 
-# 1. build (host-side, O(h n) median splits)
+# 1. build — no spec: the planner chooses engine + parameters and says why
 t0 = time.time()
-index = BufferKDTree(points, height=7)
-print(f"build: {time.time() - t0:.2f}s  "
-      f"(h={index.tree.height}, {index.tree.n_leaves} leaves, "
-      f"leaf ~{index.tree.leaf_pad} pts)")
+index = KNNIndex.build(points, height=7)
+print(f"build: {time.time() - t0:.2f}s")
+print(index.describe())
 
-# 2. query (LazySearch: FindLeafBatch + ProcessAllBuffers)
+# 2. query — returns a QueryResult (unpacks as the classic (dists, idx)
+#    tuple) carrying immutable per-call stats
 t0 = time.time()
-dists, idx = index.query(queries, k=10)
+res = index.query(queries, k=10)
+dists, idx = res
 print(f"query: {time.time() - t0:.2f}s for {len(queries)} queries "
-      f"(scanned {index.stats.points_scanned / (len(queries) * len(points)):.2%} "
+      f"(scanned {res.stats.points_scanned / (len(queries) * len(points)):.2%} "
       f"of what brute force would)")
 
-# 3. verify a slice against exact brute force
+# 3. verify a slice against the exact brute-force oracle
 bd, bi = knn_brute(queries[:512], points, 10)
 assert np.allclose(dists[:512], bd, rtol=1e-4, atol=1e-4)
 print(f"verified vs brute force: recall@10 = {(idx[:512] == bi).mean():.4f}")
 
-# 4. the chunked mode (paper's contribution): leaf structure stays on host,
-#    only two chunk buffers live on device
-chunked = BufferKDTree(points, height=7, n_chunks=4)
+# 4. out-of-core mode (the paper's §3 contribution): cap the device memory
+#    budget and the planner streams the leaf structure in chunks instead
+budget = index.resident_bytes() // 3
+chunked = KNNIndex.build(
+    points, spec=IndexSpec(height=7, memory_budget=budget)
+)
 d2, i2 = chunked.query(queries[:2000], k=10)
 assert np.allclose(d2, dists[:2000], rtol=1e-5)
-print(f"chunked mode (N=4): identical results, device holds "
-      f"{chunked.store.resident_bytes() / 1e6:.1f} MB vs "
-      f"{index.store.resident_bytes() / 1e6:.1f} MB resident")
+print(f"budget {budget / 1e6:.1f}MB -> plan: engine={chunked.engine_name} "
+      f"N={chunked.plan.n_chunks} chunks, identical results; device holds "
+      f"{chunked.resident_bytes() / 1e6:.1f}MB vs "
+      f"{index.resident_bytes() / 1e6:.1f}MB resident")
+
+# 5. the same door opens every other engine (multi-device forests, query
+#    ringing, baselines) — the registry is the repo's kNN catalog
+print("registered engines:",
+      {name: c.description for name, c in available_engines().items()})

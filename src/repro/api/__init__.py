@@ -1,0 +1,63 @@
+"""repro.api — the unified kNN front door.
+
+One index API over every execution strategy in the repo::
+
+    from repro.api import KNNIndex
+
+    index = KNNIndex.build(points)             # planner picks the engine
+    dists, idx = index.query(queries, k=10)    # exact kNN, any engine
+
+Layers (each importable on its own):
+
+  spec     ``IndexSpec`` (what you ask for), ``QueryResult`` + immutable
+           ``SearchStats`` (what you get back)
+  engine   ``Engine`` protocol, ``EngineCaps``, ``@register_engine`` registry
+  planner  ``plan(n, d, m, k, devices, memory_budget)`` — the paper's §3
+           device-memory constraint and §3.2 topology split as a cost model
+  engines  the registered strategies: brute, kdtree, host, chunked, jit,
+           sharded, forest, ring
+  index    the ``KNNIndex`` facade tying them together
+
+``knn_brute`` is re-exported as the ground-truth oracle (it is also the
+``brute`` engine); ``chunk_round_cache_size`` is a diagnostics hook for
+recompile accounting in benchmarks.  See ``docs/API.md`` for the mapping
+from paper concepts to engines.
+"""
+
+from repro.api.engine import (
+    Engine,
+    EngineBase,
+    EngineCaps,
+    available_engines,
+    get_engine,
+    register_engine,
+)
+from repro.api.planner import Plan, estimate_slab_bytes, plan
+from repro.api.spec import IndexSpec, QueryResult, SearchStats
+from repro.api.index import KNNIndex
+
+# Register the built-in engines (import side effect populates the registry).
+from repro.api import engines as _engines  # noqa: F401
+
+# Ground-truth oracle + diagnostics, re-exported so consumers need only
+# this facade.
+from repro.core.brute import knn_brute
+from repro.core.chunked_jit import chunk_round_cache_size
+
+__all__ = [
+    "KNNIndex",
+    "IndexSpec",
+    "QueryResult",
+    "SearchStats",
+    "Plan",
+    "plan",
+    "estimate_slab_bytes",
+    "Engine",
+    "EngineBase",
+    "EngineCaps",
+    "register_engine",
+    "get_engine",
+    "available_engines",
+    "knn_brute",
+    "chunk_round_cache_size",
+]

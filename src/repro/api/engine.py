@@ -1,0 +1,120 @@
+"""Engine protocol + registry: the extension point of ``repro.api``.
+
+An *engine* is one execution strategy for exact kNN.  Each declares its
+capabilities (``EngineCaps``) so the planner can select by constraint
+(out-of-core?  multi-device?) instead of by name, and implements two hooks:
+
+    build(points, spec, plan)  -> opaque state (None for build-free engines)
+    query(state, queries, k)   -> (dists f32[m,k], idx i64[m,k], SearchStats)
+
+plus a ``resident_bytes(plan)`` estimate — the device-memory term of the
+planner's cost model (paper §3's constraint made explicit).
+
+Registration is declarative::
+
+    @register_engine
+    class MyEngine(EngineBase):
+        name = "mine"
+        caps = EngineCaps(exact=True, out_of_core=False, multi_device=False)
+        ...
+
+which is how future engines (GPU Pallas leaf scans, async streaming,
+incremental insert) plug in without touching the facade or its call sites.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple, Type
+
+import numpy as np
+
+from repro.core.lazysearch import SearchStats
+
+__all__ = [
+    "Engine",
+    "EngineBase",
+    "EngineCaps",
+    "register_engine",
+    "get_engine",
+    "available_engines",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineCaps:
+    """Static capability declaration used by the planner."""
+
+    exact: bool = True          # results identical to brute force
+    out_of_core: bool = False   # leaf structure may exceed device memory
+    multi_device: bool = False  # uses >1 device
+    needs_build: bool = True    # has a build phase (tree construction)
+    stateful_query: bool = False  # query mutates state: one batch at a time
+    description: str = ""
+
+
+class EngineBase:
+    """Base class for registered engines (duck-typed; see module doc)."""
+
+    name: str = ""
+    caps: EngineCaps = EngineCaps()
+
+    def build(self, points: np.ndarray, spec, plan):
+        """Construct engine state for ``points``; return opaque state."""
+        raise NotImplementedError
+
+    def query(
+        self, state, queries: np.ndarray, k: int
+    ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
+        """Exact kNN of ``queries`` against the built state."""
+        raise NotImplementedError
+
+    def resident_bytes(self, plan, state=None) -> int:
+        """Device bytes the reference structure occupies under ``plan``
+        (per device).  The planner calls this with ``state=None`` (an
+        estimate, compared against the memory budget); the facade passes
+        the built state so engines that can MEASURE may override."""
+        return plan.slab_bytes
+
+
+# Engine is a structural alias: anything with .name/.caps/.build/.query.
+Engine = EngineBase
+
+_REGISTRY: Dict[str, EngineBase] = {}
+
+
+def register_engine(cls: Type[EngineBase]) -> Type[EngineBase]:
+    """Class decorator: instantiate and register under ``cls.name``."""
+    if not cls.name:
+        raise ValueError(f"{cls.__name__} must set a non-empty .name")
+    if cls.name in _REGISTRY:
+        raise ValueError(f"engine {cls.name!r} already registered")
+    _REGISTRY[cls.name] = cls()
+    return cls
+
+
+def get_engine(name: str) -> EngineBase:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown engine {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def available_engines(
+    *, exact: Optional[bool] = None, out_of_core: Optional[bool] = None,
+    multi_device: Optional[bool] = None,
+) -> Dict[str, EngineCaps]:
+    """Registered engines (optionally filtered by capability)."""
+    out = {}
+    for name, eng in sorted(_REGISTRY.items()):
+        c = eng.caps
+        if exact is not None and c.exact != exact:
+            continue
+        if out_of_core is not None and c.out_of_core != out_of_core:
+            continue
+        if multi_device is not None and c.multi_device != multi_device:
+            continue
+        out[name] = c
+    return out

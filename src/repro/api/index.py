@@ -1,0 +1,151 @@
+"""``KNNIndex``: the one front door for every kNN workload in this repo.
+
+    from repro.api import KNNIndex
+
+    index = KNNIndex.build(points)            # planner picks the engine
+    dists, idx = index.query(queries, k=10)   # QueryResult, tuple-unpackable
+
+Everything between "fits on one device" and "massive data sets on multiple
+devices" (the paper's continuum) is reached through these two calls: the
+planner inspects (n, d, device topology, memory budget) and selects a
+registered engine + parameters; pinning any ``IndexSpec`` field narrows its
+freedom, and ``spec.engine=`` removes it entirely.  Consumers (serving,
+launch CLI, examples, benchmarks) depend only on this module, so engines
+can evolve — or be added — without another call-site migration.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import numpy as np
+
+from repro.api.engine import EngineBase, get_engine
+from repro.api.planner import Plan, plan as make_plan
+from repro.api.spec import IndexSpec, QueryResult, SearchStats
+
+__all__ = ["KNNIndex"]
+
+
+class KNNIndex:
+    """A built kNN index: points + a planned engine + its opaque state."""
+
+    def __init__(
+        self, *, spec: IndexSpec, plan: Plan, engine: EngineBase, state,
+        n: int, d: int,
+    ):
+        self.spec = spec
+        self.plan = plan
+        self._engine = engine
+        self._state = state
+        self.n = n
+        self.d = d
+        self._last_stats: Optional[SearchStats] = None
+        # engines declaring stateful_query mutate queues/buffers/chunk
+        # slots during a query: one batch at a time per index.  Stateless
+        # engines (brute/jit/forest/ring/kdtree) run lock-free so
+        # concurrent serving callers are not serialized needlessly.
+        self._qlock = (
+            threading.Lock() if engine.caps.stateful_query else None
+        )
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def build(
+        cls, points: np.ndarray, spec: Optional[IndexSpec] = None, **overrides
+    ) -> "KNNIndex":
+        """Plan + build an index over ``points``.
+
+        ``spec`` (or keyword overrides for its fields) constrains the
+        planner; with neither, the engine and all parameters are chosen
+        from data shape, visible devices and memory budget alone.
+        """
+        spec = spec or IndexSpec()
+        if overrides:
+            spec = spec.replace(**overrides)
+        points = np.asarray(points, dtype=np.float32)
+        if points.ndim != 2:
+            raise ValueError(f"points must be [n, d], got {points.shape}")
+        n, d = points.shape
+        if spec.devices is None:
+            import jax
+
+            spec = spec.replace(devices=tuple(jax.devices()))
+        pl = make_plan(
+            n, d,
+            m=spec.m_hint,
+            k=spec.k_hint,
+            devices=spec.devices,
+            memory_budget=spec.memory_budget,
+            engine=spec.engine,
+            height=spec.height,
+            n_chunks=spec.n_chunks,
+            n_shards=spec.n_shards,
+            buffer_size=spec.buffer_size,
+            tile_q=spec.tile_q,
+            backend=spec.backend,
+        )
+        engine = get_engine(pl.engine)
+        state = engine.build(points, spec, pl)
+        return cls(spec=spec, plan=pl, engine=engine, state=state, n=n, d=d)
+
+    # ------------------------------------------------------------------
+    def query(self, queries: np.ndarray, k: Optional[int] = None) -> QueryResult:
+        """k nearest neighbors of every query row.
+
+        Returns a ``QueryResult`` (unpacks as ``(dists, idx)``); ``k``
+        defaults to the spec's ``k_hint``.
+        """
+        k = int(k) if k is not None else self.spec.k_hint
+        queries = np.asarray(queries, dtype=np.float32)
+        if queries.ndim != 2 or queries.shape[1] != self.d:
+            raise ValueError(
+                f"queries must be [m, {self.d}], got {queries.shape}"
+            )
+        if k > self.n:
+            raise ValueError(f"k={k} > n={self.n}")
+        if self._qlock is not None:
+            with self._qlock:
+                dists, idx, stats = self._engine.query(self._state, queries, k)
+        else:
+            dists, idx, stats = self._engine.query(self._state, queries, k)
+        self._last_stats = stats
+        return QueryResult(
+            dists=dists, idx=idx, stats=stats, engine=self.plan.engine, k=k
+        )
+
+    # ------------------------------------------------------------------
+    @property
+    def engine_name(self) -> str:
+        return self.plan.engine
+
+    @property
+    def height(self) -> int:
+        return self.plan.height
+
+    @property
+    def stats(self) -> SearchStats:
+        """Stats of the most recent ``query`` (immutable; empty before).
+
+        Only the tiny stats snapshot is retained — never the result arrays.
+        """
+        return self._last_stats if self._last_stats is not None else SearchStats()
+
+    def resident_bytes(self) -> int:
+        """Per-device bytes the reference structure occupies — measured
+        from the built state where the engine supports it, otherwise the
+        plan-time estimate the planner compared against ``memory_budget``
+        (one hook either way: ``Engine.resident_bytes``)."""
+        return self._engine.resident_bytes(self.plan, self._state)
+
+    def describe(self) -> str:
+        """Human-readable plan summary (engine, parameters, reasons)."""
+        pl = self.plan
+        lines = [
+            f"KNNIndex: n={self.n} d={self.d} engine={pl.engine} "
+            f"h={pl.height} n_chunks={pl.n_chunks} n_shards={pl.n_shards} "
+            f"B={pl.buffer_size} resident~{pl.resident_bytes / 1e6:.1f}MB",
+        ]
+        lines += [f"  - {r}" for r in pl.reasons]
+        return "\n".join(lines)

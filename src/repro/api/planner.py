@@ -1,0 +1,279 @@
+"""Topology/memory-aware query planner (the paper's §3 constraints as code).
+
+The paper's narrative — "use the device-resident workflow while the leaf
+structure fits, two streamed chunk buffers when it does not (§3), and split
+work across devices when there are several (§3.2)" — lives here as an
+explicit cost model instead of being implied by which entry point a caller
+happens to import:
+
+  * ``estimate_slab_bytes``   the device-memory term: the padded leaf
+    structure is ``2**h * leaf_pad * d_pad * 4`` bytes (what §3 says must
+    fit, or be chunked);
+  * ``plan``                  picks (engine, height, n_chunks, n_shards,
+    buffer_size) from (n, d, m, k, devices, memory_budget) and records WHY
+    in ``Plan.reasons`` — every decision is a testable string, not a code
+    path.
+
+Planning rules (in order):
+  1. an explicit ``engine=`` request is honored (parameters still filled);
+  2. tiny reference sets take ``brute`` — below ~2k points tree build +
+     traversal overhead exceeds one fused scan, and so does k ~ O(n);
+  3. >1 visible device => ``forest`` (per-shard buffer k-d trees, §3.2's
+     scale-out) when n splits evenly, else ``sharded`` (paper-faithful
+     query chunking, which tolerates any n);
+  4. a memory budget below the resident slab bytes => ``chunked`` with the
+     smallest N such that TWO chunk buffers fit (§3's double-buffered
+     streaming: resident = 2 * slab/N);
+  5. otherwise ``chunked`` with N=1 — the device-resident ICML'14 workflow.
+
+Height defaults to ``suggest_height`` but is clamped so the mean leaf still
+holds >= k points (the leaf-scan kernel selects k of leaf_pad candidates),
+and buffer capacity follows the paper's footnote 8: B = 2^(24-h) capped,
+fetch M = 10 B — the B/2 flush rule's inputs, now planned explicitly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+from repro.core.toptree import default_buffer_size, suggest_height
+
+__all__ = ["Plan", "plan", "estimate_slab_bytes", "BRUTE_N_MAX", "BRUTE_WORK_MAX"]
+
+# Below this reference-set size the tree cannot pay for itself on any
+# backend we target (one brute tile covers the whole set).
+BRUTE_N_MAX = 2048
+
+# Below this total distance-pair count (m * n) the whole job fits in a
+# couple of brute tiles — tree construction would dominate end-to-end time.
+BRUTE_WORK_MAX = 1 << 21
+
+_F32 = 4
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def estimate_slab_bytes(
+    n: int, d: int, height: int, *, leaf_pad_multiple: int = 8,
+    d_pad_multiple: int = 8,
+) -> int:
+    """Device bytes of the padded leaf structure at tree height ``height``.
+
+    Mirrors ``build_top_tree``'s padding: 2**h equal (±1) leaves of
+    ceil(n / 2**h) points, slab length rounded up to ``leaf_pad_multiple``,
+    feature dim rounded up to ``d_pad_multiple``.
+    """
+    n_leaves = 1 << height
+    leaf_pad = max(
+        _round_up(-(-n // n_leaves), leaf_pad_multiple), leaf_pad_multiple
+    )
+    d_pad = max(_round_up(d, d_pad_multiple), d_pad_multiple)
+    return n_leaves * leaf_pad * d_pad * _F32
+
+
+def _clamp_height(n: int, k: int, height: Optional[int]) -> Tuple[int, Tuple[str, ...]]:
+    reasons = ()
+    if height is not None:
+        return int(height), reasons
+    h = suggest_height(n)
+    # keep mean leaf >= k so one leaf scan can yield k candidates
+    while h > 1 and (n >> h) < max(2, k):
+        h -= 1
+        reasons = (f"height lowered to {h}: leaves must hold >= k={k} points",)
+    return h, reasons
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A fully-resolved execution plan (every engine parameter pinned)."""
+
+    engine: str
+    height: int
+    n: int = 0
+    d: int = 0
+    n_chunks: int = 1
+    n_shards: int = 1
+    n_devices: int = 1
+    buffer_size: int = 4096
+    fetch_m: int = 40960
+    tile_q: int = 128
+    backend: str = "auto"
+    slab_bytes: int = 0         # full leaf structure, one device
+    resident_bytes: int = 0     # per-device bytes actually held under plan
+    memory_budget: Optional[int] = None
+    reasons: Tuple[str, ...] = ()
+
+    def replace(self, **kw) -> "Plan":
+        return dataclasses.replace(self, **kw)
+
+
+def plan(
+    n: int,
+    d: int,
+    m: Optional[int] = None,
+    k: int = 10,
+    devices: Optional[Sequence[Any]] = None,
+    memory_budget: Optional[int] = None,
+    *,
+    engine: Optional[str] = None,
+    height: Optional[int] = None,
+    n_chunks: Optional[int] = None,
+    n_shards: Optional[int] = None,
+    buffer_size: Optional[int] = None,
+    tile_q: int = 128,
+    backend: str = "auto",
+) -> Plan:
+    """Pick an engine + parameters for (n, d) references and (m, k) queries.
+
+    ``devices`` is a sequence of devices (only its length and identity are
+    consulted, so tests may pass simulated device lists); ``None`` means the
+    process's visible ``jax.devices()``.  ``memory_budget`` is per-device
+    bytes available for the leaf structure; ``None`` means unconstrained.
+    """
+    if n < 1 or d < 1:
+        raise ValueError(f"need n >= 1, d >= 1; got n={n} d={d}")
+    if k > n:
+        raise ValueError(f"k={k} > n={n}")
+    if devices is None:
+        import jax
+
+        devices = jax.devices()
+    p = max(1, len(devices))
+    reasons: list = []
+
+    h, h_reasons = _clamp_height(n, k, height)
+    reasons.extend(h_reasons)
+    # paper footnote 8: B = 2^(24-h) (capped for CPU-scale sanity), M = 10B
+    b = (
+        int(buffer_size) if buffer_size is not None else default_buffer_size(h)
+    )
+    slab = estimate_slab_bytes(n, d, h)
+    base = dict(
+        height=h, n=n, d=d, n_devices=p, buffer_size=b, fetch_m=10 * b,
+        tile_q=tile_q, backend=backend, slab_bytes=slab,
+        memory_budget=memory_budget,
+    )
+
+    def chunks_for_budget() -> Tuple[int, str]:
+        if memory_budget is None or slab <= memory_budget:
+            return 1, "leaf structure fits device memory: device-resident (N=1)"
+        n_leaves = 1 << h
+        # two streamed chunk buffers must fit, at LEAF granularity: a
+        # chunk holds ceil(n_leaves/N) leaf slabs (ChunkedLeafStore), so
+        # floor-dividing bytes here would understate real residency
+        leaf_bytes = slab // n_leaves
+        c_max = memory_budget // max(1, 2 * leaf_bytes)  # leaves per chunk
+        if c_max >= 1:
+            nc = min(max(2, -(-n_leaves // c_max)), n_leaves)
+        else:
+            nc = n_leaves
+        resident = 2 * (-(-n_leaves // nc)) * leaf_bytes
+        note = (
+            f"slab {slab}B > budget {memory_budget}B: stream in N={nc} "
+            f"chunks (2 buffers resident = {resident}B)"
+        )
+        if resident > memory_budget:
+            note += " [budget below the 2-chunk floor; best effort]"
+        return nc, note
+
+    # pinning a tree parameter (height / n_chunks / buffer_size) is an
+    # implicit request for a tree engine; only unconstrained specs may
+    # short-circuit to brute
+    tree_requested = (
+        height is not None or n_chunks is not None or buffer_size is not None
+    )
+    small_job = (
+        n <= BRUTE_N_MAX
+        or k * 4 > n
+        or (m is not None and m * n <= BRUTE_WORK_MAX)
+    )
+    def resident_for(name: str, nc: int = 1, ns: int = 1) -> int:
+        """Per-device residency under a candidate engine — one source of
+        truth: the engine's own ``resident_bytes`` hook (slab fallback
+        only if the registry is unavailable, e.g. direct module import)."""
+        probe = Plan(
+            engine=name, n_chunks=nc, n_shards=ns, resident_bytes=slab,
+            reasons=(), **base
+        )
+        try:
+            from repro.api.engine import get_engine
+
+            return get_engine(name).resident_bytes(probe)
+        except KeyError:
+            return slab
+
+    # knn_brute keeps the whole padded reference set device-resident, so
+    # the shortcut is off the table when that alone would bust the budget
+    brute_fits = (
+        memory_budget is None or resident_for("brute") <= memory_budget
+    )
+    if engine is None:
+        if not tree_requested and small_job and brute_fits:
+            engine = "brute"
+            reasons.append(
+                f"n={n} <= {BRUTE_N_MAX}, k~O(n), or m*n <= "
+                f"{BRUTE_WORK_MAX}: one fused brute scan beats tree build "
+                "+ traversal"
+            )
+        elif p > 1:
+            # a caller-pinned shard count must itself divide n; otherwise
+            # the shard count IS the device count
+            shards = int(n_shards) if n_shards is not None else p
+            per_shard = slab // max(1, shards)
+            fits = memory_budget is None or per_shard <= memory_budget
+            # a pinned n_chunks > 1 is an out-of-core constraint forest's
+            # device-resident shards cannot honor — route to sharded
+            wants_chunks = n_chunks is not None and n_chunks > 1
+            if (
+                n % shards == 0 and (n // shards) >= max(2 * k, 2)
+                and fits and not wants_chunks
+            ):
+                engine = "forest"
+                reasons.append(
+                    f"{p} devices visible and n % {shards} == 0: per-shard "
+                    "buffer k-d trees + all-gather merge (paper §3.2 scale-out)"
+                )
+            else:
+                engine = "sharded"
+                if not fits:
+                    why = (
+                        f"per-shard slab {per_shard}B exceeds budget "
+                        f"{memory_budget}B (forest shards are device-resident)"
+                    )
+                elif wants_chunks:
+                    why = (
+                        f"pinned n_chunks={n_chunks} requires chunk "
+                        "streaming, which forest shards cannot do"
+                    )
+                else:
+                    why = f"n={n} does not split into {shards} equal shards"
+                reasons.append(
+                    f"{p} devices visible but {why}: paper-faithful query "
+                    "chunking over replicated trees"
+                )
+        else:
+            engine = "chunked"
+            reasons.append("1 device: chunk-streamed buffer k-d tree")
+
+    # the BufferKDTree tiers (host/chunked) and sharded hold the (full,
+    # replicated) leaf structure per device, so all honor the budget
+    # through chunk streaming — ONE place decides the chunk count
+    if engine in ("chunked", "host", "sharded"):
+        if n_chunks is None:
+            n_chunks, note = chunks_for_budget()
+            reasons.append(note)
+        else:
+            reasons.append(f"N={n_chunks} chunks pinned by caller")
+
+    nc = int(n_chunks) if n_chunks is not None else 1
+    ns = int(n_shards) if n_shards is not None else (
+        p if engine in ("forest", "sharded", "ring") else 1
+    )
+    return Plan(
+        engine=engine, n_chunks=nc, n_shards=ns,
+        resident_bytes=resident_for(engine, nc, ns),
+        reasons=tuple(reasons), **base
+    )

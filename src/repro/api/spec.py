@@ -1,0 +1,76 @@
+"""Value types of the ``repro.api`` front door.
+
+``IndexSpec`` is what a caller *asks for* (all fields optional — ``None``
+means "let the planner decide"), ``Plan`` (see ``planner.py``) is what the
+planner *decided*, and ``QueryResult`` is what a query *returns*: distances,
+ids and an immutable per-call ``SearchStats`` — stats are values attached to
+a result, never state mutated on the index.
+
+``QueryResult`` unpacks like the classic ``(dists, idx)`` tuple so migrated
+call sites keep their shape::
+
+    dists, idx = index.query(q, k=10)        # tuple-style
+    res = index.query(q, k=10)               # or keep the rich result
+    res.stats.points_scanned, res.engine
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.core.lazysearch import SearchStats
+
+__all__ = ["IndexSpec", "QueryResult", "SearchStats"]
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSpec:
+    """Declarative request for a kNN index.
+
+    Every field is a *constraint or hint*; unset fields are filled in by
+    ``planner.plan``.  Passing a fully-pinned spec reproduces any engine
+    configuration exactly (benchmarks do this); passing none lets the
+    topology/memory cost model choose.
+    """
+
+    engine: Optional[str] = None          # registry name; None => auto-plan
+    height: Optional[int] = None          # top-tree height h (2**h leaves)
+    n_chunks: Optional[int] = None        # out-of-core leaf-structure chunks
+    n_shards: Optional[int] = None        # multi-device reference shards
+    buffer_size: Optional[int] = None     # paper's B (leaf buffer slots)
+    tile_q: int = 128                     # work-unit query tile width
+    backend: str = "auto"                 # leaf-scan kernel backend
+    k_hint: int = 10                      # expected k (plan-time cost model)
+    m_hint: Optional[int] = None          # expected queries per batch
+    devices: Optional[Tuple[Any, ...]] = None   # None => jax.devices()
+    memory_budget: Optional[int] = None   # device bytes for the leaf structure
+
+    def replace(self, **kw) -> "IndexSpec":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryResult:
+    """One query batch's answer: ``dists`` are ascending Euclidean
+    f32[m, k]; ``idx`` are i64[m, k] into the caller's original ``points``
+    ordering (-1 = no neighbor); ``stats`` is the immutable per-call
+    ``SearchStats``."""
+
+    dists: np.ndarray
+    idx: np.ndarray
+    stats: SearchStats
+    engine: str
+    k: int
+
+    # tuple compatibility: ``dists, idx = index.query(...)``
+    def __iter__(self) -> Iterator[np.ndarray]:
+        return iter((self.dists, self.idx))
+
+    def __len__(self) -> int:
+        return 2
+
+    def __getitem__(self, i):
+        return (self.dists, self.idx)[i]

@@ -1,7 +1,18 @@
 """Buffer k-d tree core — the paper's primary contribution in JAX.
 
-Public API:
-  BufferKDTree      build + LazySearch kNN queries (chunked, multi-backend)
+NOTE: applications should use the ``repro.api`` front door::
+
+    from repro.api import KNNIndex
+    index = KNNIndex.build(points)          # planner picks the engine
+    dists, idx = index.query(queries, k=10)
+
+which wraps everything below (and the distributed engines) behind one
+``KNNIndex`` facade with a topology/memory-aware planner; see
+``docs/API.md``.  This package remains the *implementation* layer:
+
+  BufferKDTree      build + LazySearch kNN queries (the ``host`` and
+                    ``chunked`` engines; kept as a stable shim — its
+                    ``.stats`` is now an immutable per-call snapshot)
   build_top_tree    pointerless top tree construction
   knn_brute         exact tiled brute-force baseline/oracle
   knn_host_kdtree   classic (unbuffered) k-d tree CPU baseline

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Deque, List, Tuple
 
 import numpy as np
 
@@ -126,23 +126,35 @@ class LeafBuffers:
 
     ``should_flush`` is true when at least one buffer holds >= B/2 entries
     (paper line 11) or when forced (queues empty).
+
+    Fill counts live in a dense i32[n_leaves] array updated by one
+    ``np.bincount`` per insert, touching only the id range the batch
+    actually hit (the same numpy-slice design as ``QueryQueues``): no
+    per-leaf Python dict work on the hot path, and ``max_fill`` is a
+    running maximum — O(1) per ``should_flush`` check.
     """
 
     def __init__(self, n_leaves: int, capacity: int):
         self.capacity = int(capacity)
+        self.n_leaves = int(n_leaves)
         self._leaf: List[np.ndarray] = []
         self._query: List[np.ndarray] = []
-        self._fill: Dict[int, int] = {}
+        self._fill = np.zeros((self.n_leaves,), np.int32)
+        self._max_fill = 0
         self._total = 0
 
     def insert(self, leaf_ids: np.ndarray, query_ids: np.ndarray) -> None:
         if leaf_ids.size == 0:
             return
-        self._leaf.append(np.asarray(leaf_ids, np.int32))
+        leaf_ids = np.asarray(leaf_ids, np.int32)
+        self._leaf.append(leaf_ids)
         self._query.append(np.asarray(query_ids, np.int32))
-        uniq, cnt = np.unique(leaf_ids, return_counts=True)
-        for u, c in zip(uniq.tolist(), cnt.tolist()):
-            self._fill[u] = self._fill.get(u, 0) + c
+        cnt = np.bincount(leaf_ids)            # length = max id hit + 1
+        touched = self._fill[: cnt.size]
+        touched += cnt.astype(np.int32)
+        # fills only grow between drains, so the max over the touched
+        # prefix keeps the running max exact
+        self._max_fill = max(self._max_fill, int(touched.max()))
         self._total += int(leaf_ids.size)
 
     @property
@@ -151,17 +163,19 @@ class LeafBuffers:
 
     @property
     def max_fill(self) -> int:
-        return max(self._fill.values(), default=0)
+        return self._max_fill
 
     def should_flush(self, force: bool = False) -> bool:
         if self._total == 0:
             return False
-        return force or self.max_fill >= max(1, self.capacity // 2)
+        return force or self._max_fill >= max(1, self.capacity // 2)
 
     def drain(self) -> Tuple[np.ndarray, np.ndarray]:
         if self._total == 0:
             return np.zeros((0,), np.int32), np.zeros((0,), np.int32)
         leaf = np.concatenate(self._leaf)
         query = np.concatenate(self._query)
-        self._leaf, self._query, self._fill, self._total = [], [], {}, 0
+        self._leaf, self._query, self._total = [], [], 0
+        self._fill[:] = 0
+        self._max_fill = 0
         return leaf, query

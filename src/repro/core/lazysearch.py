@@ -47,14 +47,27 @@ from repro.core import traversal
 from repro.core.buffers import LeafBuffers, QueryQueues, build_work_plan
 from repro.core.chunked import ChunkedLeafStore
 from repro.core.chunked_jit import ChunkResidentEngine
-from repro.core.toptree import TopTree, build_top_tree, suggest_height
+from repro.core.toptree import (
+    TopTree,
+    build_top_tree,
+    default_buffer_size,
+    suggest_height,
+)
 from repro.kernels import ops as kops
 
 __all__ = ["BufferKDTree", "SearchStats", "PLAN_LADDER"]
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class SearchStats:
+    """Immutable per-call search statistics.
+
+    Every ``query`` produces a fresh instance (returned in the api layer's
+    ``QueryResult`` and readable via the ``BufferKDTree.stats`` property,
+    which reflects the most recent call) — stats are values, not state
+    mutated across calls.
+    """
+
     iterations: int = 0
     flushes: int = 0
     units_scanned: int = 0
@@ -62,6 +75,30 @@ class SearchStats:
     queries_advanced: int = 0
     chunk_rounds: int = 0
     plan_shapes: int = 0     # distinct padded plan widths seen (host engine)
+
+
+class _StatsBuilder:
+    """Mutable per-call accumulator; frozen into ``SearchStats`` at return."""
+
+    def __init__(self):
+        self.iterations = 0
+        self.flushes = 0
+        self.units_scanned = 0
+        self.points_scanned = 0
+        self.queries_advanced = 0
+        self.chunk_rounds = 0
+        self.plan_widths = set()
+
+    def freeze(self) -> SearchStats:
+        return SearchStats(
+            iterations=self.iterations,
+            flushes=self.flushes,
+            units_scanned=self.units_scanned,
+            points_scanned=self.points_scanned,
+            queries_advanced=self.queries_advanced,
+            chunk_rounds=self.chunk_rounds,
+            plan_shapes=len(self.plan_widths),
+        )
 
 
 # Fixed ladder of padded work-plan widths, shared across flushes, queries and
@@ -149,11 +186,17 @@ def _exit_leaf_batch(node: jnp.ndarray, fromc: jnp.ndarray, *, first_leaf_heap: 
 
 
 class BufferKDTree:
-    """User-facing buffer k-d tree (build + LazySearch queries).
+    """Buffer k-d tree implementation (build + LazySearch queries).
+
+    .. deprecated:: as a *public entry point*.  Applications should go
+       through ``repro.api.KNNIndex`` (the planner-backed facade wrapping
+       this class as the ``host``/``chunked`` engines); this class is kept
+       as a stable shim and as the engines' implementation.
 
     Example:
         index = BufferKDTree(points, height=9, n_chunks=3)
         dists, idx = index.query(queries, k=10)
+        index.stats          # immutable stats of the LAST query (property)
     """
 
     def __init__(
@@ -171,12 +214,23 @@ class BufferKDTree:
         engine: str = "chunked",
         engine_tile_q: Optional[int] = None,
         unit_block: int = 8,
+        tree: Optional[TopTree] = None,
     ):
         points = np.asarray(points, dtype=np.float32)
         n, d = points.shape
-        if height is None:
-            height = suggest_height(n)
-        self.tree: TopTree = build_top_tree(points, height)
+        if tree is not None:
+            # share a prebuilt top tree (multi-device replicas build the
+            # O(h n) median splits once, not once per device)
+            if tree.n != n or tree.d != d:
+                raise ValueError(
+                    f"prebuilt tree is for [{tree.n}, {tree.d}] points, "
+                    f"got [{n}, {d}]"
+                )
+            self.tree = tree
+        else:
+            if height is None:
+                height = suggest_height(n)
+            self.tree = build_top_tree(points, height)
         h = self.tree.height
         self.k_backend = backend
         self.tile_q = int(tile_q)
@@ -201,7 +255,7 @@ class BufferKDTree:
         )
 
         self.buffer_size = int(
-            buffer_size if buffer_size is not None else min(1 << max(1, 24 - h), 4096)
+            buffer_size if buffer_size is not None else default_buffer_size(h)
         )
         self.fetch_m = int(fetch_m) if fetch_m is not None else 10 * self.buffer_size
 
@@ -210,16 +264,13 @@ class BufferKDTree:
         self._split_val = jnp.asarray(self.tree.split_val)
         self._leaf_start_np = self.tree.leaf_start
         self._leaf_size_np = self.tree.leaf_sizes().astype(np.int32)
-        self.stats = SearchStats()
+        self._last_stats = SearchStats()
 
         resolved = kops.default_backend() if backend == "auto" else backend
-        # query-tile width for the fused engine: MXU wants the full 128-row
-        # tile; on the jnp/CPU path smaller tiles waste far less padding in
-        # sparse rounds (most units are partially filled)
         self.engine_tile_q = int(
             engine_tile_q
             if engine_tile_q is not None
-            else (self.tile_q if resolved.startswith("pallas") else min(self.tile_q, 16))
+            else kops.engine_tile_q(self.tile_q, resolved)
         )
         self._engine = ChunkResidentEngine(
             self.store,
@@ -241,6 +292,11 @@ class BufferKDTree:
     def d(self) -> int:
         return self.tree.d
 
+    @property
+    def stats(self) -> SearchStats:
+        """Stats of the most recent ``query`` call (immutable snapshot)."""
+        return self._last_stats
+
     def _scan_units(
         self,
         dev_slab,            # [chunk_leaves, L_pad, d_pad] device buffer
@@ -251,12 +307,12 @@ class BufferKDTree:
         knn_d: jnp.ndarray,
         knn_i: jnp.ndarray,
         k: int,
+        sb: _StatsBuilder,
     ):
         """Run the leaf-scan kernel for one chunk's work units + merge."""
         w = unit_leaf.shape[0]
         wp = _plan_pad(w)
-        self._plan_widths.add((wp, unit_q.shape[1]))
-        self.stats.plan_shapes = len(self._plan_widths)
+        sb.plan_widths.add((wp, unit_q.shape[1]))
         tq = unit_q.shape[1]
         m = queries_pad.shape[0] - 1
 
@@ -284,8 +340,8 @@ class BufferKDTree:
             jnp.asarray(self._leaf_size_np[ul]),
             k=k,
         )
-        self.stats.units_scanned += int(w)
-        self.stats.points_scanned += int(w) * dev_slab.shape[1]
+        sb.units_scanned += int(w)
+        sb.points_scanned += int(w) * dev_slab.shape[1]
         return knn_d, knn_i
 
     # ------------------------------------------------------------------
@@ -305,8 +361,7 @@ class BufferKDTree:
             raise ValueError(f"query dim {d} != reference dim {self.d}")
         if k > self.n:
             raise ValueError(f"k={k} > n={self.n}")
-        self.stats = SearchStats()
-        self._plan_widths = set()
+        sb = _StatsBuilder()
         first_leaf = self.tree.first_leaf_heap
         tq = self.tile_q
 
@@ -317,14 +372,13 @@ class BufferKDTree:
             _d2, gi, info = self._engine.run(
                 qpad_m, k, self.engine_tile_q, self.buffer_size
             )
-            self.stats.iterations = info["rounds"]
-            self.stats.flushes = info["rounds"]
-            self.stats.chunk_rounds = info["chunk_rounds"]
-            self.stats.units_scanned = info["units"]
-            self.stats.points_scanned = (
-                info["units"] * self.store.host.shape[1]
-            )
-            self.stats.queries_advanced = info["rounds"] * m
+            sb.iterations = info["rounds"]
+            sb.flushes = info["rounds"]
+            sb.chunk_rounds = info["chunk_rounds"]
+            sb.units_scanned = info["units"]
+            sb.points_scanned = info["units"] * self.store.host.shape[1]
+            sb.queries_advanced = info["rounds"] * m
+            self._last_stats = sb.freeze()
             return self._finalize(gi, queries)
 
         qpad = jnp.zeros((m + 1, self.d_pad), jnp.float32)
@@ -367,8 +421,8 @@ class BufferKDTree:
                 fromc[idx] = np.asarray(nf)[:mm]
                 live = leaf >= 0
                 buffers.insert(leaf[live], idx[live])
-                self.stats.iterations += 1
-                self.stats.queries_advanced += int(mm)
+                sb.iterations += 1
+                sb.queries_advanced += int(mm)
                 progressed = True
 
             force = queues.empty
@@ -389,8 +443,9 @@ class BufferKDTree:
                         knn_d,
                         knn_i,
                         k,
+                        sb,
                     )
-                    self.stats.chunk_rounds += 1
+                    sb.chunk_rounds += 1
                 # Re-insert processed queries (their traversal resumes by
                 # exiting the just-scanned leaf).
                 uniq_q = np.unique(bq)
@@ -402,7 +457,7 @@ class BufferKDTree:
                 node[uniq_q] = np.asarray(en)
                 fromc[uniq_q] = np.asarray(ef)
                 queues.push_reinsert(uniq_q)
-                self.stats.flushes += 1
+                sb.flushes += 1
                 progressed = True
 
             if queues.empty and buffers.total == 0:
@@ -410,6 +465,7 @@ class BufferKDTree:
             if not progressed:  # pragma: no cover - safety valve
                 raise RuntimeError("LazySearch made no progress (engine bug)")
 
+        self._last_stats = sb.freeze()
         gi = np.asarray(knn_i[:m])
         return self._finalize(gi, queries)
 

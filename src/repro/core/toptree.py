@@ -25,7 +25,7 @@ from typing import Optional
 
 import numpy as np
 
-__all__ = ["TopTree", "build_top_tree"]
+__all__ = ["TopTree", "build_top_tree", "default_buffer_size", "suggest_height"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -184,6 +184,14 @@ def build_top_tree(
         points_padded=padded,
         leaf_pad=leaf_pad,
     )
+
+
+def default_buffer_size(height: int, cap: int = 4096) -> int:
+    """Paper footnote 8: leaf-buffer capacity B = 2^(24-h), capped so
+    CPU-scale runs stay sane (the paper notes exact values "did not have a
+    significant influence").  The single source for both ``BufferKDTree``
+    and the ``repro.api`` planner."""
+    return min(1 << max(1, 24 - height), cap)
 
 
 def suggest_height(n: int, target_leaf: int = 4096, max_height: int = 20) -> int:

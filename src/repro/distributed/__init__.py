@@ -2,6 +2,12 @@
 
 from repro.distributed.ring_knn import ring_knn_brute
 from repro.distributed.forest import forest_knn, build_forest
-from repro.distributed.sharded import multi_device_query
+from repro.distributed.sharded import MultiDeviceTrees, multi_device_query
 
-__all__ = ["ring_knn_brute", "forest_knn", "build_forest", "multi_device_query"]
+__all__ = [
+    "ring_knn_brute",
+    "forest_knn",
+    "build_forest",
+    "MultiDeviceTrees",
+    "multi_device_query",
+]

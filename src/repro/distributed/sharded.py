@@ -14,6 +14,7 @@ is reproduced by ``benchmarks/fig4_multidevice.py`` using host "devices".
 
 from __future__ import annotations
 
+import threading
 from concurrent.futures import ThreadPoolExecutor
 from typing import List, Optional, Tuple
 
@@ -22,7 +23,105 @@ import numpy as np
 
 from repro.core.lazysearch import BufferKDTree
 
-__all__ = ["multi_device_query"]
+__all__ = ["MultiDeviceTrees", "multi_device_query"]
+
+
+class MultiDeviceTrees:
+    """One ``BufferKDTree`` engine per device, built once, queried many times.
+
+    This is the paper's multi-GPU deployment as persistent state (the
+    ``sharded`` engine of ``repro.api``): the host top tree + leaf slabs are
+    shared, each device holds its own replica/chunk buffers, and every query
+    batch is split into contiguous "big" chunks, one per device.
+    """
+
+    def __init__(
+        self,
+        points: np.ndarray,
+        *,
+        devices: Optional[List[jax.Device]] = None,
+        height: Optional[int] = None,
+        n_chunks: int = 1,
+        backend: str = "auto",
+        tile_q: int = 128,
+        buffer_size: Optional[int] = None,
+    ):
+        self.devices = list(devices) if devices is not None else jax.devices()
+        self.active: List[int] = []   # engines used by the last query
+        # one batch at a time: the per-device BufferKDTree engines and
+        # their chunk stores are stateful during a query, so concurrent
+        # callers of a PERSISTENT instance must serialize (the old one-shot
+        # multi_device_query was trivially isolated; this restores that)
+        self._lock = threading.Lock()
+        # build the host top tree + leaf slabs ONCE; every device engine
+        # shares it and only materializes its own device-side buffers
+        first = BufferKDTree(
+            points,
+            height=height,
+            n_chunks=n_chunks,
+            backend=backend,
+            tile_q=tile_q,
+            buffer_size=buffer_size,
+            device=self.devices[0],
+        )
+        self.engines = [first] + [
+            BufferKDTree(
+                points,
+                n_chunks=n_chunks,
+                backend=backend,
+                tile_q=tile_q,
+                buffer_size=buffer_size,
+                device=dev,
+                tree=first.tree,
+            )
+            for dev in self.devices[1:]
+        ]
+
+    @property
+    def tree(self):
+        return self.engines[0].tree
+
+    def resident_bytes(self) -> int:
+        """Per-device leaf-structure bytes (each device holds one store)."""
+        return self.engines[0].store.resident_bytes()
+
+    def query(
+        self, queries: np.ndarray, k: int
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        d, i, _, _ = self.query_with_active(queries, k)
+        return d, i
+
+    def query_with_active(
+        self, queries: np.ndarray, k: int
+    ) -> Tuple[np.ndarray, np.ndarray, List[int], list]:
+        """Like ``query`` but also returns which engines received a slice
+        and their per-call stats snapshots, captured under the lock (only
+        engines that ran contribute to this batch — an idle engine's
+        ``.stats`` is stale, and a later batch would overwrite it)."""
+        with self._lock:
+            n_dev = len(self.engines)
+            m = queries.shape[0]
+            # "big" contiguous chunks, one per device (paper: uniform
+            # distribution)
+            bounds = np.ceil(np.arange(n_dev + 1) * m / n_dev).astype(np.int64)
+            out_d = np.empty((m, k), np.float32)
+            out_i = np.empty((m, k), np.int64)
+            active = [s for s in range(n_dev) if bounds[s + 1] > bounds[s]]
+            self.active = active
+
+            def run(s: int):
+                lo, hi = int(bounds[s]), int(bounds[s + 1])
+                if hi > lo:
+                    d, i = self.engines[s].query(queries[lo:hi], k=k)
+                    out_d[lo:hi], out_i[lo:hi] = d, i
+
+            # Thread-per-device so each device's dispatch queue stays busy
+            # (the python work is tiny; jitted phases release the GIL on
+            # dispatch).
+            with ThreadPoolExecutor(max_workers=n_dev) as ex:
+                list(ex.map(run, range(n_dev)))
+            stats = [self.engines[s].stats for s in active]
+            return out_d, out_i, active, stats
 
 
 def multi_device_query(
@@ -37,40 +136,14 @@ def multi_device_query(
     tile_q: int = 128,
     buffer_size: Optional[int] = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
-    """kNN with query chunks distributed over ``devices`` (paper Fig. 4).
+    """One-shot kNN with query chunks over ``devices`` (paper Fig. 4).
 
-    Returns (dists f32[m, k], idx i64[m, k]).
+    Returns (dists f32[m, k], idx i64[m, k]).  Builds the per-device
+    engines, queries once, and discards them; hold a ``MultiDeviceTrees``
+    (or a ``repro.api.KNNIndex``) to amortize the build.
     """
-    devices = devices or jax.devices()
-    n_dev = len(devices)
-    m = queries.shape[0]
-    # "big" contiguous chunks, one per device (paper: uniform distribution)
-    bounds = np.ceil(np.arange(n_dev + 1) * m / n_dev).astype(np.int64)
-
-    engines = [
-        BufferKDTree(
-            points,
-            height=height,
-            n_chunks=n_chunks,
-            backend=backend,
-            tile_q=tile_q,
-            buffer_size=buffer_size,
-            device=dev,
-        )
-        for dev in devices
-    ]
-
-    out_d = np.empty((m, k), np.float32)
-    out_i = np.empty((m, k), np.int64)
-
-    def run(s: int):
-        lo, hi = int(bounds[s]), int(bounds[s + 1])
-        if hi > lo:
-            d, i = engines[s].query(queries[lo:hi], k=k)
-            out_d[lo:hi], out_i[lo:hi] = d, i
-
-    # Thread-per-device so each device's dispatch queue stays busy (the
-    # python work is tiny; jitted phases release the GIL on dispatch).
-    with ThreadPoolExecutor(max_workers=n_dev) as ex:
-        list(ex.map(run, range(n_dev)))
-    return out_d, out_i
+    mdt = MultiDeviceTrees(
+        points, devices=devices, height=height, n_chunks=n_chunks,
+        backend=backend, tile_q=tile_q, buffer_size=buffer_size,
+    )
+    return mdt.query(queries, k)

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels import knn_scan as _knn_scan
 
-__all__ = ["leaf_scan", "pad_dim", "PAD_COORD", "INVALID_DIST"]
+__all__ = ["leaf_scan", "pad_dim", "engine_tile_q", "PAD_COORD", "INVALID_DIST"]
 
 PAD_COORD = _ref.PAD_COORD
 INVALID_DIST = _ref.INVALID_DIST
@@ -26,6 +26,15 @@ Backend = Literal["auto", "pallas", "pallas_interpret", "ref"]
 
 def default_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def engine_tile_q(tile_q: int, backend: str = "auto") -> int:
+    """Query-tile width for the fused engines: MXU wants the full 128-row
+    tile; on the jnp/CPU path smaller tiles waste far less padding in
+    sparse rounds (most work units are partially filled).  The ONE source
+    for this heuristic (BufferKDTree and the api engines both use it)."""
+    resolved = default_backend() if backend == "auto" else backend
+    return tile_q if resolved.startswith("pallas") else min(tile_q, 16)
 
 
 def leaf_scan(

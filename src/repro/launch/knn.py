@@ -1,11 +1,15 @@
 """kNN service launcher — the paper's own workload as a server.
 
-Builds a buffer k-d tree over a reference catalog and answers batched kNN
-queries (optionally with chunked leaf streaming, the paper's §3 mode).
+Builds a ``repro.api.KNNIndex`` over a reference catalog and answers batched
+kNN queries.  With no flags the planner picks the engine from data shape,
+visible devices and (optionally simulated) memory budget; every plan
+decision is printed with its reason.
 
 Example:
   PYTHONPATH=src python -m repro.launch.knn --n 100000 --m 10000 --d 10 \\
       --k 10 --chunks 3
+  PYTHONPATH=src python -m repro.launch.knn --n 100000 --engine forest
+  PYTHONPATH=src python -m repro.launch.knn --n 100000 --memory-budget 4000000
 """
 
 from __future__ import annotations
@@ -15,7 +19,7 @@ import time
 
 import numpy as np
 
-from repro.core import BufferKDTree, knn_brute
+from repro.api import IndexSpec, KNNIndex, knn_brute
 from repro.data.pipeline import PointCloud
 
 
@@ -26,7 +30,11 @@ def main(argv=None):
     ap.add_argument("--d", type=int, default=10)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--height", type=int, default=0, help="0 = auto")
-    ap.add_argument("--chunks", type=int, default=1)
+    ap.add_argument("--chunks", type=int, default=0, help="0 = auto")
+    ap.add_argument("--engine", type=str, default=None,
+                    help="registry engine name; default = planner's choice")
+    ap.add_argument("--memory-budget", type=int, default=0,
+                    help="device bytes for the leaf structure (0 = unlimited)")
     ap.add_argument("--verify", type=int, default=256,
                     help="verify this many queries against brute force")
     ap.add_argument("--seed", type=int, default=0)
@@ -36,23 +44,36 @@ def main(argv=None):
     pts = pc.points()
     q = pc.queries(args.m)
 
+    spec = IndexSpec(
+        engine=args.engine,
+        height=args.height or None,
+        n_chunks=args.chunks or None,
+        memory_budget=args.memory_budget or None,
+        k_hint=args.k,
+        m_hint=args.m,
+    )
     t0 = time.time()
-    idx = BufferKDTree(pts, height=args.height or None, n_chunks=args.chunks)
+    idx = KNNIndex.build(pts, spec=spec)
     t_build = time.time() - t0
+    print(idx.describe())
     t0 = time.time()
-    dd, di = idx.query(q, k=args.k)
+    res = idx.query(q, k=args.k)
     t_query = time.time() - t0
     print(f"[knn] n={args.n} m={args.m} d={args.d} k={args.k} "
-          f"chunks={args.chunks} h={idx.tree.height}")
-    print(f"[knn] train {t_build:.2f}s  test {t_query:.2f}s  "
-          f"({args.m / t_query:.0f} q/s)  "
-          f"scanned {idx.stats.points_scanned / (args.m * args.n):.3%} of brute")
+          f"engine={idx.engine_name} chunks={idx.plan.n_chunks} "
+          f"h={idx.height}")
+    line = (f"[knn] train {t_build:.2f}s  test {t_query:.2f}s  "
+            f"({args.m / t_query:.0f} q/s)")
+    if res.stats.points_scanned:   # not every engine reports scan volume
+        scanned = res.stats.points_scanned / max(1, args.m * args.n)
+        line += f"  scanned {scanned:.3%} of brute"
+    print(line)
 
     if args.verify:
         v = min(args.verify, args.m)
         bd, bi = knn_brute(q[:v], pts, args.k)
-        ok = np.allclose(dd[:v], bd, rtol=1e-4, atol=1e-4)
-        recall = float((di[:v] == bi).mean())
+        ok = np.allclose(res.dists[:v], bd, rtol=1e-4, atol=1e-4)
+        recall = float((res.idx[:v] == bi).mean())
         print(f"[knn] verify: dists_ok={ok} recall@{args.k}={recall:.4f}")
 
 

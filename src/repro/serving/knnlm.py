@@ -14,8 +14,10 @@ reduced by a fixed random orthogonal-ish projection to ``proj_dim`` before
 indexing — matching deployed kNN-LM practice (PCA/OPQ) and keeping the
 reproduction inside the technique's operating envelope.
 
-Querying batches through LazySearch — the exact Alg. 1 engine — so the
-serving path exercises chunked leaf streaming and the Pallas kernel.
+Retrieval goes through the ``repro.api`` front door (``KNNIndex``): the
+serving path states its constraints in an ``IndexSpec`` and the planner
+picks the engine — chunked leaf streaming, multi-device forests and future
+engines all arrive here without touching this file.
 """
 
 from __future__ import annotations
@@ -26,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.lazysearch import BufferKDTree
+from repro.api import IndexSpec, KNNIndex
 from repro.models.model import LanguageModel
 
 __all__ = ["KNNLM"]
@@ -43,7 +45,8 @@ class KNNLM:
         lam: float = 0.25,
         temperature: float = 1.0,
         tree_height: Optional[int] = None,
-        n_chunks: int = 1,
+        n_chunks: Optional[int] = None,
+        index_spec: Optional[IndexSpec] = None,
         seed: int = 0,
     ):
         self.lm = lm
@@ -52,14 +55,20 @@ class KNNLM:
         self.lam = lam
         self.temp = temperature
         self.proj_dim = proj_dim
-        self.tree_height = tree_height
-        self.n_chunks = n_chunks
+        # legacy kwargs override the spec only when actually supplied
+        spec = index_spec or IndexSpec()
+        overrides = {"k_hint": k}
+        if tree_height is not None:
+            overrides["height"] = tree_height
+        if n_chunks is not None:
+            overrides["n_chunks"] = n_chunks
+        self.index_spec = spec.replace(**overrides)
         rng = np.random.default_rng(seed)
         w = rng.normal(size=(lm.cfg.d_model, proj_dim)).astype(np.float32)
         # column-orthonormalized projection (QR) => distance-friendlier
         q, _ = np.linalg.qr(w)
         self.proj = q.astype(np.float32)
-        self.index: Optional[BufferKDTree] = None
+        self.index: Optional[KNNIndex] = None
         self.values: Optional[np.ndarray] = None
         self._hidden = jax.jit(self._hidden_fn)
 
@@ -89,9 +98,7 @@ class KNNLM:
         ctx, nxt = tokens[:, :-1], tokens[:, 1:]
         keys = self.embed_contexts(ctx)
         self.values = nxt.reshape(-1).astype(np.int64)
-        self.index = BufferKDTree(
-            keys, height=self.tree_height, n_chunks=self.n_chunks
-        )
+        self.index = KNNIndex.build(keys, spec=self.index_spec)
 
     # ------------------------------------------------------------------
     def next_token_probs(self, tokens: np.ndarray) -> np.ndarray:

@@ -1,0 +1,377 @@
+"""repro.api: engine parity, planner cost model, facade behavior.
+
+The parity suite is the registry's contract: every registered engine must be
+exact vs ``knn_brute`` on shared shapes, including the awkward ones — k
+larger than some leaves, d not a multiple of the pad width, m smaller than
+one query tile.  Planner tests pin the cost model (memory budget => chunk
+count, device count => forest); the multi-device auto-plan runs in a
+subprocess with forced host devices, like ``test_distributed.py``.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    IndexSpec,
+    KNNIndex,
+    QueryResult,
+    SearchStats,
+    available_engines,
+    estimate_slab_bytes,
+    get_engine,
+    knn_brute,
+    plan,
+)
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ALL_ENGINES = sorted(available_engines())
+
+# (n, m, d, k, height) — shapes chosen to hit the contract's edge cases.
+PARITY_SHAPES = [
+    # baseline: everything comfortable
+    pytest.param(4000, 300, 8, 10, 4, id="baseline"),
+    # k > leaf size: h=6 over 700 pts => leaves of ~10-11, k=12 exceeds
+    # most leaves (but not leaf_pad), so queries must merge across leaves
+    pytest.param(700, 64, 4, 12, 6, id="k_gt_leaf"),
+    # d=5: not a multiple of the kernel's 8-wide feature pad
+    pytest.param(2500, 128, 5, 7, 3, id="d_odd"),
+    # m=17 < tile_q and not a multiple of anything
+    pytest.param(3000, 17, 8, 5, 4, id="m_lt_tile"),
+]
+
+
+def _data(n, m, d, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(n, d)).astype(np.float32),
+            rng.normal(size=(m, d)).astype(np.float32))
+
+
+class TestEngineParity:
+    @pytest.mark.parametrize("engine", ALL_ENGINES)
+    @pytest.mark.parametrize("n,m,d,k,height", PARITY_SHAPES)
+    def test_exact_vs_brute(self, engine, n, m, d, k, height):
+        pts, q = _data(n, m, d, seed=hash((n, m, d)) % 1000)
+        idx = KNNIndex.build(
+            pts, spec=IndexSpec(engine=engine, height=height, k_hint=k,
+                                tile_q=64)
+        )
+        res = idx.query(q, k=k)
+        bd, bi = knn_brute(q, pts, k)
+        np.testing.assert_allclose(res.dists, bd, rtol=1e-4, atol=1e-4)
+        assert (res.idx == bi).mean() > 0.999  # ties may permute
+        assert res.idx.dtype == np.int64
+        assert res.engine == engine
+
+    @pytest.mark.parametrize("engine", ALL_ENGINES)
+    def test_tuple_unpacking_back_compat(self, engine):
+        pts, q = _data(500, 20, 6, seed=3)
+        idx = KNNIndex.build(pts, spec=IndexSpec(engine=engine, height=2))
+        dists, ids = idx.query(q, k=3)
+        bd, _ = knn_brute(q, pts, 3)
+        np.testing.assert_allclose(dists, bd, rtol=1e-4, atol=1e-4)
+
+    def test_capabilities_declared(self):
+        caps = available_engines()
+        for name in ("brute", "host", "chunked", "forest", "ring"):
+            assert name in caps, f"issue-mandated engine {name} missing"
+        assert all(c.exact for c in caps.values())
+        assert caps["chunked"].out_of_core
+        assert caps["forest"].multi_device and caps["ring"].multi_device
+        assert not caps["brute"].needs_build
+
+    def test_unknown_engine_rejected(self):
+        with pytest.raises(KeyError, match="unknown engine"):
+            get_engine("definitely_not_registered")
+
+
+class TestPlanner:
+    def test_memory_budget_drives_chunk_count(self):
+        n, d = 200_000, 10
+        slab = estimate_slab_bytes(n, d, height=plan(n, d).height)
+        # budget below the slab => chunked with N > 1 and two buffers fitting
+        budget = slab // 3
+        p = plan(n, d, k=10, devices=[object()], memory_budget=budget)
+        assert p.engine == "chunked"
+        assert p.n_chunks > 1
+        # resident estimate uses CEIL leaves-per-chunk (what the store
+        # actually allocates) and must satisfy the budget
+        assert p.resident_bytes <= budget
+        assert any("chunk" in r for r in p.reasons)
+        # generous budget => device-resident N=1
+        p1 = plan(n, d, k=10, devices=[object()], memory_budget=slab * 2)
+        assert (p1.engine, p1.n_chunks) == ("chunked", 1)
+
+    def test_device_count_drives_forest(self):
+        p = plan(100_000, 10, k=10, devices=[object()] * 4)
+        assert p.engine == "forest"
+        assert p.n_shards == 4
+        # uneven n cannot shard evenly -> paper-style query chunking
+        p2 = plan(100_001, 10, k=10, devices=[object()] * 4)
+        assert p2.engine == "sharded"
+
+    def test_tiny_n_takes_brute(self):
+        p = plan(1000, 8, k=5, devices=[object()])
+        assert p.engine == "brute"
+        # pinning a tree parameter opts out of the brute shortcut
+        p2 = plan(1000, 8, k=5, devices=[object()], height=3)
+        assert p2.engine != "brute"
+
+    def test_small_query_batch_takes_brute(self):
+        # m*n below the crossover: tree construction would dominate
+        p = plan(50_000, 8, m=16, k=5, devices=[object()])
+        assert p.engine == "brute"
+        # same n with a big batch amortizes the build
+        p2 = plan(50_000, 8, m=50_000, k=5, devices=[object()])
+        assert p2.engine == "chunked"
+
+    def test_multi_device_budget_falls_back_to_sharded_chunking(self):
+        n, d = 100_000, 10
+        h = plan(n, d, devices=[object()] * 4).height
+        per_shard = estimate_slab_bytes(n, d, h) // 4
+        # budget below the per-shard slab: forest's device-resident shards
+        # cannot fit -> sharded replicas with chunk streaming
+        p = plan(n, d, k=10, devices=[object()] * 4,
+                 memory_budget=per_shard // 2)
+        assert p.engine == "sharded"
+        assert p.n_chunks > 1
+        assert any("budget" in r for r in p.reasons)
+
+    def test_pinned_host_engine_honors_budget(self):
+        n, d = 200_000, 10
+        h = plan(n, d, devices=[object()]).height
+        budget = estimate_slab_bytes(n, d, h) // 3
+        p = plan(n, d, devices=[object()], engine="host",
+                 memory_budget=budget)
+        assert p.n_chunks > 1
+        assert p.resident_bytes <= budget
+
+    def test_pinned_chunks_on_multi_device_routes_to_sharded(self):
+        # forest shards are device-resident: an explicit out-of-core pin
+        # must not be silently dropped
+        p = plan(100_000, 10, k=10, devices=[object()] * 4, n_chunks=4)
+        assert p.engine == "sharded"
+        assert p.n_chunks == 4
+        assert any("chunk" in r for r in p.reasons)
+
+    def test_pinned_uneven_n_shards_falls_back_to_sharded(self):
+        # the promised fallback must hold for caller-pinned shard counts
+        # too, not just the device count
+        p = plan(16384, 10, k=10, devices=[object()] * 4, n_shards=3)
+        assert p.engine == "sharded"
+        p2 = plan(16383, 10, k=10, devices=[object()] * 3, n_shards=3)
+        assert p2.engine == "forest"  # 16383 = 3 * 5461 divides evenly
+
+    def test_brute_shortcut_respects_budget(self):
+        # small batch over a large set would take brute, but brute keeps the
+        # whole padded reference set resident — budget forbids it
+        p = plan(50_000, 8, m=16, k=5, devices=[object()],
+                 memory_budget=500_000)
+        assert p.engine == "chunked"
+        assert p.resident_bytes <= 500_000
+
+    def test_pinned_n_chunks_reason_is_honest(self):
+        p = plan(50_000, 8, m=50_000, devices=[object()], n_chunks=8)
+        assert p.n_chunks == 8
+        assert any("pinned by caller" in r for r in p.reasons)
+        assert not any("device-resident (N=1)" in r for r in p.reasons)
+
+    def test_resident_bytes_single_source(self):
+        # Plan.resident_bytes and the engine hook agree (one cost model)
+        from repro.api import get_engine
+
+        for eng in ("brute", "kdtree", "chunked", "forest", "ring"):
+            p = plan(40_000, 10, devices=[object()] * 2, engine=eng)
+            assert p.resident_bytes == get_engine(eng).resident_bytes(p)
+        assert plan(40_000, 10, devices=[object()], engine="kdtree").resident_bytes == 0
+
+    def test_height_clamped_so_leaves_hold_k(self):
+        p = plan(5000, 8, k=64, devices=[object()], n_chunks=1)
+        assert (5000 >> p.height) >= 64
+
+    def test_buffer_size_follows_footnote8(self):
+        p = plan(300_000, 10, devices=[object()])
+        assert p.buffer_size == min(1 << (24 - p.height), 4096)
+        assert p.fetch_m == 10 * p.buffer_size
+
+    def test_explicit_engine_honored(self):
+        p = plan(50_000, 10, devices=[object()] * 4, engine="ring")
+        assert p.engine == "ring" and p.n_shards == 4
+
+    def test_k_gt_n_rejected(self):
+        with pytest.raises(ValueError, match="k="):
+            plan(10, 4, k=11)
+
+
+class TestKNNIndexFacade:
+    def test_auto_plan_small_is_brute_and_exact(self):
+        pts, q = _data(1500, 40, 6, seed=5)
+        idx = KNNIndex.build(pts)
+        assert idx.engine_name == "brute"
+        res = idx.query(q, k=4)
+        bd, bi = knn_brute(q, pts, 4)
+        np.testing.assert_allclose(res.dists, bd, rtol=1e-4, atol=1e-4)
+
+    def test_auto_plan_memory_budget_chunked_and_exact(self):
+        pts, q = _data(30_000, 100, 8, seed=6)
+        full = KNNIndex.build(pts)
+        budget = full.resident_bytes() // 4
+        idx = KNNIndex.build(pts, memory_budget=budget)
+        assert idx.engine_name == "chunked"
+        assert idx.plan.n_chunks > 1
+        assert idx.resident_bytes() < full.resident_bytes()
+        res = idx.query(q, k=10)
+        bd, _ = knn_brute(q, pts, 10)
+        np.testing.assert_allclose(res.dists, bd, rtol=1e-4, atol=1e-4)
+
+    def test_sharded_stats_exclude_idle_devices(self):
+        # m < n_devices leaves some engines idle; their stale .stats must
+        # not leak into the batch's aggregate (repeat the one in-process
+        # device to get a 3-engine state)
+        import jax
+
+        from repro.distributed.sharded import MultiDeviceTrees
+
+        pts, q = _data(3000, 40, 6, seed=13)
+        eng = get_engine("sharded")
+        state = MultiDeviceTrees(pts, height=3, devices=jax.devices() * 3)
+        _, _, s_big = eng.query(state, q, 4)        # all 3 engines run
+        _, _, s_tiny = eng.query(state, q[:1], 4)   # only engine 0 runs
+        assert state.active == [0]
+        assert s_tiny.points_scanned < s_big.points_scanned
+
+    def test_chunked_resident_estimate_matches_store(self):
+        # uneven leaves-per-chunk (16 leaves / 7 chunks -> ceil = 3): the
+        # plan's estimate must equal what ChunkedLeafStore really allocates
+        pts, _ = _data(1600, 1, 8, seed=20)
+        idx = KNNIndex.build(pts, engine="chunked", height=4, n_chunks=7)
+        assert idx.plan.resident_bytes == idx.resident_bytes()
+
+    def test_stats_are_per_call_values(self):
+        pts, q = _data(9000, 200, 8, seed=7)
+        idx = KNNIndex.build(pts, engine="chunked", height=4)
+        r1 = idx.query(q, k=5)
+        r2 = idx.query(q[:10], k=5)
+        assert isinstance(r1.stats, SearchStats)
+        assert r1.stats is not r2.stats
+        assert r1.stats.queries_advanced != r2.stats.queries_advanced
+        with pytest.raises(dataclasses_frozen_error()):
+            r1.stats.iterations = 99  # immutable
+        # .stats mirrors the LAST call only
+        assert idx.stats == r2.stats
+
+    def test_result_fields(self):
+        pts, q = _data(800, 12, 5, seed=8)
+        res = KNNIndex.build(pts).query(q, k=3)
+        assert isinstance(res, QueryResult)
+        assert res.k == 3
+        assert res.dists.shape == (12, 3)
+        assert res.idx.shape == (12, 3)
+        assert len(res) == 2 and res[0] is res.dists and res[1] is res.idx
+
+    def test_dim_mismatch_rejected(self):
+        pts, _ = _data(600, 1, 6, seed=9)
+        idx = KNNIndex.build(pts)
+        with pytest.raises(ValueError, match="queries must be"):
+            idx.query(np.zeros((4, 5), np.float32), k=2)
+
+    def test_describe_mentions_engine_and_reasons(self):
+        pts, _ = _data(600, 1, 6, seed=10)
+        idx = KNNIndex.build(pts)
+        text = idx.describe()
+        assert "engine=brute" in text
+        assert "brute scan" in text
+
+
+def dataclasses_frozen_error():
+    import dataclasses
+
+    return dataclasses.FrozenInstanceError
+
+
+class TestBufferKDTreeBackCompat:
+    def test_stats_property_reflects_last_query(self):
+        from repro.core import BufferKDTree
+
+        pts, q = _data(4000, 120, 8, seed=11)
+        idx = BufferKDTree(pts, height=4)
+        d1, _ = idx.query(q, k=5)
+        s1 = idx.stats
+        idx.query(q[:7], k=5)
+        s2 = idx.stats
+        assert s1.queries_advanced > s2.queries_advanced
+        assert s1.points_scanned > 0
+        # the old mutate-in-place field is gone; stats are frozen values
+        with pytest.raises(dataclasses_frozen_error()):
+            idx.stats.iterations = 0
+
+    def test_host_engine_plan_shapes_tracked_per_call(self):
+        from repro.core import BufferKDTree
+
+        pts, q = _data(4000, 120, 8, seed=12)
+        idx = BufferKDTree(pts, height=4, engine="host")
+        idx.query(q, k=5)
+        assert idx.stats.plan_shapes >= 1
+
+
+class TestLeafBuffersVectorized:
+    def test_fill_counts_and_flush_rule(self):
+        from repro.core.buffers import LeafBuffers
+
+        b = LeafBuffers(n_leaves=8, capacity=16)
+        assert not b.should_flush()
+        b.insert(np.array([1, 1, 1, 2], np.int32), np.arange(4, dtype=np.int32))
+        assert b.total == 4
+        assert b.max_fill == 3
+        assert not b.should_flush()            # 3 < B/2 = 8
+        b.insert(np.full((5,), 1, np.int32), np.arange(5, dtype=np.int32))
+        assert b.max_fill == 8
+        assert b.should_flush()                # 8 >= B/2
+        leaf, query = b.drain()
+        assert leaf.shape == (9,)
+        assert b.total == 0 and b.max_fill == 0
+        # drain resets fill counts fully
+        b.insert(np.array([7], np.int32), np.array([0], np.int32))
+        assert b.max_fill == 1
+
+
+@pytest.mark.slow
+def test_multi_device_auto_plan_selects_forest_and_is_exact():
+    """Acceptance: >1 visible device => auto-planned forest, exact results.
+
+    Runs in a subprocess with 4 forced host devices (the main pytest
+    process must keep the real 1-CPU device view; see test_distributed).
+    """
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import numpy as np
+        import jax
+        jax.config.update("jax_cpu_enable_async_dispatch", False)
+        from repro.api import KNNIndex, knn_brute
+        rng = np.random.default_rng(0)
+        n, d, m, k = 16384, 10, 256, 10
+        pts = rng.normal(size=(n, d)).astype(np.float32)
+        q = rng.normal(size=(m, d)).astype(np.float32)
+        idx = KNNIndex.build(pts)
+        assert idx.engine_name == "forest", idx.describe()
+        assert idx.plan.n_shards == 4
+        dd, di = idx.query(q, k=k)
+        bd, bi = knn_brute(q, pts, k)
+        assert np.allclose(dd, bd, rtol=1e-4, atol=1e-4)
+        assert (di == bi).mean() > 0.999
+        print("FOREST_AUTOPLAN_OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        env=env, timeout=1800,
+    )
+    assert out.returncode == 0, f"subprocess failed:\n{out.stderr[-3000:]}"
+    assert "FOREST_AUTOPLAN_OK" in out.stdout
