@@ -1,0 +1,133 @@
+"""Measure chunk H2D copy cost and fused-round scan cost (the calibrator).
+
+Two numbers drive the chunked tier's measured-cost scheduling (planner
+``Calibration``):
+
+  h2d_gbps / h2d_latency_s   host->device bandwidth + fixed per-transfer
+                             cost, fit linearly over a ladder of slab-sized
+                             ``jax.device_put`` transfers (the paper's
+                             phase (2) copy, measured instead of assumed)
+  round_s                    one fused bulk-synchronous round of the
+                             chunk-resident engine at the smoke shape
+                             (total steady-state wall time / steady rounds)
+
+Writes ``BENCH_copy_cost.json`` at the repo root; ``Calibration.load()``
+reads it (together with ``BENCH_engine.json``) so ``plan(...,
+calibration=...)`` can trade copy cost against scan cost with real numbers.
+
+Run via ``python -m benchmarks.run --only copy`` or directly:
+``python -m benchmarks.copy_cost [--scale 0.5]``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks import common
+
+# Transfer sizes bracketing realistic chunk slabs (scaled by --scale).
+COPY_MBS = (1, 4, 16, 64)
+N, D, M, HEIGHT, N_CHUNKS, K = 20_000, 8, 2_000, 7, 2, 10
+
+
+def _measure_h2d(scale: float) -> dict:
+    import jax
+
+    dev = jax.devices()[0]
+    # dedupe after scaling so the linear fit always sees distinct sizes
+    # (at small scales several nominal rungs collapse to the same bytes)
+    byte_rungs = sorted({
+        max(1, int(mb * scale * 4)) * (1 << 18) for mb in COPY_MBS
+    })
+    if len(byte_rungs) < 2:          # the fit needs two distinct sizes
+        byte_rungs.append(byte_rungs[-1] * 4)
+    sizes, times = [], []
+    for nbytes in byte_rungs:
+        host = np.empty(nbytes // 4, np.float32)
+        # warm (allocator, first-touch), then median of 5
+        jax.block_until_ready(jax.device_put(host, dev))
+        ts = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            jax.block_until_ready(jax.device_put(host, dev))
+            ts.append(time.perf_counter() - t0)
+        ts.sort()
+        sizes.append(float(nbytes))
+        times.append(ts[len(ts) // 2])
+        common.row(f"copy/h2d_{nbytes / (1 << 20):g}mb", ts[len(ts) // 2],
+                   f"bytes={nbytes}")
+    # t = latency + bytes / bandwidth  (least-squares over the ladder)
+    slope, intercept = np.polyfit(sizes, times, 1)
+    bw = 1.0 / max(slope, 1e-15)
+    return {
+        "h2d_gbps": float(bw / 1e9),
+        "h2d_latency_s": float(max(intercept, 0.0)),
+        "copy_points": [
+            {"bytes": int(b), "seconds": float(t)}
+            for b, t in zip(sizes, times)
+        ],
+    }
+
+
+def _measure_round(scale: float) -> dict:
+    """Steady-state fused-round cost on the (scaled) smoke shape."""
+    from repro.api import IndexSpec, KNNIndex
+
+    n, m = max(2048, int(N * scale)), max(256, int(M * scale))
+    rng = np.random.default_rng(0)
+    pts = rng.normal(size=(n, D)).astype(np.float32)
+    q = rng.normal(size=(m, D)).astype(np.float32)
+    idx = KNNIndex.build(
+        pts, spec=IndexSpec(engine="chunked", height=HEIGHT,
+                            n_chunks=N_CHUNKS, k_hint=K)
+    )
+    idx.query(q, k=K)          # warm: compiles the round + any ladder rungs
+    idx.query(q, k=K)
+    st = idx.stats
+    round_s = st.steady_s / max(1, st.steady_rounds)
+    common.row("copy/fused_round", round_s,
+               f"n={n};m={m};steady_rounds={st.steady_rounds}")
+    return {
+        "round_s": float(round_s),
+        "round_shape": {"n": n, "d": D, "m": m, "height": HEIGHT,
+                        "n_chunks": N_CHUNKS, "k": K},
+        "steady_rounds": st.steady_rounds,
+        "tail_rounds": st.tail_rounds,
+    }
+
+
+def run(scale: float = 1.0) -> None:
+    result = {"scale": scale}
+    result.update(_measure_h2d(scale))
+    result.update(_measure_round(scale))
+
+    if scale >= 1.0:
+        # like engine_bench: only canonical full-scale runs update the
+        # committed calibration file (a smoke-scale round_s would skew
+        # every calibrated deadline downstream)
+        out = os.path.join(
+            os.path.dirname(__file__), "..", "BENCH_copy_cost.json"
+        )
+        with open(os.path.abspath(out), "w") as f:
+            json.dump(result, f, indent=2)
+            f.write("\n")
+    print(f"# copy cost (scale {scale}): h2d={result['h2d_gbps']:.2f}GB/s "
+          f"latency={result['h2d_latency_s'] * 1e6:.0f}us "
+          f"round={result['round_s'] * 1e3:.2f}ms", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=float, default=1.0)
+    args = ap.parse_args()
+    common.emit_header()
+    run(scale=args.scale)
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,13 @@ fi
 echo "== tier-1 pytest =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
+# Fast perf smoke: a quarter-scale engine bench.  engine_bench asserts the
+# recompile-free guarantee (fused round + every entered compaction-ladder
+# rung compile at most once), so any recompile across flushes fails CI here.
+# Sub-1.0 scale never writes BENCH_engine.json (trajectory stays canonical).
+echo "== perf smoke (engine bench @ scale 0.25) =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.engine_bench --scale 0.25
+
 if [[ "${1:-}" == "--slow" ]]; then
     echo "== slow suite =="
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m slow

@@ -32,7 +32,7 @@ from repro.api.engine import (
     get_engine,
     register_engine,
 )
-from repro.api.planner import Plan, estimate_slab_bytes, plan
+from repro.api.planner import Calibration, Plan, estimate_slab_bytes, plan
 from repro.api.spec import IndexSpec, QueryResult, SearchStats
 from repro.api.index import KNNIndex
 
@@ -52,6 +52,7 @@ __all__ = [
     "Plan",
     "plan",
     "estimate_slab_bytes",
+    "Calibration",
     "Engine",
     "EngineBase",
     "EngineCaps",

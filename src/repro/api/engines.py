@@ -132,6 +132,7 @@ class _BufferTreeEngine(EngineBase):
             tile_q=plan.tile_q,
             backend=plan.backend,
             engine=self._tier,
+            starvation_deadline=plan.starvation_deadline,
             device=spec.devices[0] if spec.devices else None,
         )
 
@@ -252,6 +253,7 @@ class ShardedEngine(EngineBase):
             backend=plan.backend,
             tile_q=plan.tile_q,
             buffer_size=plan.buffer_size,
+            starvation_deadline=plan.starvation_deadline,
         )
 
     def query(self, state, queries, k):

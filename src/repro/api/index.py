@@ -85,6 +85,7 @@ class KNNIndex:
             buffer_size=spec.buffer_size,
             tile_q=spec.tile_q,
             backend=spec.backend,
+            calibration=spec.calibration,
         )
         engine = get_engine(pl.engine)
         state = engine.build(points, spec, pl)
@@ -116,6 +117,27 @@ class KNNIndex:
         )
 
     # ------------------------------------------------------------------
+    def warm(self, m: int, k: Optional[int] = None) -> None:
+        """Precompile the query path for batches of ``m`` queries (and
+        ``k`` neighbors; defaults to the spec's ``k_hint``).  Engines
+        without a warm hook ignore this.  Serving paths SHOULD call it
+        with their expected batch shape before taking traffic so no
+        compile lands on a request; the chunked engine warms its fused
+        round at the full batch shape AND every compaction-ladder rung,
+        making the recompile-free guarantee independent of any particular
+        query set's retirement trajectory."""
+        k = int(k) if k is not None else self.spec.k_hint
+        warm = getattr(self._state, "warm", None)
+        if warm is None:
+            return
+        # warming streams chunk slabs through the same store a query uses:
+        # stateful engines must not see both at once
+        if self._qlock is not None:
+            with self._qlock:
+                warm(int(m), k)
+        else:
+            warm(int(m), k)
+
     @property
     def engine_name(self) -> str:
         return self.plan.engine

@@ -30,16 +30,35 @@ Height defaults to ``suggest_height`` but is clamped so the mean leaf still
 holds >= k points (the leaf-scan kernel selects k of leaf_pad candidates),
 and buffer capacity follows the paper's footnote 8: B = 2^(24-h) capped,
 fetch M = 10 B — the B/2 flush rule's inputs, now planned explicitly.
+
+MEASURED-COST CALIBRATION: pass a ``Calibration`` (H2D bandwidth + fused
+round cost from ``benchmarks/copy_cost.py``, per-engine q/s from
+``BENCH_engine.json``; ``Calibration.load()`` reads both) and decisions
+become calibrated instead of rule-based: the single-device engine choice
+compares measured q/s, and the chunk-visit starvation deadline is derived
+from the copy-cost/round-cost ratio (expensive copies => let cold chunks
+starve longer so visits batch denser).  Every calibrated decision still
+lands in ``Plan.reasons`` with the numbers it used.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Sequence, Tuple
+import json
+import os
+from typing import Any, Mapping, Optional, Sequence, Tuple
 
+from repro.core.chunked_jit import DEFAULT_STARVATION_DEADLINE
 from repro.core.toptree import default_buffer_size, suggest_height
 
-__all__ = ["Plan", "plan", "estimate_slab_bytes", "BRUTE_N_MAX", "BRUTE_WORK_MAX"]
+__all__ = [
+    "Plan",
+    "plan",
+    "estimate_slab_bytes",
+    "Calibration",
+    "BRUTE_N_MAX",
+    "BRUTE_WORK_MAX",
+]
 
 # Below this reference-set size the tree cannot pay for itself on any
 # backend we target (one brute tile covers the whole set).
@@ -87,6 +106,79 @@ def _clamp_height(n: int, k: int, height: Optional[int]) -> Tuple[int, Tuple[str
 
 
 @dataclasses.dataclass(frozen=True)
+class Calibration:
+    """Measured machine numbers the planner may substitute for its rules.
+
+    Produced by ``benchmarks/copy_cost.py`` (H2D bandwidth + fused round
+    cost, written to ``BENCH_copy_cost.json``) and ``benchmarks/
+    engine_bench.py`` (per-engine q/s in ``BENCH_engine.json``);
+    ``Calibration.load()`` assembles one from whichever files exist.
+    All fields optional — a partial calibration informs only the decisions
+    it has numbers for.
+    """
+
+    h2d_gbps: Optional[float] = None       # host->device copy bandwidth
+    h2d_latency_s: float = 0.0             # fixed per-transfer cost
+    round_s: Optional[float] = None        # one fused round, reference shape
+    engine_qps: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    source: str = ""
+
+    def chunk_copy_s(self, chunk_bytes: int) -> Optional[float]:
+        """Predicted seconds to stream one chunk slab host->device."""
+        if self.h2d_gbps is None or self.h2d_gbps <= 0:
+            return None
+        return self.h2d_latency_s + chunk_bytes / (self.h2d_gbps * 1e9)
+
+    @classmethod
+    def load(cls, root: Optional[str] = None) -> Optional["Calibration"]:
+        """Assemble from BENCH_copy_cost.json / BENCH_engine.json under
+        ``root`` (default: the repo checkout this package sits in).
+        Returns None when neither file exists — callers then plan by rule.
+
+        PROVENANCE CAVEAT: the repo commits its bench JSONs as the perf
+        trajectory, so on a machine that has never run the benches the
+        default root yields the *committed* (foreign) measurements.  The
+        file names travel in ``source`` and are echoed in every calibrated
+        ``Plan.reasons`` entry; re-run ``benchmarks/copy_cost.py`` and
+        ``benchmarks/engine_bench.py`` locally before trusting the numbers
+        on new hardware (docs/PERF.md, "Re-running calibration").
+        """
+        if root is None:
+            root = os.path.abspath(
+                os.path.join(os.path.dirname(__file__), "..", "..", "..")
+            )
+        h2d_gbps, h2d_latency_s, round_s = None, 0.0, None
+        engine_qps: dict = {}
+        sources = []
+        cc = os.path.join(root, "BENCH_copy_cost.json")
+        if os.path.exists(cc):
+            with open(cc) as f:
+                data = json.load(f)
+            h2d_gbps = data.get("h2d_gbps")
+            h2d_latency_s = data.get("h2d_latency_s", 0.0)
+            round_s = data.get("round_s")
+            sources.append("BENCH_copy_cost.json")
+        eb = os.path.join(root, "BENCH_engine.json")
+        if os.path.exists(eb):
+            with open(eb) as f:
+                data = json.load(f)
+            m = data.get("shape", {}).get("m")
+            for eng, key in (("chunked", "chunked_s"), ("host", "host_s")):
+                qps = data.get(f"{eng}_qps")
+                if qps is None and m and data.get(key):
+                    qps = m / data[key]
+                if qps:
+                    engine_qps[eng] = float(qps)
+            sources.append("BENCH_engine.json")
+        if not sources:
+            return None
+        return cls(
+            h2d_gbps=h2d_gbps, h2d_latency_s=h2d_latency_s, round_s=round_s,
+            engine_qps=engine_qps, source="+".join(sources),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class Plan:
     """A fully-resolved execution plan (every engine parameter pinned)."""
 
@@ -104,6 +196,9 @@ class Plan:
     slab_bytes: int = 0         # full leaf structure, one device
     resident_bytes: int = 0     # per-device bytes actually held under plan
     memory_budget: Optional[int] = None
+    visit_policy: str = "pending_desc"   # chunk-visit ordering policy
+    starvation_deadline: int = DEFAULT_STARVATION_DEADLINE
+    calibrated: bool = False    # True when a Calibration informed decisions
     reasons: Tuple[str, ...] = ()
 
     def replace(self, **kw) -> "Plan":
@@ -125,6 +220,7 @@ def plan(
     buffer_size: Optional[int] = None,
     tile_q: int = 128,
     backend: str = "auto",
+    calibration: Optional[Calibration] = None,
 ) -> Plan:
     """Pick an engine + parameters for (n, d) references and (m, k) queries.
 
@@ -132,6 +228,9 @@ def plan(
     consulted, so tests may pass simulated device lists); ``None`` means the
     process's visible ``jax.devices()``.  ``memory_budget`` is per-device
     bytes available for the leaf structure; ``None`` means unconstrained.
+    ``calibration`` substitutes measured numbers (H2D bandwidth, round cost,
+    per-engine q/s) for the static rules where it has them — see
+    ``Calibration``.
     """
     if n < 1 or d < 1:
         raise ValueError(f"need n >= 1, d >= 1; got n={n} d={d}")
@@ -177,7 +276,38 @@ def plan(
         )
         if resident > memory_budget:
             note += " [budget below the 2-chunk floor; best effort]"
+        if calibration is not None:
+            copy_s = calibration.chunk_copy_s(resident // 2)
+            if copy_s is not None:
+                note += (
+                    f"; calibrated chunk copy ~{copy_s * 1e3:.2f}ms at "
+                    f"{calibration.h2d_gbps:.1f}GB/s"
+                )
+                if calibration.round_s:
+                    note += f" vs fused round ~{calibration.round_s * 1e3:.2f}ms"
         return nc, note
+
+    def calibrated_deadline() -> Tuple[int, Optional[str]]:
+        """Starvation deadline (rounds a pending chunk may be skipped) from
+        the measured copy-cost / round-cost ratio: when slab copies dominate
+        a round, let cold chunks wait longer so each visit is denser; when
+        rounds dominate, visit promptly."""
+        if calibration is None:
+            return DEFAULT_STARVATION_DEADLINE, None
+        n_leaves = 1 << h
+        nc_cand = n_chunks if n_chunks else 2
+        chunk_bytes = (-(-n_leaves // max(1, nc_cand))) * (slab // n_leaves)
+        copy_s = calibration.chunk_copy_s(chunk_bytes)
+        if copy_s is None or not calibration.round_s:
+            return DEFAULT_STARVATION_DEADLINE, None
+        ratio = copy_s / max(calibration.round_s, 1e-9)
+        dl = int(min(16, max(1, round(ratio))))
+        src = f"; {calibration.source}" if calibration.source else ""
+        return dl, (
+            f"calibrated starvation deadline {dl} rounds: chunk copy "
+            f"~{copy_s * 1e3:.2f}ms / round ~{calibration.round_s * 1e3:.2f}ms "
+            f"(ratio {ratio:.2f}{src})"
+        )
 
     # pinning a tree parameter (height / n_chunks / buffer_size) is an
     # implicit request for a tree engine; only unconstrained specs may
@@ -254,6 +384,32 @@ def plan(
                     f"{p} devices visible but {why}: paper-faithful query "
                     "chunking over replicated trees"
                 )
+        elif calibration is not None and calibration.engine_qps:
+            # calibrated single-device choice: measured q/s beats the rule,
+            # filtered to engines that can honor an out-of-core constraint
+            candidates = {}
+            for name, qps in calibration.engine_qps.items():
+                try:
+                    from repro.api.engine import get_engine
+
+                    caps = get_engine(name).caps
+                except KeyError:
+                    continue
+                if memory_budget is not None and not caps.out_of_core:
+                    continue
+                candidates[name] = qps
+            if candidates:
+                engine = max(candidates, key=candidates.get)
+                measured = ", ".join(
+                    f"{e}={q:.0f} q/s" for e, q in sorted(candidates.items())
+                )
+                reasons.append(
+                    f"1 device, calibrated engine choice ({measured}; "
+                    f"{calibration.source}): {engine}"
+                )
+            else:
+                engine = "chunked"
+                reasons.append("1 device: chunk-streamed buffer k-d tree")
         else:
             engine = "chunked"
             reasons.append("1 device: chunk-streamed buffer k-d tree")
@@ -272,8 +428,13 @@ def plan(
     ns = int(n_shards) if n_shards is not None else (
         p if engine in ("forest", "sharded", "ring") else 1
     )
+    deadline, dl_note = calibrated_deadline()
+    if dl_note is not None and engine in ("chunked", "host", "sharded"):
+        reasons.append(dl_note)
     return Plan(
         engine=engine, n_chunks=nc, n_shards=ns,
         resident_bytes=resident_for(engine, nc, ns),
+        starvation_deadline=deadline,
+        calibrated=calibration is not None,
         reasons=tuple(reasons), **base
     )

@@ -47,6 +47,8 @@ class IndexSpec:
     m_hint: Optional[int] = None          # expected queries per batch
     devices: Optional[Tuple[Any, ...]] = None   # None => jax.devices()
     memory_budget: Optional[int] = None   # device bytes for the leaf structure
+    calibration: Optional[Any] = None     # planner.Calibration (measured costs);
+                                          # None => plan by rule
 
     def replace(self, **kw) -> "IndexSpec":
         return dataclasses.replace(self, **kw)

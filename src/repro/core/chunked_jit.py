@@ -32,19 +32,42 @@ Key properties:
   * ``knn_d``/``knn_i`` (the O(m*k) neighbor state) and the traversal state
     are donated, so each round updates them in place instead of copying.
   * The paper's B/2 buffer-fill heuristic survives as the chunk-visit
-    scheduling policy: a chunk is visited when >= B/2 queries pend on it,
+    admission policy: a chunk is visited when >= B/2 queries pend on it,
     or unconditionally when no chunk meets the threshold (forced flush).
     Skipping a cold chunk leaves its queries paused (their ``in_chunk`` mask
     is recomputed on device at visit time, so late visits are always
     consistent) and lets its buffer fill for a denser later visit — fewer
     host->device slab transfers, exactly what B/2 bought the paper.
+    Eligible chunks are visited in PENDING-COUNT-DESCENDING order, and a
+    pending chunk skipped for ``starvation_deadline`` consecutive rounds is
+    force-visited so cold chunks cannot be starved indefinitely by hot ones.
+  * Round-loop TAIL handling — two mechanisms keep the late rounds (a
+    handful of live queries) from paying full-batch cost:
+
+      - COMPACTION LADDER: when the live-query count falls onto a rung of
+        the fixed ladder (m/4, then m/16 — ``compaction_ladder``), the live
+        queries and their knn/traversal state are gathered into the
+        compacted shape and all subsequent rounds run there.  Each rung is
+        one extra compile the first time it is touched and recompile-free
+        thereafter (rung shapes depend only on m, never on the live count);
+        retired rows are scattered back to the full-m output at compaction
+        time.
+      - DOUBLE-BUFFERED SCHEDULE SYNC: the i32[m] pending-leaf map is NOT
+        donated; after dispatching a round the host starts an async
+        device->host copy of the new map and schedules the next round from
+        the PREVIOUS round's map (a one-round-stale superset of the live
+        set — safe, since retirement is monotone and the in-chunk mask is
+        recomputed on device).  The blocking wait thus overlaps the next
+        round's compute instead of serializing with it; the pipeline drains
+        with an up-to-date map before termination or compaction.
 """
 
 from __future__ import annotations
 
 import functools
+import time
 import warnings
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -55,9 +78,56 @@ from repro.core.chunked import ChunkedLeafStore
 from repro.core.jitsearch import _build_plan
 from repro.kernels import ops as kops
 
-__all__ = ["ChunkResidentEngine", "chunk_round_cache_size"]
+__all__ = [
+    "ChunkResidentEngine",
+    "chunk_round_cache_size",
+    "compaction_cache_size",
+    "compaction_ladder",
+]
 
 DEFAULT_UNIT_BLOCK = 8
+DEFAULT_STARVATION_DEADLINE = 4
+
+# Fixed compaction rungs as fractions of the full batch: live < m/4 gathers
+# to the m/4 rung, live < m/16 to the m/16 rung.  Rung sizes are padded to a
+# multiple of 16 and floored at COMPACTION_MIN so tiny batches never compact
+# (the ladder is empty when m is already below the smallest rung).
+COMPACTION_DIVISORS = (4, 16)
+COMPACTION_MIN = 32
+_RUNG_MULTIPLE = 16
+
+
+def compaction_ladder(m: int) -> Tuple[int, ...]:
+    """Descending compacted-shape rungs for a full query batch of ``m``.
+
+    A pure function of m (never of the observed live count), so the set of
+    compiled round shapes is fixed per batch shape: at most
+    ``1 + len(COMPACTION_DIVISORS)`` specializations.
+    """
+    rungs: List[int] = []
+    for div in COMPACTION_DIVISORS:
+        r = max(COMPACTION_MIN, -(-m // div))
+        r = -(-r // _RUNG_MULTIPLE) * _RUNG_MULTIPLE
+        if r < m and (not rungs or r < rungs[-1]):
+            rungs.append(r)
+    return tuple(rungs)
+
+
+@functools.partial(jax.jit, static_argnames=("mc",))
+def _compact_state(sel, qpad, leaf, node, fromc, knn_d, knn_i, *, mc: int):
+    """Gather live rows ``sel`` (i32[mc], -1 padding) into the compacted
+    shape mc.  Padding rows become retired queries (leaf=-1, node=0) whose
+    knn rows are never read back (the scatter uses the live prefix only)."""
+    pad = sel < 0
+    safe = jnp.clip(sel, 0, None)
+    return (
+        qpad[safe],
+        jnp.where(pad, -1, leaf[safe]).astype(jnp.int32),
+        jnp.where(pad, 0, node[safe]).astype(jnp.int32),
+        jnp.where(pad, 0, fromc[safe]).astype(jnp.int32),
+        jnp.concatenate([knn_d[safe], knn_d[-1:]], axis=0),
+        jnp.concatenate([knn_i[safe], knn_i[-1:]], axis=0),
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("first_leaf_heap",))
@@ -75,12 +145,15 @@ def _initial_advance(qpad, split_dim, split_val, *, first_leaf_heap):
 @functools.partial(
     jax.jit,
     static_argnames=("k", "tq", "first_leaf_heap", "ub", "backend"),
-    donate_argnums=(0, 1, 2, 3, 4),
+    # leaf is deliberately NOT donated: the previous round's pending-leaf
+    # map stays a live buffer so its async host readback can overlap the
+    # round that consumes it (the double-buffered schedule sync).
+    donate_argnums=(0, 1, 3, 4),
 )
 def _chunk_round(
     node,          # i32[m]   traversal heap position      (donated)
     fromc,         # i32[m]   traversal arrival direction  (donated)
-    leaf,          # i32[m]   pending leaf per query, -1 done (donated)
+    leaf,          # i32[m]   pending leaf per query, -1 done (NOT donated)
     knn_d,         # f32[m+1, k] running top-k sq-dists    (donated)
     knn_i,         # i32[m+1, k] reordered-global indices  (donated)
     qpad,          # f32[m, d_pad] zero-padded queries
@@ -173,9 +246,17 @@ def _chunk_round(
 
 def chunk_round_cache_size() -> int:
     """Number of compiled specializations of the fused round (one per
-    (m, tq, chunk-shape, k, backend) combination — flush sizes and work-unit
-    counts must NOT add entries; the engine bench asserts this)."""
+    (m, tq, chunk-shape, k, backend) combination, where m ranges over the
+    full batch shape plus any compaction-ladder rungs actually entered —
+    flush sizes, work-unit counts and live-query counts must NOT add
+    entries; the engine bench asserts this)."""
     return _chunk_round._cache_size()
+
+
+def compaction_cache_size() -> int:
+    """Compiled specializations of the ladder gather (one per
+    (source shape, rung) transition actually taken)."""
+    return _compact_state._cache_size()
 
 
 class ChunkResidentEngine:
@@ -197,6 +278,7 @@ class ChunkResidentEngine:
         *,
         backend: str = "ref",
         unit_block: int = DEFAULT_UNIT_BLOCK,
+        starvation_deadline: int = DEFAULT_STARVATION_DEADLINE,
     ):
         if store.n_chunks > 1 and not store.uniform:
             raise ValueError(
@@ -210,6 +292,84 @@ class ChunkResidentEngine:
         self.first_leaf_heap = int(first_leaf_heap)
         self.backend = backend
         self.unit_block = int(unit_block)
+        self.starvation_deadline = max(1, int(starvation_deadline))
+        # leaf -> owning chunk, precomputed once: the per-round host work is
+        # a masked table lookup over the LIVE queries only, not a
+        # searchsorted over the full batch
+        self._leaf_chunk = store.chunk_of_leaf(
+            np.arange(store.n_leaves, dtype=np.int64)
+        )
+
+    def warm(self, m: int, k: int, tq: int) -> int:
+        """Eagerly compile every executable a batch shape ``m`` can reach:
+        the fused round at the full shape and at every compaction-ladder
+        rung, plus every reachable ladder gather transition.  Makes the
+        recompile-free guarantee trajectory-independent — without this, a
+        rung is compiled the first time some query batch's live count
+        happens to enter it.  Returns the number of round shapes warmed."""
+        d_pad = self.store.host.shape[2]
+        shapes = [int(m), *compaction_ladder(int(m))]
+        dev = self.store.device
+
+        def state_at(ms: int):
+            arrs = (
+                jnp.zeros((ms,), jnp.int32),                       # node
+                jnp.zeros((ms,), jnp.int32),                       # fromc
+                jnp.full((ms,), -1, jnp.int32),                    # leaf
+                jnp.full((ms + 1, k), kops.INVALID_DIST, jnp.float32),
+                jnp.full((ms + 1, k), -1, jnp.int32),
+                jnp.zeros((ms, d_pad), jnp.float32),               # qpad
+            )
+            return jax.device_put(arrs, dev)
+
+        for _cid, dev_slab, lo in self.store.stream([0]):
+            for ms in shapes:
+                node, fromc, leaf, knn_d, knn_i, qpad = state_at(ms)
+                with warnings.catch_warnings():
+                    warnings.filterwarnings(
+                        "ignore",
+                        message="Some donated buffers were not usable",
+                    )
+                    _chunk_round(
+                        node, fromc, leaf, knn_d, knn_i,
+                        qpad, dev_slab, jnp.int32(lo),
+                        self._leaf_start, self._leaf_size,
+                        self._split_dim, self._split_val,
+                        k=k, tq=tq, first_leaf_heap=self.first_leaf_heap,
+                        ub=self.unit_block, backend=self.backend,
+                    )
+        for i, src in enumerate(shapes):
+            node, fromc, leaf, knn_d, knn_i, qpad = state_at(src)
+            for dst in shapes[i + 1:]:
+                _compact_state(
+                    jnp.asarray(np.full((dst,), -1, np.int32)),
+                    qpad, leaf, node, fromc, knn_d, knn_i, mc=dst,
+                )
+        return len(shapes)
+
+    def _visit_order(
+        self,
+        counts: np.ndarray,       # i64[n_chunks] pending queries per chunk
+        threshold: int,
+        starve: np.ndarray,       # i32[n_chunks] rounds a pending chunk waited
+    ) -> np.ndarray:
+        """Measured-cost chunk schedule for one round.
+
+        Admission: the paper's B/2 fill rule, plus any pending chunk starved
+        past the deadline; forced flush (all pending chunks) when nothing is
+        admitted.  Order: pending-count DESCENDING, so the densest scan
+        (most work to hide the next slab copy behind) is dispatched first.
+        Updates ``starve`` in place.
+        """
+        eligible = (counts >= threshold) | ((counts > 0) & (starve >= self.starvation_deadline))
+        visit = np.nonzero(eligible)[0]
+        if visit.size == 0:
+            visit = np.nonzero(counts > 0)[0]   # forced flush
+        visit = visit[np.argsort(-counts[visit], kind="stable")]
+        starve[counts > 0] += 1
+        starve[counts <= 0] = 0
+        starve[visit] = 0
+        return visit
 
     def run(
         self,
@@ -217,7 +377,7 @@ class ChunkResidentEngine:
         k: int,
         tq: int,
         buffer_size: int,
-    ) -> Tuple[np.ndarray, np.ndarray, Dict[str, int]]:
+    ) -> Tuple[np.ndarray, np.ndarray, Dict[str, float]]:
         """Returns (sq-dists f32[m, k], reordered-global idx i32[m, k],
         info counters).  Distances are pre-rescoring (caller refines)."""
         m = qpad.shape[0]
@@ -236,25 +396,25 @@ class ChunkResidentEngine:
             (qpad, leaf, node, fromc, knn_d, knn_i), store.device
         )
 
-        # visit threshold: the paper's B/2 fill heuristic, capped so small
-        # query batches still flush
-        threshold = max(1, min(int(buffer_size), m) // 2)
-        info = {"rounds": 0, "chunk_rounds": 0, "units": 0}
+        # full-m outputs; compaction scatters retired rows back here
+        out_d = np.full((m, k), kops.INVALID_DIST, np.float32)
+        out_i = np.full((m, k), -1, np.int32)
+        orig = np.arange(m)       # compacted row -> original query row
+        ladder = list(compaction_ladder(m))
+        m_cur = m
+
+        info = {
+            "rounds": 0, "chunk_rounds": 0, "units": 0,
+            "queries_advanced": 0, "compactions": 0,
+            "steady_rounds": 0, "tail_rounds": 0,
+            "steady_s": 0.0, "tail_s": 0.0, "sync_wait_s": 0.0,
+        }
         copies_before = store.copies
         unit_counts = []
+        starve = np.zeros(store.n_chunks, np.int32)
 
-        while True:
-            leaf_host = np.asarray(leaf)          # the ONE sync per round
-            pending = leaf_host >= 0
-            if not pending.any():
-                break
-            counts = np.bincount(
-                store.chunk_of_leaf(leaf_host[pending]),
-                minlength=store.n_chunks,
-            )
-            visit = np.nonzero(counts >= threshold)[0]
-            if visit.size == 0:
-                visit = np.nonzero(counts > 0)[0]   # forced flush
+        def dispatch_round(visit: np.ndarray) -> None:
+            nonlocal node, fromc, leaf, knn_d, knn_i
             for _cid, dev_slab, lo in store.stream(visit.tolist()):
                 with warnings.catch_warnings():
                     # donation is a no-op on CPU; the warning fires at the
@@ -275,7 +435,93 @@ class ChunkResidentEngine:
                 unit_counts.append(nu)
                 info["chunk_rounds"] += 1
             info["rounds"] += 1
+            info["queries_advanced"] += m_cur
+            if m_cur == m:
+                info["steady_rounds"] += 1
+            else:
+                info["tail_rounds"] += 1
 
+        def harvest(arr) -> np.ndarray:
+            """Blocking completion of an async pending-leaf-map readback."""
+            t0 = time.perf_counter()
+            out = np.asarray(arr)
+            info["sync_wait_s"] += time.perf_counter() - t0
+            return out
+
+        # The schedule is double-buffered: `sched` is the host's (possibly
+        # one-round-stale) view of the pending-leaf map; `inflight` is the
+        # device map whose async readback overlaps the round in flight.
+        # Staleness is safe: retirement is monotone, so a stale map's live
+        # set is a superset of the true one, and the device recomputes the
+        # in-chunk mask at visit time.
+        sched = harvest(leaf)       # round 0: nothing to overlap yet
+        inflight = None
+
+        while True:
+            live_rows = np.nonzero(sched >= 0)[0]
+            if live_rows.size == 0:
+                if inflight is not None:
+                    # stale map says done — drain the pipeline and re-check
+                    # against the freshest map before concluding
+                    sched, inflight = harvest(inflight), None
+                    continue
+                break
+
+            if ladder and live_rows.size <= ladder[0]:
+                if inflight is not None:
+                    # compaction re-indexes rows: barrier the pipeline so
+                    # the gather uses the freshest (smallest) live set
+                    sched, inflight = harvest(inflight), None
+                    continue
+                rung = ladder.pop(0)
+                while ladder and live_rows.size <= ladder[0]:
+                    rung = ladder.pop(0)
+                # retire everything the current shape holds (live rows are
+                # re-scattered at the next compaction or at exit); this
+                # blocks on all in-flight rounds, so it is accounted as
+                # sync wait like the schedule readbacks
+                t0 = time.perf_counter()
+                out_d[orig] = np.asarray(knn_d)[: orig.size]
+                out_i[orig] = np.asarray(knn_i)[: orig.size]
+                info["sync_wait_s"] += time.perf_counter() - t0
+                sel = np.full((rung,), -1, np.int32)
+                sel[: live_rows.size] = live_rows
+                qpad, leaf, node, fromc, knn_d, knn_i = _compact_state(
+                    jnp.asarray(sel), qpad, leaf, node, fromc, knn_d, knn_i,
+                    mc=rung,
+                )
+                orig = orig[live_rows]
+                new_sched = np.full((rung,), -1, sched.dtype)
+                new_sched[: live_rows.size] = sched[live_rows]
+                sched = new_sched
+                m_cur = rung
+                info["compactions"] += 1
+                continue
+
+            # per-round host work is over the LIVE queries only: mask, then
+            # a precomputed leaf->chunk table lookup (no full-m searchsorted)
+            threshold = max(1, min(int(buffer_size), m_cur) // 2)
+            counts = np.bincount(
+                self._leaf_chunk[sched[live_rows]], minlength=store.n_chunks
+            )
+            t0 = time.perf_counter()
+            wait0 = info["sync_wait_s"]
+            dispatch_round(self._visit_order(counts, threshold, starve))
+            # overlap: complete the PREVIOUS round's readback while this
+            # round computes, then start this round's readback
+            if inflight is not None:
+                sched = harvest(inflight)
+            inflight = leaf
+            if hasattr(inflight, "copy_to_host_async"):
+                inflight.copy_to_host_async()
+            # blocked readback time is accounted in sync_wait_s only, so
+            # the phase buckets sum to the loop wall time (and the
+            # calibrator's round_s = steady_s / rounds stays copy-free)
+            dt = time.perf_counter() - t0 - (info["sync_wait_s"] - wait0)
+            info["steady_s" if m_cur == m else "tail_s"] += dt
+
+        out_d[orig] = np.asarray(knn_d)[: orig.size]
+        out_i[orig] = np.asarray(knn_i)[: orig.size]
         info["units"] = int(sum(int(u) for u in unit_counts))
         info["chunk_copies"] = store.copies - copies_before
-        return np.asarray(knn_d[:m]), np.asarray(knn_i[:m]), info
+        return out_d, out_i, info

@@ -46,7 +46,10 @@ import numpy as np
 from repro.core import traversal
 from repro.core.buffers import LeafBuffers, QueryQueues, build_work_plan
 from repro.core.chunked import ChunkedLeafStore
-from repro.core.chunked_jit import ChunkResidentEngine
+from repro.core.chunked_jit import (
+    DEFAULT_STARVATION_DEADLINE,
+    ChunkResidentEngine,
+)
 from repro.core.toptree import (
     TopTree,
     build_top_tree,
@@ -75,6 +78,14 @@ class SearchStats:
     queries_advanced: int = 0
     chunk_rounds: int = 0
     plan_shapes: int = 0     # distinct padded plan widths seen (host engine)
+    # chunked-engine round-loop phase breakdown (zero elsewhere)
+    compactions: int = 0     # ladder rungs entered
+    steady_rounds: int = 0   # rounds at the full batch shape
+    tail_rounds: int = 0     # rounds at a compacted ladder rung
+    steady_s: float = 0.0    # wall seconds in steady-state rounds
+    tail_s: float = 0.0      # wall seconds in tail (compacted) rounds
+    sync_wait_s: float = 0.0  # wall seconds blocked on schedule readbacks
+                              # and compaction barriers
 
 
 class _StatsBuilder:
@@ -88,6 +99,12 @@ class _StatsBuilder:
         self.queries_advanced = 0
         self.chunk_rounds = 0
         self.plan_widths = set()
+        self.compactions = 0
+        self.steady_rounds = 0
+        self.tail_rounds = 0
+        self.steady_s = 0.0
+        self.tail_s = 0.0
+        self.sync_wait_s = 0.0
 
     def freeze(self) -> SearchStats:
         return SearchStats(
@@ -98,6 +115,12 @@ class _StatsBuilder:
             queries_advanced=self.queries_advanced,
             chunk_rounds=self.chunk_rounds,
             plan_shapes=len(self.plan_widths),
+            compactions=self.compactions,
+            steady_rounds=self.steady_rounds,
+            tail_rounds=self.tail_rounds,
+            steady_s=self.steady_s,
+            tail_s=self.tail_s,
+            sync_wait_s=self.sync_wait_s,
         )
 
 
@@ -214,6 +237,7 @@ class BufferKDTree:
         engine: str = "chunked",
         engine_tile_q: Optional[int] = None,
         unit_block: int = 8,
+        starvation_deadline: int = DEFAULT_STARVATION_DEADLINE,
         tree: Optional[TopTree] = None,
     ):
         points = np.asarray(points, dtype=np.float32)
@@ -281,6 +305,7 @@ class BufferKDTree:
             self.tree.first_leaf_heap,
             backend=resolved,
             unit_block=unit_block,
+            starvation_deadline=starvation_deadline,
         )
 
     # ------------------------------------------------------------------
@@ -296,6 +321,15 @@ class BufferKDTree:
     def stats(self) -> SearchStats:
         """Stats of the most recent ``query`` call (immutable snapshot)."""
         return self._last_stats
+
+    def warm(self, m: int, k: int = 10) -> None:
+        """Precompile the chunked engine's fused round for query batches of
+        ``m``: the full shape plus every compaction-ladder rung, so no
+        live-count trajectory can trigger a compile mid-query.  No-op for
+        the host tier (its plan ladder compiles are already shape-bounded).
+        """
+        if self.engine == "chunked":
+            self._engine.warm(m, k, self.engine_tile_q)
 
     def _scan_units(
         self,
@@ -377,7 +411,13 @@ class BufferKDTree:
             sb.chunk_rounds = info["chunk_rounds"]
             sb.units_scanned = info["units"]
             sb.points_scanned = info["units"] * self.store.host.shape[1]
-            sb.queries_advanced = info["rounds"] * m
+            sb.queries_advanced = info["queries_advanced"]
+            sb.compactions = info["compactions"]
+            sb.steady_rounds = info["steady_rounds"]
+            sb.tail_rounds = info["tail_rounds"]
+            sb.steady_s = info["steady_s"]
+            sb.tail_s = info["tail_s"]
+            sb.sync_wait_s = info["sync_wait_s"]
             self._last_stats = sb.freeze()
             return self._finalize(gi, queries)
 

@@ -21,6 +21,7 @@ from typing import List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.core.chunked_jit import DEFAULT_STARVATION_DEADLINE
 from repro.core.lazysearch import BufferKDTree
 
 __all__ = ["MultiDeviceTrees", "multi_device_query"]
@@ -45,6 +46,7 @@ class MultiDeviceTrees:
         backend: str = "auto",
         tile_q: int = 128,
         buffer_size: Optional[int] = None,
+        starvation_deadline: int = DEFAULT_STARVATION_DEADLINE,
     ):
         self.devices = list(devices) if devices is not None else jax.devices()
         self.active: List[int] = []   # engines used by the last query
@@ -62,6 +64,7 @@ class MultiDeviceTrees:
             backend=backend,
             tile_q=tile_q,
             buffer_size=buffer_size,
+            starvation_deadline=starvation_deadline,
             device=self.devices[0],
         )
         self.engines = [first] + [
@@ -71,6 +74,7 @@ class MultiDeviceTrees:
                 backend=backend,
                 tile_q=tile_q,
                 buffer_size=buffer_size,
+                starvation_deadline=starvation_deadline,
                 device=dev,
                 tree=first.tree,
             )

@@ -208,6 +208,112 @@ class TestPlanner:
             plan(10, 4, k=11)
 
 
+class TestCalibration:
+    """Measured-cost planning: a Calibration turns rule-based decisions
+    into calibrated ones, and every calibrated decision lands in reasons
+    with the numbers it used."""
+
+    def _cal(self, **kw):
+        from repro.api import Calibration
+
+        base = dict(h2d_gbps=10.0, h2d_latency_s=50e-6, round_s=5e-3,
+                    engine_qps={"chunked": 2500.0, "host": 600.0},
+                    source="test")
+        base.update(kw)
+        return Calibration(**base)
+
+    def test_uncalibrated_plan_defaults(self):
+        p = plan(50_000, 8, m=50_000, devices=[object()])
+        assert not p.calibrated
+        assert p.visit_policy == "pending_desc"
+        assert p.starvation_deadline >= 1
+
+    def test_calibrated_engine_choice_shows_numbers(self):
+        p = plan(50_000, 8, m=50_000, devices=[object()],
+                 calibration=self._cal())
+        assert p.calibrated
+        assert p.engine == "chunked"   # 2500 q/s beats 600 q/s
+        assert any("calibrated engine choice" in r and "2500" in r
+                   for r in p.reasons)
+
+    def test_calibrated_choice_can_flip_engine(self):
+        # if measurement says the host tier is faster, the planner follows
+        # the measurement, not the rule
+        p = plan(50_000, 8, m=50_000, devices=[object()],
+                 calibration=self._cal(engine_qps={"chunked": 100.0,
+                                                   "host": 900.0}))
+        assert p.engine == "host"
+
+    def test_calibrated_deadline_from_cost_ratio(self):
+        # copy cost >> round cost => starved chunks wait longer (deadline
+        # grows), capped at 16
+        slow_copy = self._cal(h2d_gbps=0.001, round_s=1e-3)
+        n, d = 200_000, 10
+        h = plan(n, d, devices=[object()]).height
+        budget = estimate_slab_bytes(n, d, h) // 3
+        p = plan(n, d, k=10, devices=[object()], memory_budget=budget,
+                 calibration=slow_copy)
+        assert p.starvation_deadline == 16
+        assert any("starvation deadline" in r for r in p.reasons)
+        fast_copy = self._cal(h2d_gbps=1000.0, round_s=5e-3)
+        p2 = plan(n, d, k=10, devices=[object()], memory_budget=budget,
+                  calibration=fast_copy)
+        assert p2.starvation_deadline == 1
+
+    def test_calibrated_chunk_note_shows_copy_cost(self):
+        n, d = 200_000, 10
+        h = plan(n, d, devices=[object()]).height
+        budget = estimate_slab_bytes(n, d, h) // 3
+        p = plan(n, d, k=10, devices=[object()], memory_budget=budget,
+                 calibration=self._cal())
+        assert any("calibrated chunk copy" in r and "GB/s" in r
+                   for r in p.reasons)
+
+    def test_partial_calibration_is_harmless(self):
+        from repro.api import Calibration
+
+        p = plan(50_000, 8, m=50_000, devices=[object()],
+                 calibration=Calibration(source="empty"))
+        assert p.calibrated
+        assert p.engine == "chunked"   # falls back to the rule
+        assert p.starvation_deadline >= 1
+
+    def test_load_roundtrip(self, tmp_path):
+        import json
+
+        from repro.api import Calibration
+
+        (tmp_path / "BENCH_copy_cost.json").write_text(json.dumps(
+            {"h2d_gbps": 12.5, "h2d_latency_s": 1e-5, "round_s": 4e-3}
+        ))
+        (tmp_path / "BENCH_engine.json").write_text(json.dumps(
+            {"shape": {"m": 2000}, "chunked_s": 0.8, "host_s": 3.2,
+             "chunked_qps": 2500.0}
+        ))
+        cal = Calibration.load(root=str(tmp_path))
+        assert cal is not None
+        assert cal.h2d_gbps == 12.5 and cal.round_s == 4e-3
+        assert cal.engine_qps["chunked"] == 2500.0
+        assert cal.engine_qps["host"] == pytest.approx(2000 / 3.2)
+        assert "BENCH_copy_cost.json" in cal.source
+
+    def test_load_missing_files_returns_none(self, tmp_path):
+        from repro.api import Calibration
+
+        assert Calibration.load(root=str(tmp_path / "nowhere")) is None
+
+    def test_spec_carries_calibration_through_facade(self):
+        pts, q = _data(6000, 64, 6, seed=9)
+        idx = KNNIndex.build(
+            pts, spec=IndexSpec(engine="chunked", height=4,
+                                calibration=self._cal())
+        )
+        assert idx.plan.calibrated
+        dists, ids = idx.query(q, k=5)
+        bd, _ = knn_brute(q, pts, 5)
+        np.testing.assert_allclose(dists, bd, rtol=1e-4, atol=1e-4)
+
+
 class TestKNNIndexFacade:
     def test_auto_plan_small_is_brute_and_exact(self):
         pts, q = _data(1500, 40, 6, seed=5)

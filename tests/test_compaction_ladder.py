@@ -1,0 +1,158 @@
+"""Compaction-ladder behavior of the chunk-resident engine: rung shapes,
+exact parity vs ``knn_brute`` across searches engineered to cross both
+rungs mid-flight (and with m already below the smallest rung), the
+compile-once-per-rung guarantee, and the measured-cost scheduler knobs."""
+
+import numpy as np
+import pytest
+
+from repro.core import BufferKDTree
+from repro.core.brute import knn_brute
+from repro.core.chunked_jit import (
+    COMPACTION_MIN,
+    chunk_round_cache_size,
+    compaction_cache_size,
+    compaction_ladder,
+)
+
+
+def _data(n, m, d, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(n, d)).astype(np.float32),
+            rng.normal(size=(m, d)).astype(np.float32))
+
+
+class TestLadderShapes:
+    def test_smoke_shape_rungs(self):
+        assert compaction_ladder(2000) == (512, 128)
+
+    def test_descending_and_below_m(self):
+        for m in (100, 500, 777, 2000, 10_000):
+            ladder = compaction_ladder(m)
+            assert all(r < m for r in ladder)
+            assert list(ladder) == sorted(ladder, reverse=True)
+            assert all(r >= COMPACTION_MIN for r in ladder)
+
+    def test_tiny_m_has_no_rungs(self):
+        assert compaction_ladder(COMPACTION_MIN) == ()
+        assert compaction_ladder(8) == ()
+
+    def test_pure_function_of_m(self):
+        assert compaction_ladder(600) == compaction_ladder(600)
+
+
+class TestLadderParity:
+    """Shapes engineered so the live count crosses BOTH rungs mid-search."""
+
+    def _oracle(self, pts, q, k):
+        return knn_brute(q, pts, k)
+
+    @pytest.mark.parametrize("n_chunks", [1, 3])
+    def test_crosses_both_rungs_exact_vs_brute(self, n_chunks):
+        # m=600 -> rungs (160, 48); deep-ish tree => slow retirement tail
+        pts, q = _data(8000, 600, 6, seed=23)
+        idx = BufferKDTree(pts, height=6, n_chunks=n_chunks, tile_q=32)
+        dd, di = idx.query(q, k=7)
+        assert idx.stats.compactions == 2, (
+            "shape must cross both rungs to exercise the ladder "
+            f"(got {idx.stats.compactions} compactions)"
+        )
+        assert idx.stats.tail_rounds > 0
+        bd, bi = self._oracle(pts, q, 7)
+        np.testing.assert_allclose(dd, bd, rtol=1e-6, atol=1e-6)
+        np.testing.assert_array_equal(di, bi)
+
+    def test_m_below_smallest_rung_exact_vs_brute(self):
+        pts, q = _data(3000, 24, 5, seed=3)   # m=24 < COMPACTION_MIN
+        idx = BufferKDTree(pts, height=4, n_chunks=2, tile_q=16)
+        dd, di = idx.query(q, k=5)
+        assert idx.stats.compactions == 0
+        assert idx.stats.tail_rounds == 0
+        bd, bi = self._oracle(pts, q, 5)
+        np.testing.assert_allclose(dd, bd, rtol=1e-6, atol=1e-6)
+        np.testing.assert_array_equal(di, bi)
+
+    def test_ladder_rungs_compile_at_most_once(self):
+        """Entered rungs add one fused-round compile each on the FIRST
+        query; repeat queries (same batch shape, different content and
+        different live-count trajectories) must add none."""
+        pts, q = _data(8000, 608, 6, seed=29)   # distinct m: fresh shapes
+        idx = BufferKDTree(pts, height=6, n_chunks=2, tile_q=32)
+        round_before = chunk_round_cache_size()
+        compact_before = compaction_cache_size()
+        dd, di = idx.query(q, k=7)
+        crossed = idx.stats.compactions
+        assert crossed == 2
+        round_after_warm = chunk_round_cache_size()
+        # one compile for the full shape + one per rung entered, no more
+        assert round_after_warm - round_before <= 1 + crossed
+        assert compaction_cache_size() - compact_before <= crossed
+        rng = np.random.default_rng(31)
+        for seed in range(3):
+            q2 = rng.normal(size=(608, 6)).astype(np.float32)
+            idx.query(q2, k=7)
+        assert chunk_round_cache_size() == round_after_warm
+        assert compaction_cache_size() - compact_before <= crossed
+
+    def test_warm_makes_compiled_set_trajectory_independent(self):
+        """After an explicit warm, NO query (whatever rungs its live-count
+        trajectory enters) may add a fused-round or gather compile."""
+        pts, q = _data(8000, 616, 6, seed=41)   # distinct m: fresh shapes
+        idx = BufferKDTree(pts, height=6, n_chunks=2, tile_q=32)
+        before = chunk_round_cache_size()
+        idx.warm(616, k=7)
+        warmed_round = chunk_round_cache_size()
+        warmed_compact = compaction_cache_size()
+        # full shape + both rungs, in one deterministic step (<= because
+        # rung shapes may already be shared with another tree's ladder)
+        from repro.core.chunked_jit import compaction_ladder
+
+        assert 1 <= warmed_round - before <= 1 + len(compaction_ladder(616))
+        rng = np.random.default_rng(43)
+        for _ in range(3):
+            q2 = rng.normal(size=(616, 6)).astype(np.float32)
+            idx.query(q2, k=7)
+        assert chunk_round_cache_size() == warmed_round
+        assert compaction_cache_size() == warmed_compact
+
+    def test_compacted_stats_phases(self):
+        pts, q = _data(8000, 600, 6, seed=23)
+        idx = BufferKDTree(pts, height=6, n_chunks=2, tile_q=32)
+        idx.query(q, k=7)
+        st = idx.stats
+        assert st.steady_rounds + st.tail_rounds == st.iterations
+        assert st.steady_s > 0 and st.tail_s > 0
+        # queries_advanced sums the CURRENT shape per round, so it must be
+        # strictly below the no-ladder cost rounds * m
+        assert st.queries_advanced < st.iterations * 600
+
+
+class TestMeasuredCostScheduler:
+    def test_pending_desc_order_and_starvation(self):
+        from repro.core.chunked_jit import ChunkResidentEngine
+
+        eng = ChunkResidentEngine.__new__(ChunkResidentEngine)
+        eng.starvation_deadline = 2
+        starve = np.zeros(4, np.int32)
+        counts = np.array([5, 80, 0, 40])
+        # threshold admits chunks 1 and 3; order is pending-desc
+        visit = eng._visit_order(counts, threshold=20, starve=starve)
+        assert visit.tolist() == [1, 3]
+        assert starve.tolist() == [1, 0, 0, 0]
+        # chunk 0 pends below threshold; after `deadline` skipped rounds it
+        # must be force-visited
+        visit = eng._visit_order(counts, threshold=20, starve=starve)
+        assert visit.tolist() == [1, 3]
+        visit = eng._visit_order(counts, threshold=20, starve=starve)
+        assert 0 in visit.tolist()
+
+    def test_forced_flush_when_nothing_meets_threshold(self):
+        from repro.core.chunked_jit import ChunkResidentEngine
+
+        eng = ChunkResidentEngine.__new__(ChunkResidentEngine)
+        eng.starvation_deadline = 4
+        starve = np.zeros(3, np.int32)
+        visit = eng._visit_order(
+            np.array([3, 7, 0]), threshold=100, starve=starve
+        )
+        assert visit.tolist() == [1, 0]   # all pending, densest first
