@@ -1,0 +1,162 @@
+"""Batch-dynamic vs rebuild-from-scratch ingest crossover (BENCH_dynamic.json).
+
+The dynamic engine's claim is economic: absorbing an insert batch through
+the logarithmic-method carry chain must beat rebuilding the static index
+from scratch — until the batch is so large that one flattening rebuild IS
+the cheaper move (the planner's rebuild-vs-merge crossover).  This bench
+measures both sides of that claim on the canonical CPU smoke shape:
+
+  for each batch size b:
+    dynamic_insert_s   amortized seconds to insert one b-sized batch into a
+                       mutable ``KNNIndex`` (averaged over ``REPS`` batches,
+                       so occasional carry-chain merges are charged to the
+                       batches that caused them)
+    rebuild_s          seconds to build a fresh static (chunked) index over
+                       n + b points — the rebuild-from-scratch alternative
+    post_query_s       one m-query batch against the grown dynamic forest
+                       (fan-out + rank-merge overhead, for context)
+
+  crossover_batch      smallest measured b where rebuild-from-scratch is at
+                       least as fast as the amortized batch-dynamic insert
+                       (null = batch-dynamic won at every measured size)
+  build_pps            static build throughput (points/sec) — feeds
+                       ``planner.Calibration`` so plan() can cost the
+                       crossover in measured seconds
+  measured_at          ISO timestamp; ``Calibration.load`` derives staleness
+                       from file mtimes and warns past 7 days
+
+Canonical runs (scale >= 1.0) write ``BENCH_dynamic.json`` at the repo root
+and ASSERT that batch-dynamic ingest beats rebuild-from-scratch at every
+measured batch size below the crossover.  Run directly::
+
+    PYTHONPATH=src python -m benchmarks.dynamic_bench [--scale 0.25]
+"""
+
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks import common
+
+N, D, M, K = 20_000, 8, 1_000, 10
+BATCH_LADDER = (256, 1024, 4096, 16384)
+REPS = 6   # insert batches amortized per measurement
+
+
+def _time_ingest(pts: np.ndarray, batches: list):
+    """(amortized seconds per insert batch, the grown index)."""
+    from repro.api import IndexSpec, KNNIndex
+
+    idx = KNNIndex.build(pts, spec=IndexSpec(mutable=True, k_hint=K))
+    t0 = time.perf_counter()
+    for batch in batches:
+        idx.insert(batch)
+    return (time.perf_counter() - t0) / len(batches), idx
+
+
+def run(scale: float = 1.0) -> dict:
+    from repro.api import IndexSpec, KNNIndex
+
+    n = max(4096, int(N * scale))
+    m = max(256, int(M * scale))
+    rng = np.random.default_rng(0)
+    pts = rng.normal(size=(n, D)).astype(np.float32)
+    q = rng.normal(size=(m, D)).astype(np.float32)
+
+    # static build throughput: the rebuild side's cost model input
+    t_build = common.timeit(
+        lambda: KNNIndex.build(
+            pts, spec=IndexSpec(engine="chunked", k_hint=K)
+        ),
+        repeat=3, warmup=1,
+    )
+    build_pps = n / t_build
+    common.row("dynamic/static_build", t_build, f"n={n};{build_pps:.0f} pts/s")
+
+    batch_sizes, dynamic_s, rebuild_s, post_query_s = [], [], [], []
+    for b in BATCH_LADDER:
+        b = max(64, int(b * scale))
+        batches = [
+            rng.normal(size=(b, D)).astype(np.float32) for _ in range(REPS)
+        ]
+        t_dyn, idx = _time_ingest(pts, batches)
+        t_q = common.timeit(lambda: idx.query(q, k=K), repeat=1, warmup=1)
+        grown = np.concatenate([pts, batches[0]])
+        t_reb = common.timeit(
+            lambda: KNNIndex.build(
+                grown, spec=IndexSpec(engine="chunked", k_hint=K)
+            ),
+            repeat=3, warmup=0,
+        )
+        batch_sizes.append(b)
+        dynamic_s.append(t_dyn)
+        rebuild_s.append(t_reb)
+        post_query_s.append(t_q)
+        common.row(
+            f"dynamic/ingest_b{b}", t_dyn,
+            f"rebuild={t_reb * 1e6:.0f}us;query={t_q * 1e6:.0f}us",
+        )
+
+    crossover = None
+    for b, td, tr in zip(batch_sizes, dynamic_s, rebuild_s):
+        if tr <= td:
+            crossover = b
+            break
+
+    result = {
+        "shape": {"n": n, "d": D, "m": m, "k": K},
+        "scale": scale,
+        "batch_sizes": batch_sizes,
+        "dynamic_insert_s": dynamic_s,
+        "rebuild_s": rebuild_s,
+        "post_query_s": post_query_s,
+        "crossover_batch": crossover,
+        "build_pps": build_pps,
+        "measured_at": datetime.datetime.now(datetime.timezone.utc)
+        .isoformat(timespec="seconds"),
+    }
+
+    # the claim itself: below the crossover, batch-dynamic must win
+    for b, td, tr in zip(batch_sizes, dynamic_s, rebuild_s):
+        if crossover is not None and b >= crossover:
+            break
+        assert td < tr, (
+            f"batch-dynamic ingest lost below the crossover: batch {b} "
+            f"took {td:.4f}s vs rebuild {tr:.4f}s"
+        )
+
+    if scale >= 1.0:
+        out = os.path.join(
+            os.path.dirname(__file__), "..", "BENCH_dynamic.json"
+        )
+        with open(os.path.abspath(out), "w") as f:
+            json.dump(result, f, indent=2)
+            f.write("\n")
+
+    win = [f"{tr / td:.0f}x" for td, tr in zip(dynamic_s, rebuild_s)]
+    print(
+        f"# dynamic bench (scale {scale}): ingest speedup vs rebuild "
+        f"{dict(zip(batch_sizes, win))} crossover_batch={crossover}",
+        flush=True,
+    )
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="size multiplier; < 1.0 does not write "
+                         "BENCH_dynamic.json")
+    args = ap.parse_args()
+    common.emit_header()
+    run(scale=args.scale)
+
+
+if __name__ == "__main__":
+    main()

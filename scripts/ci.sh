@@ -18,7 +18,12 @@ else
 fi
 
 echo "== tier-1 pytest =="
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+# REPRO_DYNAMIC_SEED pins the dynamic-index generative parity harness's 200
+# scripts; REPRO_HYPOTHESIS_PROFILE=ci derandomizes the hypothesis-driven
+# fuzz suites (where hypothesis is installed) — a red tier-1 always
+# reproduces with the same generated examples.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} REPRO_DYNAMIC_SEED=0 \
+    REPRO_HYPOTHESIS_PROFILE=ci python -m pytest -x -q
 
 # Fast perf smoke: a quarter-scale engine bench.  engine_bench asserts the
 # recompile-free guarantee (fused round + every entered compaction-ladder
@@ -26,6 +31,17 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 # Sub-1.0 scale never writes BENCH_engine.json (trajectory stays canonical).
 echo "== perf smoke (engine bench @ scale 0.25) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.engine_bench --scale 0.25
+
+# Dynamic-index gate: tier-1 above already ran the full 200-script parity
+# harness under the pinned seed; this step re-asserts only the pieces that
+# gate a merge by name — the hypothesis-driven interleavings (derandomized
+# 'ci' profile) and the carry-chain compile-count regression — in a FRESH
+# process, so the compile counters start from an empty jit cache instead
+# of whatever the tier-1 run happened to leave behind.
+echo "== dynamic hypothesis interleavings + compile-count regression =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} REPRO_DYNAMIC_SEED=0 \
+    REPRO_HYPOTHESIS_PROFILE=ci python -m pytest -x -q tests/test_dynamic.py \
+    -k "hypothesis_interleavings or CarryChain"
 
 if [[ "${1:-}" == "--slow" ]]; then
     echo "== slow suite =="

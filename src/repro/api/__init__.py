@@ -15,7 +15,8 @@ Layers (each importable on its own):
   planner  ``plan(n, d, m, k, devices, memory_budget)`` — the paper's §3
            device-memory constraint and §3.2 topology split as a cost model
   engines  the registered strategies: brute, kdtree, host, chunked, jit,
-           sharded, forest, ring
+           sharded, forest, ring, dynamic (the mutable one:
+           ``KNNIndex.insert``/``delete``)
   index    the ``KNNIndex`` facade tying them together
 
 ``knn_brute`` is re-exported as the ground-truth oracle (it is also the
@@ -28,11 +29,18 @@ from repro.api.engine import (
     Engine,
     EngineBase,
     EngineCaps,
+    MutabilityError,
     available_engines,
     get_engine,
     register_engine,
 )
-from repro.api.planner import Calibration, Plan, estimate_slab_bytes, plan
+from repro.api.planner import (
+    CALIBRATION_STALE_S,
+    Calibration,
+    Plan,
+    estimate_slab_bytes,
+    plan,
+)
 from repro.api.spec import IndexSpec, QueryResult, SearchStats
 from repro.api.index import KNNIndex
 
@@ -53,9 +61,11 @@ __all__ = [
     "plan",
     "estimate_slab_bytes",
     "Calibration",
+    "CALIBRATION_STALE_S",
     "Engine",
     "EngineBase",
     "EngineCaps",
+    "MutabilityError",
     "register_engine",
     "get_engine",
     "available_engines",

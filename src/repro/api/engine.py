@@ -18,8 +18,11 @@ Registration is declarative::
         caps = EngineCaps(exact=True, out_of_core=False, multi_device=False)
         ...
 
-which is how future engines (GPU Pallas leaf scans, async streaming,
-incremental insert) plug in without touching the facade or its call sites.
+which is how future engines (GPU Pallas leaf scans, async streaming) plug
+in without touching the facade or its call sites — the batch-dynamic
+``dynamic`` engine arrived exactly this way, adding only the optional
+``insert``/``delete`` hooks below (immutable engines inherit defaults that
+raise the typed ``MutabilityError``).
 """
 
 from __future__ import annotations
@@ -35,10 +38,19 @@ __all__ = [
     "Engine",
     "EngineBase",
     "EngineCaps",
+    "MutabilityError",
     "register_engine",
     "get_engine",
     "available_engines",
 ]
+
+
+class MutabilityError(TypeError):
+    """``insert``/``delete`` called on an engine with ``caps.mutable=False``.
+
+    A typed error so callers can distinguish "this engine cannot mutate"
+    (pick a mutable engine, e.g. ``dynamic``, or rebuild) from argument
+    mistakes that raise ``ValueError``."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +62,7 @@ class EngineCaps:
     multi_device: bool = False  # uses >1 device
     needs_build: bool = True    # has a build phase (tree construction)
     stateful_query: bool = False  # query mutates state: one batch at a time
+    mutable: bool = False       # supports incremental insert/delete
     description: str = ""
 
 
@@ -68,6 +81,27 @@ class EngineBase:
     ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
         """Exact kNN of ``queries`` against the built state."""
         raise NotImplementedError
+
+    def insert(self, state, points: np.ndarray) -> np.ndarray:
+        """Incrementally add ``points``; returns assigned i64 ids.
+
+        Only engines declaring ``caps.mutable`` implement this; the default
+        raises the typed ``MutabilityError`` (the ``KNNIndex`` facade's
+        caps-contract, tested in ``tests/test_api.py``)."""
+        raise MutabilityError(
+            f"engine {self.name!r} is immutable (caps.mutable=False); "
+            "rebuild the index, or plan with mutable=True / engine='dynamic'"
+        )
+
+    def delete(self, state, ids) -> int:
+        """Incrementally remove the given ids; returns the count removed.
+
+        Same contract as ``insert``: immutable engines raise
+        ``MutabilityError``."""
+        raise MutabilityError(
+            f"engine {self.name!r} is immutable (caps.mutable=False); "
+            "rebuild the index, or plan with mutable=True / engine='dynamic'"
+        )
 
     def resident_bytes(self, plan, state=None) -> int:
         """Device bytes the reference structure occupies under ``plan``

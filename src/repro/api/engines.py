@@ -11,6 +11,8 @@ how the work is scheduled* — which is precisely what the planner chooses on:
   sharded  paper §3.2 query chunking: one tree replica per device
   forest   per-shard buffer k-d trees under shard_map + all-gather merge
   ring     reference shards resident, query blocks rotated over the ICI
+  dynamic  batch-dynamic logarithmic-method forest of static shards — the
+           one MUTABLE engine (insert/delete); see core/dynamic.py
 
 Engines translate their implementation's native conventions (squared vs
 Euclidean distances, local vs global ids, i32 vs i64) into the one
@@ -428,3 +430,51 @@ class RingEngine(EngineBase):
         # raw reference shard per chip (no leaf-structure padding)
         p = max(1, plan.n_shards)
         return _round_up(plan.n, p) * plan.d * 4 // p
+
+
+# ---------------------------------------------------------------------------
+@register_engine
+class DynamicEngine(EngineBase):
+    name = "dynamic"
+    # stateful_query: shards above the brute cutoff are BufferKDTree
+    # instances, whose queries mutate queues/chunk slots — and insert/
+    # delete rebuild shards, so the facade's lock serializes all three
+    caps = EngineCaps(
+        exact=True, out_of_core=True, multi_device=False,
+        stateful_query=True, mutable=True,
+        description="batch-dynamic logarithmic-method forest "
+                    "(incremental insert/delete)",
+    )
+
+    def build(self, points, spec, plan):
+        from repro.api.planner import BRUTE_N_MAX
+        from repro.core.dynamic import DEFAULT_BASE_CAPACITY, DynamicIndex
+
+        return DynamicIndex.from_points(
+            points,
+            # shard rungs are B * 2^i with B from the plan's buffer size,
+            # capped at the default so footnote-8 buffers on shallow trees
+            # don't inflate the smallest rung
+            base_capacity=min(plan.buffer_size, DEFAULT_BASE_CAPACITY),
+            brute_cutoff=BRUTE_N_MAX,
+            rebuild_crossover=plan.crossover_batch,
+            tile_q=plan.tile_q,
+            backend=plan.backend,
+            device=spec.devices[0] if spec.devices else None,
+        )
+
+    def query(self, state, queries, k):
+        return state.query(queries, k)
+
+    def insert(self, state, points):
+        return state.insert(points)
+
+    def delete(self, state, ids):
+        return state.delete(ids)
+
+    def resident_bytes(self, plan, state=None) -> int:
+        if state is not None:
+            return state.resident_bytes()         # measured, not estimated
+        # worst case the forest holds ~2x the flat slab (carry-chain
+        # shards are power-of-two padded)
+        return 2 * plan.slab_bytes

@@ -21,7 +21,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.api.engine import EngineBase, get_engine
+from repro.api.engine import EngineBase, MutabilityError, get_engine
 from repro.api.planner import Plan, plan as make_plan
 from repro.api.spec import IndexSpec, QueryResult, SearchStats
 
@@ -49,6 +49,14 @@ class KNNIndex:
         self._qlock = (
             threading.Lock() if engine.caps.stateful_query else None
         )
+
+    def _serialized(self, fn, *args):
+        """Run one engine hook under the stateful-engine lock (no lock for
+        stateless engines, so concurrent serving callers stay parallel)."""
+        if self._qlock is None:
+            return fn(*args)
+        with self._qlock:
+            return fn(*args)
 
     # ------------------------------------------------------------------
     @classmethod
@@ -86,6 +94,7 @@ class KNNIndex:
             tile_q=spec.tile_q,
             backend=spec.backend,
             calibration=spec.calibration,
+            mutable=spec.mutable,
         )
         engine = get_engine(pl.engine)
         state = engine.build(points, spec, pl)
@@ -106,15 +115,54 @@ class KNNIndex:
             )
         if k > self.n:
             raise ValueError(f"k={k} > n={self.n}")
-        if self._qlock is not None:
-            with self._qlock:
-                dists, idx, stats = self._engine.query(self._state, queries, k)
-        else:
-            dists, idx, stats = self._engine.query(self._state, queries, k)
+        dists, idx, stats = self._serialized(
+            self._engine.query, self._state, queries, k
+        )
         self._last_stats = stats
         return QueryResult(
             dists=dists, idx=idx, stats=stats, engine=self.plan.engine, k=k
         )
+
+    # ------------------------------------------------------------------
+    def insert(self, points: np.ndarray) -> np.ndarray:
+        """Incrementally add ``points``; returns their assigned i64 ids.
+
+        Ids are allocated in insertion order (``build``'s points hold
+        ``0..n-1``) and are what ``query`` returns, so value arrays
+        appended in lockstep stay aligned.  Engines declaring
+        ``caps.mutable=False`` raise the typed ``MutabilityError`` — plan
+        with ``mutable=True`` (or pin ``engine="dynamic"``) for an index
+        that accepts this call.
+        """
+        if not self._engine.caps.mutable:
+            raise MutabilityError(
+                f"engine {self.engine_name!r} is immutable "
+                "(caps.mutable=False); build with IndexSpec(mutable=True)"
+            )
+        points = np.asarray(points, dtype=np.float32)
+        if points.ndim != 2 or points.shape[1] != self.d:
+            raise ValueError(
+                f"points must be [b, {self.d}], got {points.shape}"
+            )
+        ids = self._serialized(self._engine.insert, self._state, points)
+        self.n = getattr(self._state, "n_live", self.n + points.shape[0])
+        return ids
+
+    def delete(self, ids) -> int:
+        """Incrementally remove the given ids; returns the count removed.
+
+        Exact, never best-effort: unknown / already-deleted / duplicated
+        ids raise ``KeyError`` and nothing is removed.  Immutable engines
+        raise ``MutabilityError`` (see ``insert``).
+        """
+        if not self._engine.caps.mutable:
+            raise MutabilityError(
+                f"engine {self.engine_name!r} is immutable "
+                "(caps.mutable=False); build with IndexSpec(mutable=True)"
+            )
+        removed = self._serialized(self._engine.delete, self._state, ids)
+        self.n = getattr(self._state, "n_live", self.n - removed)
+        return removed
 
     # ------------------------------------------------------------------
     def warm(self, m: int, k: Optional[int] = None) -> None:
@@ -132,11 +180,7 @@ class KNNIndex:
             return
         # warming streams chunk slabs through the same store a query uses:
         # stateful engines must not see both at once
-        if self._qlock is not None:
-            with self._qlock:
-                warm(int(m), k)
-        else:
-            warm(int(m), k)
+        self._serialized(warm, int(m), k)
 
     @property
     def engine_name(self) -> str:

@@ -45,7 +45,10 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import os
+import time
+import warnings
 from typing import Any, Mapping, Optional, Sequence, Tuple
 
 from repro.core.chunked_jit import DEFAULT_STARVATION_DEADLINE
@@ -58,6 +61,7 @@ __all__ = [
     "Calibration",
     "BRUTE_N_MAX",
     "BRUTE_WORK_MAX",
+    "CALIBRATION_STALE_S",
 ]
 
 # Below this reference-set size the tree cannot pay for itself on any
@@ -67,6 +71,11 @@ BRUTE_N_MAX = 2048
 # Below this total distance-pair count (m * n) the whole job fits in a
 # couple of brute tiles — tree construction would dominate end-to-end time.
 BRUTE_WORK_MAX = 1 << 21
+
+# Calibration measurements older than this are STALE: the planner still
+# uses them (measured-but-old usually beats rule-based) but warns and
+# records the staleness in Plan.reasons so decisions stay auditable.
+CALIBRATION_STALE_S = 7 * 24 * 3600.0
 
 _F32 = 4
 
@@ -121,7 +130,25 @@ class Calibration:
     h2d_latency_s: float = 0.0             # fixed per-transfer cost
     round_s: Optional[float] = None        # one fused round, reference shape
     engine_qps: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    build_pps: Optional[float] = None      # static index build, points/sec
+    dynamic_crossover: Optional[int] = None  # measured batch size beyond
+                                           # which rebuild-from-scratch beats
+                                           # batch-dynamic merge (dynamic_bench)
+    dynamic_measured: bool = False         # True when dynamic_bench ran —
+                                           # distinguishes "measured: no
+                                           # crossover in range" (crossover
+                                           # None, batch-dynamic always won)
+                                           # from "never measured"
+    age_s: Optional[float] = None          # seconds since the OLDEST source
+                                           # file was measured; None = unknown
     source: str = ""
+
+    @property
+    def stale(self) -> bool:
+        """True when the oldest source measurement has outlived
+        ``CALIBRATION_STALE_S`` — plan() warns and records it in reasons
+        instead of silently trusting old numbers."""
+        return self.age_s is not None and self.age_s > CALIBRATION_STALE_S
 
     def chunk_copy_s(self, chunk_bytes: int) -> Optional[float]:
         """Predicted seconds to stream one chunk slab host->device."""
@@ -148,8 +175,10 @@ class Calibration:
                 os.path.join(os.path.dirname(__file__), "..", "..", "..")
             )
         h2d_gbps, h2d_latency_s, round_s = None, 0.0, None
+        build_pps, dynamic_crossover = None, None
         engine_qps: dict = {}
         sources = []
+        mtimes = []
         cc = os.path.join(root, "BENCH_copy_cost.json")
         if os.path.exists(cc):
             with open(cc) as f:
@@ -158,6 +187,7 @@ class Calibration:
             h2d_latency_s = data.get("h2d_latency_s", 0.0)
             round_s = data.get("round_s")
             sources.append("BENCH_copy_cost.json")
+            mtimes.append(os.path.getmtime(cc))
         eb = os.path.join(root, "BENCH_engine.json")
         if os.path.exists(eb):
             with open(eb) as f:
@@ -170,11 +200,30 @@ class Calibration:
                 if qps:
                     engine_qps[eng] = float(qps)
             sources.append("BENCH_engine.json")
+            mtimes.append(os.path.getmtime(eb))
+        db = os.path.join(root, "BENCH_dynamic.json")
+        dynamic_measured = False
+        if os.path.exists(db):
+            with open(db) as f:
+                data = json.load(f)
+            build_pps = data.get("build_pps")
+            dynamic_crossover = data.get("crossover_batch")
+            dynamic_measured = True
+            sources.append("BENCH_dynamic.json")
+            mtimes.append(os.path.getmtime(db))
         if not sources:
             return None
+        # age from file mtimes, not an embedded field: it tracks when the
+        # numbers landed on THIS machine (a fresh checkout of committed
+        # bench JSONs is "new but foreign" — the provenance caveat above —
+        # while a file untouched for weeks is genuinely stale either way)
         return cls(
             h2d_gbps=h2d_gbps, h2d_latency_s=h2d_latency_s, round_s=round_s,
-            engine_qps=engine_qps, source="+".join(sources),
+            engine_qps=engine_qps, build_pps=build_pps,
+            dynamic_crossover=dynamic_crossover,
+            dynamic_measured=dynamic_measured,
+            age_s=max(0.0, time.time() - min(mtimes)),
+            source="+".join(sources),
         )
 
 
@@ -199,6 +248,9 @@ class Plan:
     visit_policy: str = "pending_desc"   # chunk-visit ordering policy
     starvation_deadline: int = DEFAULT_STARVATION_DEADLINE
     calibrated: bool = False    # True when a Calibration informed decisions
+    crossover_batch: Optional[int] = None  # dynamic engine: insert batches
+                                           # >= this trigger a flattening
+                                           # rebuild instead of a carry chain
     reasons: Tuple[str, ...] = ()
 
     def replace(self, **kw) -> "Plan":
@@ -221,6 +273,7 @@ def plan(
     tile_q: int = 128,
     backend: str = "auto",
     calibration: Optional[Calibration] = None,
+    mutable: Optional[bool] = None,
 ) -> Plan:
     """Pick an engine + parameters for (n, d) references and (m, k) queries.
 
@@ -230,7 +283,9 @@ def plan(
     bytes available for the leaf structure; ``None`` means unconstrained.
     ``calibration`` substitutes measured numbers (H2D bandwidth, round cost,
     per-engine q/s) for the static rules where it has them — see
-    ``Calibration``.
+    ``Calibration``.  ``mutable=True`` requires an engine with incremental
+    ``insert``/``delete`` (the ``dynamic`` logarithmic-method forest); the
+    rebuild-vs-merge crossover is costed here and pinned into the plan.
     """
     if n < 1 or d < 1:
         raise ValueError(f"need n >= 1, d >= 1; got n={n} d={d}")
@@ -242,6 +297,19 @@ def plan(
         devices = jax.devices()
     p = max(1, len(devices))
     reasons: list = []
+
+    if calibration is not None and calibration.stale:
+        age_d = calibration.age_s / 86400.0
+        warnings.warn(
+            f"planner calibration is {age_d:.1f} days old "
+            f"(source: {calibration.source}); re-run benchmarks/"
+            "copy_cost.py and benchmarks/engine_bench.py to refresh",
+            stacklevel=2,
+        )
+        reasons.append(
+            f"calibration stale: oldest source measured {age_d:.1f}d ago "
+            f"({calibration.source}); using it, but numbers may have drifted"
+        )
 
     h, h_reasons = _clamp_height(n, k, height)
     reasons.extend(h_reasons)
@@ -340,8 +408,74 @@ def plan(
     brute_fits = (
         memory_budget is None or resident_for("brute") <= memory_budget
     )
+
+    def mutable_costing() -> Tuple[Optional[int], str]:
+        """Rebuild-vs-merge crossover for the dynamic engine.
+
+        A batch of b points absorbed by the carry chain costs ~b*levels
+        amortized point-rebuilds (each point re-participates once per rung
+        it climbs); absorbing it by rebuilding from scratch costs ~n+b.
+        They cross at b* ~ n/levels — batches beyond that should flatten.
+        A measurement (benchmarks/dynamic_bench.py -> BENCH_dynamic.json)
+        overrides the model — including a measured NULL crossover, which
+        means batch-dynamic won at every measured size and nothing may be
+        forced through a flattening rebuild; measured build throughput
+        turns the reason's ratios into seconds."""
+        from repro.core.dynamic import DEFAULT_BASE_CAPACITY
+
+        levels = max(
+            1, math.ceil(math.log2(max(2.0, n / DEFAULT_BASE_CAPACITY)))
+        )
+        if calibration is not None and calibration.dynamic_measured:
+            if calibration.dynamic_crossover:
+                cx = int(calibration.dynamic_crossover)
+                return cx, (
+                    f"mutable: dynamic engine; measured rebuild-vs-merge "
+                    f"crossover at batches >= {cx} points "
+                    f"({calibration.source})"
+                )
+            return None, (
+                "mutable: dynamic engine; measured: batch-dynamic ingest "
+                "won at every measured batch size, no flattening "
+                f"threshold pinned ({calibration.source})"
+            )
+        cx = max(DEFAULT_BASE_CAPACITY, n // levels)
+        note = (
+            f"mutable: dynamic engine; carry-chain merge touches a point "
+            f"<= {levels}x vs full rebuild of {n}, modeled crossover at "
+            f"batches >= {cx}"
+        )
+        if calibration is not None and calibration.build_pps:
+            note += (
+                f" (~{cx * levels / calibration.build_pps:.2f}s merge "
+                f"~= {(n + cx) / calibration.build_pps:.2f}s rebuild at "
+                f"{calibration.build_pps:.0f} pts/s)"
+            )
+        return cx, note
+
+    if mutable and engine is not None:
+        try:
+            from repro.api.engine import get_engine
+
+            caps = get_engine(engine).caps
+        except KeyError:
+            caps = None
+        if caps is not None and not caps.mutable:
+            raise ValueError(
+                f"mutable=True but pinned engine {engine!r} declares "
+                "caps.mutable=False; unpin the engine or pick a mutable "
+                "one (e.g. 'dynamic')"
+            )
     if engine is None:
-        if not tree_requested and small_job and brute_fits:
+        if mutable:
+            engine = "dynamic"
+            if p > 1:
+                reasons.append(
+                    f"{p} devices visible but mutability wins: the dynamic "
+                    "engine is single-device (multi-device mutable shards "
+                    "are an open roadmap item)"
+                )
+        elif not tree_requested and small_job and brute_fits:
             engine = "brute"
             reasons.append(
                 f"n={n} <= {BRUTE_N_MAX}, k~O(n), or m*n <= "
@@ -424,6 +558,22 @@ def plan(
         else:
             reasons.append(f"N={n_chunks} chunks pinned by caller")
 
+    crossover = None
+    if engine == "dynamic":
+        crossover, cx_note = mutable_costing()
+        reasons.append(cx_note)
+        if memory_budget is not None:
+            est = resident_for("dynamic")
+            if est > memory_budget:
+                # unlike chunked/sharded, the dynamic forest cannot chunk-
+                # stream its shards yet — say so instead of silently
+                # ignoring the §3 constraint every other branch honors
+                reasons.append(
+                    f"memory_budget {memory_budget}B below the dynamic "
+                    f"forest's resident estimate {est}B: best effort "
+                    "(mutable shard chunk-streaming is a roadmap item)"
+                )
+
     nc = int(n_chunks) if n_chunks is not None else 1
     ns = int(n_shards) if n_shards is not None else (
         p if engine in ("forest", "sharded", "ring") else 1
@@ -436,5 +586,6 @@ def plan(
         resident_bytes=resident_for(engine, nc, ns),
         starvation_deadline=deadline,
         calibrated=calibration is not None,
+        crossover_batch=crossover,
         reasons=tuple(reasons), **base
     )

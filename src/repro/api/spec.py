@@ -49,6 +49,9 @@ class IndexSpec:
     memory_budget: Optional[int] = None   # device bytes for the leaf structure
     calibration: Optional[Any] = None     # planner.Calibration (measured costs);
                                           # None => plan by rule
+    mutable: Optional[bool] = None        # True: index must support
+                                          # insert/delete (planner picks a
+                                          # mutable engine, e.g. 'dynamic')
 
     def replace(self, **kw) -> "IndexSpec":
         return dataclasses.replace(self, **kw)

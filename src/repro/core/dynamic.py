@@ -1,0 +1,493 @@
+"""Batch-dynamic mutable index: a logarithmic-method forest of static shards.
+
+The paper's buffer k-d tree is STATIC: any change to the reference catalog
+means a full rebuild.  This module adds incremental ``insert``/``delete``
+without touching the static engines, using the classic logarithmic method
+(Bentley–Saxe; Parallel Batch-Dynamic kd-trees, PAPERS.md): the live point
+multiset is partitioned across a small forest of *immutable* shards whose
+capacities are ``B * 2^i`` (at most one shard per size rung, like the bits
+of a binary counter), and every shard is served by one of the repo's
+existing static engines:
+
+    rung capacity <= brute_cutoff   ->  ``knn_brute`` over the padded slab
+    rung capacity  > brute_cutoff   ->  ``BufferKDTree`` (chunked engine)
+
+  insert(points)   the batch becomes a new shard at the smallest fitting
+                   rung; while another shard occupies that rung the two are
+                   merged (live points collected, shard rebuilt one rung up
+                   if needed) — the binary-counter CARRY CHAIN.  Each point
+                   therefore participates in O(log(n/B)) rebuilds over the
+                   index lifetime, far below rebuild-from-scratch per batch.
+                   Batches at or beyond the rebuild/merge crossover (see
+                   ``rebuild_crossover``) skip the chain and trigger one
+                   flattening rebuild — the planner's rebuild-vs-merge cost
+                   decision, applied.
+  delete(ids)      TOMBSTONES: the row's ``live`` bit is cleared, the shard
+                   untouched.  A shard whose tombstone count exceeds
+                   ``tomb_limit`` is compacted (rebuilt from its live rows,
+                   possibly dropping to a smaller rung); a shard with no
+                   live rows is dropped outright.
+  query(q, k)      fans out over live shards and rank-merges their top-k.
+
+EXACTNESS UNDER TOMBSTONES (the invariant the parity harness checks): every
+query fetches ``w = k + tomb_limit`` candidates per shard (capped at the
+shard capacity).  A shard never holds more than ``tomb_limit`` tombstones at
+query time, so its nearest ``w`` overall candidates contain at least ``k``
+live ones — and those are exactly its nearest live points (any closer live
+point would itself be fetched).  The union over shards therefore contains
+the global top-k of the live multiset; tombstoned/padding candidates are
+masked to +inf and the per-shard sorted lists are folded with the Pallas
+kernel's two-phase ``_rank_merge`` (kernels/knn_scan.py) at the fixed width
+``w``, one jitted pairwise merge per shard.
+
+RECOMPILE DISCIPLINE (same contract as the compaction ladder): per-shard
+query shapes depend only on the rung, never on live counts —
+
+  * shard slabs are padded to their rung capacity with ``PAD_COORD`` rows
+    (the repo's standard can't-win padding), so a rung has ONE reference
+    shape for the lifetime of the process;
+  * query batches are padded up to a power-of-two rung (``_pad_batch``), so
+    at most one compile per (batch rung, shard rung, k) triple;
+  * the merge chain is a Python fold over ONE jitted pairwise function, so
+    its compile count is independent of how many shards are live.
+
+``tests/test_dynamic.py`` holds the generative parity harness (random
+insert/delete/query interleavings vs ``knn_brute`` over the live multiset)
+and the carry-chain compile-count regression.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.brute import knn_brute
+from repro.core.lazysearch import BufferKDTree, SearchStats
+from repro.core.toptree import PAD_COORD, suggest_height
+from repro.kernels.knn_scan import _rank_merge
+
+__all__ = [
+    "DynamicIndex",
+    "DEFAULT_BASE_CAPACITY",
+    "DEFAULT_TOMB_LIMIT",
+    "DEFAULT_BRUTE_CUTOFF",
+    "merge_cache_size",
+    "shard_scan_cache_size",
+]
+
+DEFAULT_BASE_CAPACITY = 1024   # B: smallest shard rung (paper footnote-8 scale)
+DEFAULT_TOMB_LIMIT = 32        # per-shard tombstones before compaction
+DEFAULT_BRUTE_CUTOFF = 2048    # rungs above this get a BufferKDTree engine
+
+_MIN_BATCH_PAD = 16            # smallest padded query-batch rung
+_BRUTE_TILE_X = 2048           # reference tile for brute shards (cap-aligned)
+_BRUTE_TILE_Q = 1024           # query tile for brute shards (ladder-aligned)
+
+
+def _pad_batch(m: int) -> int:
+    """Next power-of-two batch rung >= m (floored at ``_MIN_BATCH_PAD``)."""
+    p = _MIN_BATCH_PAD
+    while p < m:
+        p <<= 1
+    return p
+
+
+# ---------------------------------------------------------------------------
+# jitted merge chain: filter/sort one shard's candidate list, then fold with
+# the kernel's two-phase rank merge.  Candidates travel as i32 CODES
+# ``shard_slot * w + column`` (decoded to global i64 ids on the host) so the
+# merge reuses ``_rank_merge`` verbatim, i32 indices and all.
+# ---------------------------------------------------------------------------
+@jax.jit
+def _filter_sort(d: jnp.ndarray, keep: jnp.ndarray, code_base: jnp.ndarray):
+    """Mask dead candidates to +inf and sort ascending.
+
+    d f32[mp, w], keep bool[mp, w] -> (sorted dists f32[mp, w],
+    codes i32[mp, w] = code_base + original column).  jax sorts are stable,
+    so equal distances keep their engine-produced order.
+    """
+    d = jnp.where(keep, d, jnp.inf)
+    order = jnp.argsort(d, axis=1)
+    return (
+        jnp.take_along_axis(d, order, axis=1),
+        order.astype(jnp.int32) + code_base,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("w",))
+def _merge_pair(a_d, a_c, b_d, b_c, *, w: int):
+    """Fold two sorted w-lists into their w smallest (kernel rank merge)."""
+    return _rank_merge(a_d, a_c, b_d, b_c, w)
+
+
+def merge_cache_size() -> int:
+    """Jit-cache entries of the fan-out merge (filter/sort + pairwise fold).
+
+    Grows once per (padded batch, candidate width) pair and NEVER with the
+    shard count — the compile-count regression test's second counter."""
+    return _filter_sort._cache_size() + _merge_pair._cache_size()
+
+
+def shard_scan_cache_size() -> int:
+    """Jit-cache entries of the brute shard scan (``knn_brute``'s tile step).
+
+    Grows once per (batch rung, shard rung, d, k + tomb_limit) — the
+    carry-chain compile-count regression's primary counter."""
+    from repro.core.brute import _tile_step
+
+    return _tile_step._cache_size()
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _Shard:
+    """One immutable slab of the forest (mutated only via tombstone bits)."""
+
+    rung: int                      # capacity = base << rung
+    capacity: int
+    points: np.ndarray             # f32[capacity, d]; PAD_COORD beyond n_rows
+    ids: np.ndarray                # i64[capacity]; sorted ascending, -1 pads
+    live: np.ndarray               # bool[capacity]; False for pads/tombstones
+    n_rows: int                    # occupied rows (live + tombstoned)
+    n_tomb: int = 0
+    engine: Optional[BufferKDTree] = None   # None => brute scan
+
+    @property
+    def n_live(self) -> int:
+        return self.n_rows - self.n_tomb
+
+    @property
+    def kind(self) -> str:
+        return "brute" if self.engine is None else "tree"
+
+
+class DynamicIndex:
+    """Mutable exact-kNN index over a logarithmic-method shard forest.
+
+    Global ids are assigned in insertion order (the initial
+    ``from_points(points)`` batch gets ``0..n-1``), are never reused, and
+    are what ``query`` returns — so they index any value array the caller
+    appends to in lockstep (the kNN-LM datastore does exactly this).
+    """
+
+    def __init__(
+        self,
+        d: int,
+        *,
+        base_capacity: int = DEFAULT_BASE_CAPACITY,
+        tomb_limit: int = DEFAULT_TOMB_LIMIT,
+        brute_cutoff: int = DEFAULT_BRUTE_CUTOFF,
+        rebuild_crossover: Optional[int] = None,
+        tile_q: int = 128,
+        backend: str = "auto",
+        device=None,
+    ):
+        if d < 1:
+            raise ValueError(f"need d >= 1, got {d}")
+        if base_capacity < 2:
+            raise ValueError(f"base_capacity must be >= 2, got {base_capacity}")
+        if tomb_limit < 1:
+            raise ValueError(f"tomb_limit must be >= 1, got {tomb_limit}")
+        if brute_cutoff < 4:
+            raise ValueError(f"brute_cutoff must be >= 4, got {brute_cutoff}")
+        self.d = int(d)
+        self.base_capacity = int(base_capacity)
+        self.tomb_limit = int(tomb_limit)
+        self.brute_cutoff = int(brute_cutoff)
+        self.rebuild_crossover = (
+            int(rebuild_crossover) if rebuild_crossover is not None else None
+        )
+        self.tile_q = int(tile_q)
+        self.backend = backend
+        self.device = device
+        self._shards: Dict[int, _Shard] = {}
+        self._next_id = 0
+        self._n_live = 0
+        self._last_stats = SearchStats()
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_points(cls, points: np.ndarray, **kw) -> "DynamicIndex":
+        points = np.asarray(points, np.float32)
+        if points.ndim != 2:
+            raise ValueError(f"points must be [n, d], got {points.shape}")
+        idx = cls(points.shape[1], **kw)
+        idx.insert(points)
+        return idx
+
+    # ------------------------------------------------------------------
+    @property
+    def n_live(self) -> int:
+        return self._n_live
+
+    @property
+    def n_tomb(self) -> int:
+        return sum(s.n_tomb for s in self._shards.values())
+
+    @property
+    def stats(self) -> SearchStats:
+        return self._last_stats
+
+    def shard_layout(self) -> List[Tuple[int, int, int, str]]:
+        """(capacity, live, tombstones, kind) per shard, smallest rung first
+        — the forest's 'binary counter' state, for tests and describe()."""
+        return [
+            (s.capacity, s.n_live, s.n_tomb, s.kind)
+            for _, s in sorted(self._shards.items())
+        ]
+
+    def live_ids(self) -> np.ndarray:
+        """Sorted i64 ids of the live multiset (test oracle support)."""
+        parts = [s.ids[s.live] for s in self._shards.values()]
+        if not parts:
+            return np.empty((0,), np.int64)
+        return np.sort(np.concatenate(parts))
+
+    def resident_bytes(self) -> int:
+        """Device bytes the shard slabs occupy during a query."""
+        total = 0
+        for s in self._shards.values():
+            if s.engine is not None:
+                total += s.engine.store.resident_bytes()
+            else:
+                total += s.capacity * self.d * 4
+        return total
+
+    # ------------------------------------------------------------------
+    def _fit_rung(self, count: int) -> int:
+        r = 0
+        while (self.base_capacity << r) < count:
+            r += 1
+        return r
+
+    def _make_shard(self, pts: np.ndarray, ids: np.ndarray) -> _Shard:
+        """Build one immutable shard from live rows (sorted by id)."""
+        order = np.argsort(ids, kind="stable")
+        pts, ids = pts[order], ids[order]
+        n = pts.shape[0]
+        rung = self._fit_rung(n)
+        cap = self.base_capacity << rung
+        slab = np.full((cap, self.d), np.float32(PAD_COORD))
+        slab[:n] = pts
+        id_arr = np.full((cap,), -1, np.int64)
+        id_arr[:n] = ids
+        live = np.zeros((cap,), bool)
+        live[:n] = True
+        engine = None
+        if cap > self.brute_cutoff:
+            # static chunked-engine shard over the FULL padded slab: the
+            # rung, not the live count, determines every compiled shape
+            engine = BufferKDTree(
+                slab,
+                height=suggest_height(cap),
+                n_chunks=1,
+                tile_q=self.tile_q,
+                backend=self.backend,
+                device=self.device,
+            )
+        return _Shard(
+            rung=rung, capacity=cap, points=slab, ids=id_arr, live=live,
+            n_rows=n, engine=engine,
+        )
+
+    def _add_with_carry(self, shard: _Shard) -> None:
+        """Binary-counter carry: merge while the rung is occupied."""
+        while shard.rung in self._shards:
+            other = self._shards.pop(shard.rung)
+            pts = np.concatenate(
+                [shard.points[shard.live], other.points[other.live]]
+            )
+            ids = np.concatenate([shard.ids[shard.live], other.ids[other.live]])
+            shard = self._make_shard(pts, ids)
+        self._shards[shard.rung] = shard
+
+    # ------------------------------------------------------------------
+    def insert(self, points: np.ndarray) -> np.ndarray:
+        """Insert a batch; returns the assigned global ids (i64[b])."""
+        pts = np.asarray(points, np.float32)
+        if pts.ndim != 2 or pts.shape[1] != self.d:
+            raise ValueError(f"points must be [b, {self.d}], got {pts.shape}")
+        b = pts.shape[0]
+        ids = np.arange(self._next_id, self._next_id + b, dtype=np.int64)
+        self._next_id += b
+        if b == 0:
+            return ids
+        # rebuild-vs-merge: a batch at/above the crossover makes one
+        # flattening rebuild cheaper than pushing a carry chain through
+        # every rung.  The planner-costed value was taken at BUILD-time n;
+        # the true crossover scales ~n/levels, so as the index grows the
+        # pinned number acts as a floor and the model takes over — a 10M-
+        # point index must not full-rebuild on every 4096-point batch just
+        # because 4096 was the right threshold at 20k points.
+        if self.rebuild_crossover is not None:
+            levels = max(1, math.ceil(math.log2(
+                max(2.0, max(1, self._n_live) / self.base_capacity)
+            )))
+            crossover = max(self.rebuild_crossover, self._n_live // levels)
+        else:
+            crossover = max(1, self._n_live)
+        if self._shards and b >= crossover:
+            all_pts = [s.points[s.live] for s in self._shards.values()]
+            all_ids = [s.ids[s.live] for s in self._shards.values()]
+            self._shards.clear()
+            self._add_with_carry(
+                self._make_shard(
+                    np.concatenate(all_pts + [pts]),
+                    np.concatenate(all_ids + [ids]),
+                )
+            )
+        else:
+            self._add_with_carry(self._make_shard(pts, ids))
+        self._n_live += b
+        return ids
+
+    # ------------------------------------------------------------------
+    def delete(self, ids) -> int:
+        """Tombstone the given live ids; returns the count removed.
+
+        Raises ``KeyError`` if any id is unknown, already deleted, or
+        repeated within the request — deletes are exact, never best-effort.
+        """
+        req = np.asarray(ids, np.int64).ravel()
+        if req.size == 0:
+            return 0
+        if np.unique(req).size != req.size:
+            raise KeyError("delete request contains duplicate ids")
+        # resolve EVERY id before touching any live bit: a bad request
+        # (unknown / already-deleted id) must leave the index unchanged
+        found = np.zeros(req.shape, bool)
+        hits: List[Tuple[_Shard, np.ndarray]] = []
+        for shard in self._shards.values():
+            sid = shard.ids[: shard.n_rows]
+            pos = np.searchsorted(sid, req)
+            safe = np.clip(pos, 0, max(0, shard.n_rows - 1))
+            hit = (pos < shard.n_rows) & (sid[safe] == req) & shard.live[safe]
+            if hit.any():
+                hits.append((shard, safe[hit]))
+                found |= hit
+        if not found.all():
+            missing = req[~found].tolist()
+            raise KeyError(f"ids not live in index: {missing}")
+        for shard, rows in hits:
+            shard.live[rows] = False
+            shard.n_tomb += int(rows.size)
+        self._n_live -= int(req.size)
+
+        # threshold-triggered compaction: rebuild over-tombstoned shards
+        # from their live rows (restores the n_tomb <= tomb_limit invariant
+        # the query-time exactness bound relies on); drop empty shards
+        for rung in sorted(self._shards):
+            shard = self._shards.get(rung)
+            if shard is None or shard.n_tomb <= self.tomb_limit:
+                if shard is not None and shard.n_live == 0:
+                    del self._shards[rung]
+                continue
+            del self._shards[rung]
+            if shard.n_live:
+                self._add_with_carry(
+                    self._make_shard(
+                        shard.points[shard.live], shard.ids[shard.live]
+                    )
+                )
+        return int(req.size)
+
+    # ------------------------------------------------------------------
+    def _shard_candidates(
+        self, shard: _Shard, qp: np.ndarray, w: int, sb: dict
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """One shard's nearest-w candidate list (dists, global ids, keep).
+
+        Fetches ``kq = min(w, capacity)`` neighbors through the shard's
+        static engine, maps rows to global ids, masks tombstones/padding,
+        and pads the list out to the uniform merge width ``w``.
+        """
+        mp = qp.shape[0]
+        kq = min(w, shard.capacity)
+        if shard.engine is not None:
+            dd, rows = shard.engine.query(qp, k=kq)
+            st = shard.engine.stats
+            sb["points_scanned"] += st.points_scanned
+            sb["units_scanned"] += st.units_scanned
+            sb["flushes"] += st.flushes
+            sb["iterations"] = max(sb["iterations"], st.iterations)
+        else:
+            dd, rows = knn_brute(
+                qp, shard.points, kq,
+                tile_q=min(mp, _BRUTE_TILE_Q),
+                tile_x=min(shard.capacity, _BRUTE_TILE_X),
+            )
+            sb["points_scanned"] += mp * shard.capacity
+            sb["iterations"] = max(sb["iterations"], 1)
+        rows = np.asarray(rows)
+        valid = (rows >= 0) & (rows < shard.capacity)
+        safe = np.clip(rows, 0, shard.capacity - 1)
+        gids = shard.ids[safe]
+        keep = valid & shard.live[safe] & (gids >= 0)
+        if kq < w:
+            pad = ((0, 0), (0, w - kq))
+            dd = np.pad(np.asarray(dd, np.float32), pad,
+                        constant_values=np.inf)
+            gids = np.pad(gids, pad, constant_values=-1)
+            keep = np.pad(keep, pad, constant_values=False)
+        return np.asarray(dd, np.float32), gids, keep
+
+    def query(
+        self, queries: np.ndarray, k: int
+    ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
+        """Exact kNN of the live multiset: (dists f32[m, k] ascending
+        Euclidean, ids i64[m, k] global insertion ids, SearchStats)."""
+        q = np.asarray(queries, np.float32)
+        if q.ndim != 2 or q.shape[1] != self.d:
+            raise ValueError(f"queries must be [m, {self.d}], got {q.shape}")
+        if not 1 <= k <= self._n_live:
+            raise ValueError(f"k={k} not in [1, n_live={self._n_live}]")
+        m = q.shape[0]
+        mp = _pad_batch(m)
+        qp = np.zeros((mp, self.d), np.float32)
+        qp[:m] = q
+        w = k + self.tomb_limit
+
+        sb = dict(points_scanned=0, units_scanned=0, flushes=0, iterations=0)
+        acc_d = acc_c = None
+        gid_lists: List[np.ndarray] = []
+        for slot, (_, shard) in enumerate(sorted(self._shards.items())):
+            dd, gids, keep = self._shard_candidates(shard, qp, w, sb)
+            gid_lists.append(gids)
+            sd, sc = _filter_sort(
+                jnp.asarray(dd), jnp.asarray(keep), jnp.int32(slot * w)
+            )
+            if acc_d is None:
+                acc_d, acc_c = sd, sc
+            else:
+                acc_d, acc_c = _merge_pair(acc_d, acc_c, sd, sc, w=w)
+
+        out_d = np.asarray(acc_d)[:m, :k]
+        codes = np.asarray(acc_c)[:m, :k]
+        gids_all = np.stack(gid_lists)                      # [S, mp, w]
+        rows = np.arange(m)[:, None]
+        out_i = gids_all[codes // w, rows, codes % w].astype(np.int64)
+        # k <= n_live guarantees k finite candidates per row; belt+braces
+        # for the impossible tail (keeps the -1 contract if it ever trips)
+        out_i[~np.isfinite(out_d)] = -1
+        self._last_stats = SearchStats(
+            iterations=sb["iterations"],
+            flushes=sb["flushes"],
+            units_scanned=sb["units_scanned"],
+            points_scanned=sb["points_scanned"],
+            queries_advanced=m,
+        )
+        return out_d, out_i, self._last_stats
+
+    # ------------------------------------------------------------------
+    def warm(self, m: int, k: int) -> None:
+        """Precompile the fan-out for ``m``-query batches: one throwaway
+        query (``query`` pads to the batch rung itself) through every live
+        shard + the merge chain (no-op while the index holds < k points)."""
+        if 1 <= k <= self._n_live:
+            self.query(np.zeros((m, self.d), np.float32), k)

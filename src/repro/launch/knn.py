@@ -5,11 +5,20 @@ kNN queries.  With no flags the planner picks the engine from data shape,
 visible devices and (optionally simulated) memory budget; every plan
 decision is printed with its reason.
 
+``--append P`` exercises the batch-dynamic path: the index is planned
+mutable, so the planner selects the ``dynamic`` engine (pinning an
+immutable ``--engine`` together with ``--append`` fails fast at plan time
+with a ValueError — no engine can honor both).  P extra points are
+inserted incrementally in ``--append-batches`` batches after the initial
+build, per-batch ingest timing is printed, and verification runs against
+brute force over the GROWN reference set.
+
 Example:
   PYTHONPATH=src python -m repro.launch.knn --n 100000 --m 10000 --d 10 \\
       --k 10 --chunks 3
   PYTHONPATH=src python -m repro.launch.knn --n 100000 --engine forest
   PYTHONPATH=src python -m repro.launch.knn --n 100000 --memory-budget 4000000
+  PYTHONPATH=src python -m repro.launch.knn --n 100000 --append 20000
 """
 
 from __future__ import annotations
@@ -35,6 +44,11 @@ def main(argv=None):
                     help="registry engine name; default = planner's choice")
     ap.add_argument("--memory-budget", type=int, default=0,
                     help="device bytes for the leaf structure (0 = unlimited)")
+    ap.add_argument("--append", type=int, default=0,
+                    help="insert this many extra points incrementally after "
+                         "the build (plans a mutable index)")
+    ap.add_argument("--append-batches", type=int, default=4,
+                    help="number of insert batches --append is split into")
     ap.add_argument("--verify", type=int, default=256,
                     help="verify this many queries against brute force")
     ap.add_argument("--seed", type=int, default=0)
@@ -51,6 +65,7 @@ def main(argv=None):
         memory_budget=args.memory_budget or None,
         k_hint=args.k,
         m_hint=args.m,
+        mutable=True if args.append else None,
     )
     t0 = time.time()
     idx = KNNIndex.build(pts, spec=spec)
@@ -68,6 +83,25 @@ def main(argv=None):
         scanned = res.stats.points_scanned / max(1, args.m * args.n)
         line += f"  scanned {scanned:.3%} of brute"
     print(line)
+
+    if args.append:
+        extra = PointCloud(args.append, args.d, seed=args.seed + 1).points()
+        batches = np.array_split(extra, max(1, args.append_batches))
+        t_ingest = 0.0
+        for i, batch in enumerate(batches):
+            t0 = time.time()
+            idx.insert(batch)
+            dt = time.time() - t0
+            t_ingest += dt
+            print(f"[knn] append batch {i}: +{batch.shape[0]} pts in "
+                  f"{dt:.3f}s ({batch.shape[0] / max(dt, 1e-9):.0f} pts/s)")
+        print(f"[knn] append total: +{args.append} pts in {t_ingest:.2f}s "
+              f"(full rebuild took {t_build:.2f}s for {args.n})")
+        pts = np.concatenate([pts, extra])
+        t0 = time.time()
+        res = idx.query(q, k=args.k)
+        print(f"[knn] post-append test {time.time() - t0:.2f}s over "
+              f"n={idx.n}")
 
     if args.verify:
         v = min(args.verify, args.m)

@@ -18,6 +18,13 @@ Retrieval goes through the ``repro.api`` front door (``KNNIndex``): the
 serving path states its constraints in an ``IndexSpec`` and the planner
 picks the engine — chunked leaf streaming, multi-device forests and future
 engines all arrive here without touching this file.
+
+STREAMING DATASTORES: kNN-LM stores grow per request (every served context
+is a new (key -> next-token) pair).  Construct with ``mutable=True`` and the
+planner picks the batch-dynamic engine; ``extend_datastore`` then APPENDS
+(context, next-token) pairs incrementally — ``KNNIndex.insert`` assigns ids
+in insertion order, so the value array extends in lockstep and retrieved
+ids keep indexing it directly.  No rebuild, no re-projection.
 """
 
 from __future__ import annotations
@@ -47,6 +54,7 @@ class KNNLM:
         tree_height: Optional[int] = None,
         n_chunks: Optional[int] = None,
         index_spec: Optional[IndexSpec] = None,
+        mutable: bool = False,
         seed: int = 0,
     ):
         self.lm = lm
@@ -62,6 +70,8 @@ class KNNLM:
             overrides["height"] = tree_height
         if n_chunks is not None:
             overrides["n_chunks"] = n_chunks
+        if mutable:
+            overrides["mutable"] = True
         self.index_spec = spec.replace(**overrides)
         rng = np.random.default_rng(seed)
         w = rng.normal(size=(lm.cfg.d_model, proj_dim)).astype(np.float32)
@@ -99,6 +109,29 @@ class KNNLM:
         keys = self.embed_contexts(ctx)
         self.values = nxt.reshape(-1).astype(np.int64)
         self.index = KNNIndex.build(keys, spec=self.index_spec)
+
+    # ------------------------------------------------------------------
+    def extend_datastore(self, tokens: np.ndarray) -> np.ndarray:
+        """Append a corpus slice to the datastore WITHOUT a rebuild.
+
+        tokens: i32[B, S+1], same layout as ``build_datastore``.  Returns
+        the assigned key ids.  The first call (no datastore yet) builds;
+        later calls insert incrementally — which requires a mutable index
+        (construct with ``mutable=True``), otherwise ``KNNIndex.insert``
+        raises the typed ``MutabilityError``.
+        """
+        if self.index is None:
+            self.build_datastore(tokens)
+            return np.arange(self.values.shape[0], dtype=np.int64)
+        ctx, nxt = tokens[:, :-1], tokens[:, 1:]
+        keys = self.embed_contexts(ctx)
+        ids = self.index.insert(keys)
+        # ids are insertion-ordered, so extending values keeps vals[id]
+        # aligned for every past and future retrieval
+        self.values = np.concatenate(
+            [self.values, nxt.reshape(-1).astype(np.int64)]
+        )
+        return ids
 
     # ------------------------------------------------------------------
     def next_token_probs(self, tokens: np.ndarray) -> np.ndarray:

@@ -9,6 +9,8 @@ when the package is installed (see ``hypothesis_compat.py`` for how fuzz
 tests degrade to skips without it).
 """
 
+import os
+
 import jax
 import numpy as np
 import pytest
@@ -33,7 +35,17 @@ if settings is not None:
         max_examples=20,
         suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
     )
-    settings.load_profile("repro")
+    # CI profile: derandomized so the generative suites (e.g. the dynamic
+    # parity harness) draw the SAME examples every run — scripts/ci.sh
+    # selects it via REPRO_HYPOTHESIS_PROFILE=ci.
+    settings.register_profile(
+        "ci",
+        deadline=None,
+        max_examples=20,
+        derandomize=True,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+    )
+    settings.load_profile(os.environ.get("REPRO_HYPOTHESIS_PROFILE", "repro"))
 
 
 @pytest.fixture

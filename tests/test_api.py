@@ -19,6 +19,7 @@ import pytest
 from repro.api import (
     IndexSpec,
     KNNIndex,
+    MutabilityError,
     QueryResult,
     SearchStats,
     available_engines,
@@ -88,6 +89,87 @@ class TestEngineParity:
     def test_unknown_engine_rejected(self):
         with pytest.raises(KeyError, match="unknown engine"):
             get_engine("definitely_not_registered")
+
+
+class TestMutabilityContract:
+    """Caps-contract for incremental insert/delete: the parity suite above
+    auto-discovers the ``dynamic`` engine from the registry; here we pin
+    the other half of the contract — engines declaring ``mutable=False``
+    must raise the TYPED error from the facade, never mutate silently."""
+
+    def test_dynamic_engine_auto_discovered(self):
+        caps = available_engines()
+        assert "dynamic" in caps
+        assert caps["dynamic"].mutable and caps["dynamic"].exact
+        assert "dynamic" in ALL_ENGINES  # rode into the parity sweep above
+
+    def test_exactly_one_mutable_engine_today(self):
+        mutable = [n for n, c in available_engines().items() if c.mutable]
+        assert mutable == ["dynamic"]
+
+    @pytest.mark.parametrize(
+        "engine",
+        [n for n, c in available_engines().items() if not c.mutable],
+    )
+    def test_immutable_engines_raise_typed_error(self, engine):
+        pts, _ = _data(600, 1, 6, seed=21)
+        idx = KNNIndex.build(pts, spec=IndexSpec(engine=engine, height=2))
+        with pytest.raises(MutabilityError):
+            idx.insert(pts[:4])
+        with pytest.raises(MutabilityError):
+            idx.delete([0])
+        assert idx.n == 600                      # nothing mutated
+
+    def test_mutability_error_is_typed(self):
+        # callers filter on the TYPE (a TypeError subclass), not on text
+        assert issubclass(MutabilityError, TypeError)
+
+    def test_mutable_spec_plans_dynamic_with_crossover(self):
+        p = plan(50_000, 8, k=10, devices=[object()], mutable=True)
+        assert p.engine == "dynamic"
+        assert p.crossover_batch and p.crossover_batch > 0
+        assert any("rebuild" in r and "crossover" in r for r in p.reasons)
+
+    def test_mutable_overrides_multi_device(self):
+        p = plan(100_000, 10, k=10, devices=[object()] * 4, mutable=True)
+        assert p.engine == "dynamic"
+        assert any("single-device" in r for r in p.reasons)
+
+    def test_mutable_budget_shortfall_is_recorded(self):
+        # the dynamic forest cannot chunk-stream yet; a busted budget must
+        # be recorded as best-effort, never silently ignored
+        p = plan(200_000, 10, k=10, devices=[object()], mutable=True,
+                 memory_budget=100_000)
+        assert p.engine == "dynamic"
+        assert any("best effort" in r for r in p.reasons)
+
+    def test_mutable_with_immutable_pin_rejected(self):
+        with pytest.raises(ValueError, match="mutable=True"):
+            plan(50_000, 8, devices=[object()], engine="chunked",
+                 mutable=True)
+
+    def test_facade_insert_delete_roundtrip(self):
+        pts, q = _data(3000, 30, 6, seed=22)
+        idx = KNNIndex.build(pts, spec=IndexSpec(mutable=True, k_hint=5))
+        assert idx.engine_name == "dynamic"
+        extra = _data(40, 1, 6, seed=23)[0]
+        ids = idx.insert(extra)
+        assert ids.tolist() == list(range(3000, 3040))
+        assert idx.n == 3040
+        res = idx.query(q, k=5)
+        bd, _ = knn_brute(q, np.concatenate([pts, extra]), 5)
+        np.testing.assert_allclose(res.dists, bd, rtol=1e-4, atol=1e-4)
+        assert idx.delete(ids[:10]) == 10
+        assert idx.n == 3030
+        res = idx.query(q, k=5)
+        bd, _ = knn_brute(q, np.concatenate([pts, extra[10:]]), 5)
+        np.testing.assert_allclose(res.dists, bd, rtol=1e-4, atol=1e-4)
+
+    def test_facade_insert_validates_dims(self):
+        pts, _ = _data(500, 1, 6, seed=24)
+        idx = KNNIndex.build(pts, spec=IndexSpec(mutable=True))
+        with pytest.raises(ValueError, match="points must be"):
+            idx.insert(np.zeros((3, 5), np.float32))
 
 
 class TestPlanner:
@@ -301,6 +383,86 @@ class TestCalibration:
         from repro.api import Calibration
 
         assert Calibration.load(root=str(tmp_path / "nowhere")) is None
+
+    def test_stale_calibration_warns_and_lands_in_reasons(self):
+        # the old failure mode: load() silently served week-old numbers.
+        # Now the age travels with the Calibration, plan() warns, and the
+        # staleness is recorded next to the decisions that used it.
+        cal = self._cal(age_s=10 * 86400.0)
+        assert cal.stale
+        with pytest.warns(UserWarning, match="days old"):
+            p = plan(50_000, 8, m=50_000, devices=[object()],
+                     calibration=cal)
+        assert any("calibration stale" in r for r in p.reasons)
+        assert p.calibrated   # stale numbers are still used, just audited
+
+    def test_fresh_calibration_does_not_warn(self):
+        import warnings as _warnings
+
+        cal = self._cal(age_s=3600.0)
+        assert not cal.stale
+        with _warnings.catch_warnings():
+            _warnings.simplefilter("error")
+            p = plan(50_000, 8, m=50_000, devices=[object()],
+                     calibration=cal)
+        assert not any("stale" in r for r in p.reasons)
+
+    def test_load_derives_age_from_file_mtime(self, tmp_path):
+        import json
+        import os
+        import time
+
+        from repro.api import CALIBRATION_STALE_S, Calibration
+
+        cc = tmp_path / "BENCH_copy_cost.json"
+        cc.write_text(json.dumps({"h2d_gbps": 10.0, "round_s": 1e-3}))
+        old = time.time() - (CALIBRATION_STALE_S + 86400)
+        os.utime(cc, (old, old))
+        cal = Calibration.load(root=str(tmp_path))
+        assert cal is not None and cal.age_s > CALIBRATION_STALE_S
+        assert cal.stale
+        # a fresh file is not stale
+        os.utime(cc, None)
+        assert not Calibration.load(root=str(tmp_path)).stale
+
+    def test_load_reads_dynamic_bench(self, tmp_path):
+        import json
+
+        from repro.api import Calibration
+
+        (tmp_path / "BENCH_dynamic.json").write_text(json.dumps(
+            {"build_pps": 1e6, "crossover_batch": 4096}
+        ))
+        cal = Calibration.load(root=str(tmp_path))
+        assert cal.build_pps == 1e6 and cal.dynamic_crossover == 4096
+        assert "BENCH_dynamic.json" in cal.source
+        # a measured crossover overrides the planner's model
+        p = plan(50_000, 8, devices=[object()], mutable=True,
+                 calibration=cal)
+        assert p.crossover_batch == 4096
+        assert any("measured rebuild-vs-merge crossover" in r
+                   for r in p.reasons)
+
+    def test_measured_null_crossover_is_not_conflated_with_unmeasured(
+        self, tmp_path
+    ):
+        import json
+
+        from repro.api import Calibration
+
+        # dynamic_bench writes crossover_batch null when batch-dynamic won
+        # at every measured size — the planner must honor that, not fall
+        # back to the model and force flattening rebuilds
+        (tmp_path / "BENCH_dynamic.json").write_text(json.dumps(
+            {"build_pps": 1e6, "crossover_batch": None}
+        ))
+        cal = Calibration.load(root=str(tmp_path))
+        assert cal.dynamic_measured and cal.dynamic_crossover is None
+        p = plan(50_000, 8, devices=[object()], mutable=True,
+                 calibration=cal)
+        assert p.crossover_batch is None
+        assert any("won at every measured batch size" in r
+                   for r in p.reasons)
 
     def test_spec_carries_calibration_through_facade(self):
         pts, q = _data(6000, 64, 6, seed=9)

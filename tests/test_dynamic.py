@@ -1,0 +1,379 @@
+"""Generative parity harness for the batch-dynamic index (core/dynamic.py).
+
+THE ORACLE (metamorphic): after ANY interleaving of insert / delete / query
+batches, a query must agree with ``knn_brute`` over the *live point
+multiset* — distances exactly (within the engines' shared f32 tolerance)
+and, because ties may permute ids, every returned id must be live and its
+recomputed true distance must equal the reported one.  A shadow model (a
+plain ``dict`` id -> point) replays every mutation; the index is never
+consulted to build its own expected answer.
+
+Two generators drive the same script runner:
+
+  * a seeded numpy generator producing >= 200 deterministic interleavings
+    (``REPRO_DYNAMIC_SEED``/``REPRO_DYNAMIC_SCRIPTS`` env knobs — CI pins
+    the seed), so the harness runs at full strength even where hypothesis
+    is not installed;
+  * a hypothesis ``@given`` wrapper over the same runner for shrinking,
+    active when the package exists (it degrades to a skip otherwise, per
+    ``hypothesis_compat``).
+
+Scripts deliberately hit the contract's edges: duplicate points (inserted
+twice, and k reaching across the copies), k larger than a shard's live
+count (and larger than the smallest shard CAPACITY, exercising the
+fetch-width cap), delete-all-then-reinsert, and tombstone counts crossing
+the compaction threshold.
+
+Also here: the carry-chain COMPILE-COUNT REGRESSION (same discipline as
+``test_compaction_ladder.py``) — growing the forest through its 2^i rungs
+may compile each per-shard scan at most once per rung, and the fan-out
+merge's compile count must be independent of the shard count.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.core.brute import knn_brute
+from repro.core.chunked_jit import chunk_round_cache_size
+from repro.core.dynamic import DynamicIndex, merge_cache_size
+
+SEED = int(os.environ.get("REPRO_DYNAMIC_SEED", "0"))
+N_SCRIPTS = int(os.environ.get("REPRO_DYNAMIC_SCRIPTS", "200"))
+N_BLOCKS = 8
+
+D = 4
+# small, fixed draw sets keep the jitted shape inventory bounded: ks below
+# map to fetch widths k + tomb_limit, oracle batches compile per (m, k)
+K_CHOICES = (1, 3, 6)
+M_CHOICES = (1, 3, 8, 16)
+CFG = dict(base_capacity=24, tomb_limit=6, brute_cutoff=96)
+
+
+# ---------------------------------------------------------------------------
+def _live_arrays(model):
+    ids = np.fromiter(sorted(model), np.int64, len(model))
+    pts = np.stack([model[int(g)] for g in ids])
+    return ids, pts
+
+
+def _check_parity(idx, model, q, k):
+    """The metamorphic oracle: index result == brute over the live set."""
+    assert idx.n_live == len(model)
+    ids, pts = _live_arrays(model)
+    dd, di, stats = idx.query(q, k)
+    bd, _ = knn_brute(q, pts, k)
+    np.testing.assert_allclose(dd, bd, rtol=1e-4, atol=1e-4)
+    # ids may permute under distance ties, but every one must be live and
+    # score exactly the distance it was returned with
+    assert np.isin(di, ids).all(), "query returned a dead or unknown id"
+    pos = np.searchsorted(ids, di)
+    diff = pts[pos].astype(np.float64) - q[:, None, :].astype(np.float64)
+    true = np.sqrt((diff * diff).sum(-1))
+    np.testing.assert_allclose(dd, true, rtol=1e-4, atol=1e-4)
+    assert stats.queries_advanced == q.shape[0]
+
+
+def _apply_insert(idx, model, pts):
+    ids = idx.insert(pts)
+    for i, g in enumerate(ids):
+        model[int(g)] = pts[i]
+    return ids
+
+
+def _run_script(rng, n_ops=12, max_points=240):
+    """One random interleaving of insert/delete/query batches, checked
+    against the shadow model after every query and once at the end."""
+    idx = DynamicIndex(D, **CFG)
+    model = {}
+    checked = 0
+    for _ in range(n_ops):
+        r = float(rng.random())
+        if (r < 0.45 and len(model) < max_points) or not model:
+            b = int(rng.integers(1, 33))
+            if model and rng.random() < 0.3:
+                # exact duplicates of live points (ties must stay exact)
+                _, src = _live_arrays(model)
+                pts = src[rng.integers(0, len(src), size=b)]
+            else:
+                pts = rng.normal(size=(b, D)).astype(np.float32)
+            _apply_insert(idx, model, pts)
+        elif r < 0.70 and model:
+            # any batch size up to ALL live points (delete-all included);
+            # crossing tomb_limit triggers compaction mid-script
+            ndel = int(rng.integers(1, len(model) + 1))
+            ids, _ = _live_arrays(model)
+            dels = rng.choice(ids, size=ndel, replace=False)
+            idx.delete(dels)
+            for g in dels:
+                del model[int(g)]
+        else:
+            ks = [k for k in K_CHOICES if k <= len(model)]
+            if not ks:
+                continue
+            k = int(rng.choice(ks))
+            m = int(rng.choice(M_CHOICES))
+            q = rng.normal(size=(m, D)).astype(np.float32)
+            _check_parity(idx, model, q, k)
+            checked += 1
+    if not model:
+        _apply_insert(
+            idx, model, rng.normal(size=(8, D)).astype(np.float32)
+        )
+    k = min(K_CHOICES[-1], len(model))
+    _check_parity(idx, model, rng.normal(size=(4, D)).astype(np.float32), k)
+    return checked + 1
+
+
+# ---------------------------------------------------------------------------
+class TestGenerativeParity:
+    """>= N_SCRIPTS (default 200) seeded interleavings, split into blocks
+    so a failure names its block and -x stops early."""
+
+    @pytest.mark.parametrize("block", range(N_BLOCKS))
+    def test_interleaving_block(self, block):
+        per_block = -(-N_SCRIPTS // N_BLOCKS)
+        for j in range(per_block):
+            script = block * per_block + j
+            rng = np.random.default_rng(SEED * 1_000_003 + script)
+            try:
+                _run_script(rng)
+            except AssertionError as e:  # pragma: no cover - diagnosis aid
+                raise AssertionError(
+                    f"script {script} (seed base {SEED}) failed: {e}"
+                ) from e
+
+    @given(seed=st.integers(0, 2**20))
+    @settings(max_examples=25, deadline=None)
+    def test_hypothesis_interleavings(self, seed):
+        # same runner, hypothesis-chosen seeds + shrinking on failure
+        _run_script(np.random.default_rng(seed))
+
+
+class TestTargetedEdges:
+    def test_k_exceeds_small_shard_live_and_capacity(self):
+        rng = np.random.default_rng(5)
+        idx = DynamicIndex(D, **CFG)
+        model = {}
+        _apply_insert(idx, model, rng.normal(size=(150, D)).astype(np.float32))
+        _apply_insert(idx, model, rng.normal(size=(3, D)).astype(np.float32))
+        # k=20 > the 3-live shard AND w = k + tomb_limit = 26 > its 24-row
+        # capacity, so the fetch width clamps to the rung and pads the list
+        _check_parity(
+            idx, model, rng.normal(size=(6, D)).astype(np.float32), 20
+        )
+
+    def test_duplicates_across_shards_tie_exact(self):
+        rng = np.random.default_rng(6)
+        idx = DynamicIndex(D, **CFG)
+        model = {}
+        base = rng.normal(size=(40, D)).astype(np.float32)
+        _apply_insert(idx, model, base)
+        _apply_insert(idx, model, base[:10])       # exact copies, new ids
+        _apply_insert(idx, model, np.tile(base[:1], (5, 1)))
+        _check_parity(idx, model, base[:4], 6)     # zero-distance ties
+
+    def test_delete_all_then_reinsert(self):
+        rng = np.random.default_rng(7)
+        idx = DynamicIndex(D, **CFG)
+        model = {}
+        _apply_insert(idx, model, rng.normal(size=(120, D)).astype(np.float32))
+        ids, _ = _live_arrays(model)
+        idx.delete(ids)
+        model.clear()
+        assert idx.n_live == 0
+        assert idx.shard_layout() == []            # empty shards are dropped
+        with pytest.raises(ValueError, match="n_live=0"):
+            idx.query(np.zeros((1, D), np.float32), 1)
+        _apply_insert(idx, model, rng.normal(size=(30, D)).astype(np.float32))
+        _check_parity(idx, model, rng.normal(size=(5, D)).astype(np.float32), 3)
+        # ids keep counting up: nothing from the deleted era is reused
+        assert _live_arrays(model)[0].min() >= 120
+
+    def test_tombstone_invariant_after_compaction(self):
+        rng = np.random.default_rng(8)
+        idx = DynamicIndex(D, **CFG)
+        model = {}
+        _apply_insert(idx, model, rng.normal(size=(200, D)).astype(np.float32))
+        ids, _ = _live_arrays(model)
+        # one oversized delete pushes shards past tomb_limit: compaction
+        # must restore the invariant the query exactness bound needs
+        dels = rng.choice(ids, size=90, replace=False)
+        idx.delete(dels)
+        for g in dels:
+            del model[int(g)]
+        assert all(t <= CFG["tomb_limit"] for _, _, t, _ in idx.shard_layout())
+        _check_parity(idx, model, rng.normal(size=(8, D)).astype(np.float32), 6)
+
+    def test_delete_unknown_or_duplicate_raises(self):
+        rng = np.random.default_rng(9)
+        idx = DynamicIndex(D, **CFG)
+        idx.insert(rng.normal(size=(10, D)).astype(np.float32))
+        with pytest.raises(KeyError, match="not live"):
+            idx.delete([999])
+        with pytest.raises(KeyError, match="duplicate"):
+            idx.delete([1, 1])
+        idx.delete([3])
+        with pytest.raises(KeyError, match="not live"):
+            idx.delete([3])                        # double delete
+        assert idx.n_live == 9
+        # atomicity: a batch mixing valid and invalid ids removes NOTHING
+        with pytest.raises(KeyError, match="not live"):
+            idx.delete([4, 999])
+        assert idx.n_live == 9
+        idx.delete([4])                            # 4 was left untouched
+        assert idx.n_live == 8
+
+    def test_tree_shard_interleavings(self):
+        # tiny brute cutoff forces BufferKDTree shards from rung 1 up, so
+        # the chunked-engine path sees the same interleaving torture
+        rng = np.random.default_rng(SEED + 11)
+        cfg = dict(base_capacity=32, tomb_limit=6, brute_cutoff=32)
+        for script in range(3):
+            idx = DynamicIndex(D, **cfg)
+            model = {}
+            for _ in range(8):
+                r = float(rng.random())
+                if r < 0.5 or not model:
+                    _apply_insert(
+                        idx, model,
+                        rng.normal(size=(int(rng.integers(8, 65)), D))
+                        .astype(np.float32),
+                    )
+                elif r < 0.7 and len(model) > 8:
+                    ids, _ = _live_arrays(model)
+                    dels = rng.choice(
+                        ids, size=int(rng.integers(1, 9)), replace=False
+                    )
+                    idx.delete(dels)
+                    for g in dels:
+                        del model[int(g)]
+                else:
+                    _check_parity(
+                        idx, model,
+                        rng.normal(size=(8, D)).astype(np.float32),
+                        min(6, len(model)),
+                    )
+            assert any(kind == "tree" for *_, kind in idx.shard_layout())
+            _check_parity(
+                idx, model, rng.normal(size=(8, D)).astype(np.float32),
+                min(6, len(model)),
+            )
+
+
+# ---------------------------------------------------------------------------
+class TestCarryChainCompiles:
+    """Compile-count regression: growing the forest through its 2^i rungs
+    compiles each per-shard scan AT MOST once per shard-size rung, and the
+    merge chain's compile count never grows with the shard count (same
+    discipline as test_compaction_ladder.py's once-per-rung guarantee)."""
+
+    def test_brute_rungs_compile_once_each(self):
+        from repro.core.brute import _tile_step
+
+        rng = np.random.default_rng(13)
+        idx = DynamicIndex(
+            D, base_capacity=32, tomb_limit=4, brute_cutoff=1 << 30
+        )
+        q = rng.normal(size=(16, D)).astype(np.float32)
+        k = 5
+        tiles0 = _tile_step._cache_size()
+        merges0 = merge_cache_size()
+        seen_caps = set()
+        for _ in range(16):        # 16 * 32 pts => rungs 32..512
+            idx.insert(rng.normal(size=(32, D)).astype(np.float32))
+            idx.query(q, k)
+            seen_caps |= {cap for cap, *_ in idx.shard_layout()}
+        grew_tiles = _tile_step._cache_size() - tiles0
+        grew_merge = merge_cache_size() - merges0
+        assert len(seen_caps) >= 4, "growth must actually climb the rungs"
+        assert grew_tiles <= len(seen_caps), (
+            f"per-shard scan compiled {grew_tiles}x for "
+            f"{len(seen_caps)} rungs — carry chain is not shape-stable"
+        )
+        # filter/sort + pairwise fold: 2 compiles TOTAL, independent of how
+        # many shards a query fans out over
+        assert grew_merge <= 2
+        # steady state: repeat queries (fresh content) add nothing
+        tiles1, merges1 = _tile_step._cache_size(), merge_cache_size()
+        for _ in range(3):
+            idx.query(rng.normal(size=(16, D)).astype(np.float32), k)
+        assert _tile_step._cache_size() == tiles1
+        assert merge_cache_size() == merges1
+
+    def test_tree_rungs_compile_once_each(self):
+        rng = np.random.default_rng(17)
+        idx = DynamicIndex(
+            D, base_capacity=32, tomb_limit=4, brute_cutoff=32
+        )
+        q = rng.normal(size=(16, D)).astype(np.float32)
+        rounds0 = chunk_round_cache_size()
+        tree_caps = set()
+        for _ in range(12):        # rungs 32(brute), 64..384 (tree)
+            idx.insert(rng.normal(size=(32, D)).astype(np.float32))
+            idx.query(q, 3)
+            tree_caps |= {
+                cap for cap, *_, kind in idx.shard_layout() if kind == "tree"
+            }
+        grew = chunk_round_cache_size() - rounds0
+        assert len(tree_caps) >= 2
+        assert grew <= len(tree_caps), (
+            f"fused chunk round compiled {grew}x for {len(tree_caps)} "
+            "tree rungs"
+        )
+        rounds1 = chunk_round_cache_size()
+        for _ in range(3):
+            idx.query(rng.normal(size=(16, D)).astype(np.float32), 3)
+        assert chunk_round_cache_size() == rounds1
+
+
+class TestDynamicUnits:
+    def test_insert_returns_monotonic_ids(self):
+        idx = DynamicIndex(3, base_capacity=8, brute_cutoff=16)
+        a = idx.insert(np.zeros((4, 3), np.float32))
+        b = idx.insert(np.ones((2, 3), np.float32))
+        assert a.tolist() == [0, 1, 2, 3] and b.tolist() == [4, 5]
+        assert idx.insert(np.empty((0, 3), np.float32)).size == 0
+
+    def test_shape_validation(self):
+        idx = DynamicIndex(3)
+        with pytest.raises(ValueError, match=r"\[b, 3\]"):
+            idx.insert(np.zeros((2, 4), np.float32))
+        idx.insert(np.zeros((2, 3), np.float32))
+        with pytest.raises(ValueError, match=r"\[m, 3\]"):
+            idx.query(np.zeros((1, 5), np.float32), 1)
+        with pytest.raises(ValueError, match="n_live"):
+            idx.query(np.zeros((1, 3), np.float32), 3)
+
+    def test_layout_is_binary_counter(self):
+        rng = np.random.default_rng(19)
+        idx = DynamicIndex(D, base_capacity=16, brute_cutoff=1 << 30)
+        for _ in range(9):
+            idx.insert(rng.normal(size=(16, D)).astype(np.float32))
+        caps = [cap for cap, *_ in idx.shard_layout()]
+        assert len(caps) == len(set(caps)), "one shard per rung, max"
+        assert sum(live for _, live, *_ in idx.shard_layout()) == idx.n_live
+
+    def test_big_batch_triggers_flattening_rebuild(self):
+        rng = np.random.default_rng(23)
+        idx = DynamicIndex(
+            D, base_capacity=16, brute_cutoff=1 << 30, rebuild_crossover=64
+        )
+        idx.insert(rng.normal(size=(40, D)).astype(np.float32))
+        idx.insert(rng.normal(size=(10, D)).astype(np.float32))
+        assert len(idx.shard_layout()) == 2
+        # >= crossover: the whole forest flattens into ONE shard
+        idx.insert(rng.normal(size=(64, D)).astype(np.float32))
+        assert len(idx.shard_layout()) == 1
+        assert idx.n_live == 114
+
+    def test_warm_is_noop_on_empty_and_compiles_when_live(self):
+        idx = DynamicIndex(D, base_capacity=16, brute_cutoff=1 << 30)
+        idx.warm(8, 3)            # no points yet: must not raise
+        idx.insert(np.random.default_rng(0).normal(size=(20, D))
+                   .astype(np.float32))
+        idx.warm(8, 3)
+        assert idx.stats.queries_advanced > 0

@@ -148,6 +148,46 @@ class TestKNNLM:
         bd, bi = knn_brute(keys[:16], keys, 5)
         np.testing.assert_allclose(dd, bd, rtol=1e-3, atol=1e-4)
 
+    def test_mutable_datastore_extends_incrementally(self, lm_and_params):
+        """Streaming kNN-LM: mutable=True plans the dynamic engine, and
+        extend_datastore appends (key -> next-token) pairs with ids that
+        keep indexing the value array — no rebuild, retrieval stays exact
+        over the grown store."""
+        from repro.api import MutabilityError
+        from repro.core import knn_brute
+
+        lm, params = lm_and_params
+        cfg = lm.cfg
+        knn = KNNLM(lm, params, proj_dim=8, k=5, mutable=True)
+        rng = np.random.default_rng(3)
+        corpus = rng.integers(0, cfg.vocab_size, size=(6, 25)).astype(np.int32)
+        knn.build_datastore(corpus)
+        assert knn.index.engine_name == "dynamic"
+        n0 = knn.values.shape[0]
+
+        extra = rng.integers(0, cfg.vocab_size, size=(4, 25)).astype(np.int32)
+        ids = knn.extend_datastore(extra)
+        assert ids.tolist() == list(range(n0, n0 + 4 * 24))
+        assert knn.values.shape[0] == n0 + 4 * 24
+
+        keys_all = np.concatenate([
+            knn.embed_contexts(corpus[:, :-1]),
+            knn.embed_contexts(extra[:, :-1]),
+        ])
+        dd, di = knn.index.query(keys_all[:16], k=5)
+        bd, _ = knn_brute(keys_all[:16], keys_all, 5)
+        np.testing.assert_allclose(dd, bd, rtol=1e-3, atol=1e-4)
+        assert (di < knn.values.shape[0]).all()   # every id has a value
+
+        p = knn.next_token_probs(extra[:2, :8])
+        np.testing.assert_allclose(p.sum(axis=1), 1.0, rtol=1e-3)
+
+        # an immutable store refuses to grow, loudly and typed
+        knn2 = KNNLM(lm, params, proj_dim=8, k=3, tree_height=3)
+        knn2.build_datastore(corpus)
+        with pytest.raises(MutabilityError):
+            knn2.extend_datastore(extra)
+
     def test_lam_zero_equals_lm(self, lm_and_params):
         lm, params = lm_and_params
         cfg = lm.cfg
