@@ -7,14 +7,23 @@ the cheaper move (the planner's rebuild-vs-merge crossover).  This bench
 measures both sides of that claim on the canonical CPU smoke shape:
 
   for each batch size b:
-    dynamic_insert_s   amortized seconds to insert one b-sized batch into a
-                       mutable ``KNNIndex`` (averaged over ``REPS`` batches,
-                       so occasional carry-chain merges are charged to the
-                       batches that caused them)
+    dynamic_insert_s   amortized seconds to ABSORB one b-sized batch into a
+                       mutable ``KNNIndex`` — insert calls plus a final
+                       ``drain()`` so background carry merges are charged
+                       to the batches that caused them (averaged over
+                       ``REPS`` batches)
+    insert_latency_s   amortized seconds the ``insert`` call itself takes —
+                       the caller-visible latency with merges offloaded to
+                       the background worker (the off-query-path win)
     rebuild_s          seconds to build a fresh static (chunked) index over
                        n + b points — the rebuild-from-scratch alternative
-    post_query_s       one m-query batch against the grown dynamic forest
-                       (fan-out + rank-merge overhead, for context)
+    post_query_s       one m-query batch against the grown (drained)
+                       dynamic forest (fan-out + rank-merge overhead)
+
+RECOMPILE GUARD (the ci.sh smoke's teeth): across the whole ladder the
+per-shard scan may compile at most once per shard rung per device, and the
+fan-out merge's compile count must stay independent of the shard count —
+any recompile beyond one-per-rung-per-device fails the run.
 
   crossover_batch      smallest measured b where rebuild-from-scratch is at
                        least as fast as the amortized batch-dynamic insert
@@ -50,18 +59,30 @@ REPS = 6   # insert batches amortized per measurement
 
 
 def _time_ingest(pts: np.ndarray, batches: list):
-    """(amortized seconds per insert batch, the grown index)."""
+    """(amortized absorb s, amortized insert-latency s, the grown index).
+
+    The absorb time includes ``drain()`` — background carry merges are
+    real work and must be charged somewhere; the latency time is what the
+    inserting caller actually waits, with merges offloaded."""
     from repro.api import IndexSpec, KNNIndex
 
     idx = KNNIndex.build(pts, spec=IndexSpec(mutable=True, k_hint=K))
+    idx.drain()                      # build-time carries are not ingest
     t0 = time.perf_counter()
     for batch in batches:
         idx.insert(batch)
-    return (time.perf_counter() - t0) / len(batches), idx
+    t_latency = time.perf_counter() - t0
+    idx.drain()
+    t_total = time.perf_counter() - t0
+    return t_total / len(batches), t_latency / len(batches), idx
 
 
 def run(scale: float = 1.0) -> dict:
+    import jax
+
     from repro.api import IndexSpec, KNNIndex
+    from repro.core.chunked_jit import chunk_round_cache_size
+    from repro.core.dynamic import merge_cache_size, shard_scan_cache_size
 
     n = max(4096, int(N * scale))
     m = max(256, int(M * scale))
@@ -79,13 +100,26 @@ def run(scale: float = 1.0) -> dict:
     build_pps = n / t_build
     common.row("dynamic/static_build", t_build, f"n={n};{build_pps:.0f} pts/s")
 
-    batch_sizes, dynamic_s, rebuild_s, post_query_s = [], [], [], []
+    n_devices = max(1, len(jax.devices()))
+    scans0 = shard_scan_cache_size()
+    rounds0 = chunk_round_cache_size()
+    merges0 = merge_cache_size()
+    rungs_seen: set = set()
+
+    batch_sizes, dynamic_s, latency_s, rebuild_s, post_query_s = (
+        [], [], [], [], []
+    )
     for b in BATCH_LADDER:
         b = max(64, int(b * scale))
         batches = [
             rng.normal(size=(b, D)).astype(np.float32) for _ in range(REPS)
         ]
-        t_dyn, idx = _time_ingest(pts, batches)
+        t_dyn, t_lat, idx = _time_ingest(pts, batches)
+        # the drained layout is exactly the set of shard rungs the queries
+        # below will compile for (recompile-budget accounting)
+        rungs_seen |= {
+            (cap, kind) for cap, _, _, kind in idx._state.shard_layout()
+        }
         t_q = common.timeit(lambda: idx.query(q, k=K), repeat=1, warmup=1)
         grown = np.concatenate([pts, batches[0]])
         t_reb = common.timeit(
@@ -96,12 +130,34 @@ def run(scale: float = 1.0) -> dict:
         )
         batch_sizes.append(b)
         dynamic_s.append(t_dyn)
+        latency_s.append(t_lat)
         rebuild_s.append(t_reb)
         post_query_s.append(t_q)
         common.row(
             f"dynamic/ingest_b{b}", t_dyn,
-            f"rebuild={t_reb * 1e6:.0f}us;query={t_q * 1e6:.0f}us",
+            f"latency={t_lat * 1e6:.0f}us;rebuild={t_reb * 1e6:.0f}us;"
+            f"query={t_q * 1e6:.0f}us",
         )
+
+    # RECOMPILE GUARD: one compile per shard rung per device, merge fold
+    # shard-count-free — the dynamic engine's shape-stability contract
+    brute_rungs = sum(1 for _, kind in rungs_seen if kind == "brute")
+    tree_rungs = sum(1 for _, kind in rungs_seen if kind == "tree")
+    grew_scan = shard_scan_cache_size() - scans0
+    grew_round = chunk_round_cache_size() - rounds0
+    grew_merge = merge_cache_size() - merges0
+    assert grew_scan <= brute_rungs * n_devices, (
+        f"brute shard scan compiled {grew_scan}x for {brute_rungs} rungs "
+        f"on {n_devices} device(s) — beyond one-per-rung-per-device"
+    )
+    assert grew_round <= tree_rungs * n_devices, (
+        f"fused chunk round compiled {grew_round}x for {tree_rungs} tree "
+        f"rungs on {n_devices} device(s) — beyond one-per-rung-per-device"
+    )
+    assert grew_merge <= 2 * n_devices, (
+        f"fan-out merge compiled {grew_merge}x — must be independent of "
+        "the shard count"
+    )
 
     crossover = None
     for b, td, tr in zip(batch_sizes, dynamic_s, rebuild_s):
@@ -114,10 +170,18 @@ def run(scale: float = 1.0) -> dict:
         "scale": scale,
         "batch_sizes": batch_sizes,
         "dynamic_insert_s": dynamic_s,
+        "insert_latency_s": latency_s,
         "rebuild_s": rebuild_s,
         "post_query_s": post_query_s,
         "crossover_batch": crossover,
         "build_pps": build_pps,
+        "recompiles": {
+            "shard_scan": grew_scan,
+            "chunk_round": grew_round,
+            "merge_fold": grew_merge,
+            "rungs": sorted(rungs_seen),
+            "n_devices": n_devices,
+        },
         "measured_at": datetime.datetime.now(datetime.timezone.utc)
         .isoformat(timespec="seconds"),
     }

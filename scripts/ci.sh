@@ -1,18 +1,27 @@
 #!/usr/bin/env bash
-# CI entry point: lint (if ruff is available) + tier-1 tests.
+# CI entry point: lint + tier-1 tests + perf/recompile smokes + the
+# multi-device gate.
 #
-#   scripts/ci.sh            # lint + tier-1 (slow tests excluded via addopts)
+#   scripts/ci.sh            # lint (advisory) + full gate sequence
 #   scripts/ci.sh --slow     # additionally run the @pytest.mark.slow cases
 #
-# ruff is an optional dev dependency (the runtime container does not ship
-# it); when absent, lint is skipped with a notice rather than failing —
-# tests are the gate, lint is the advisory.
+#   REPRO_CI_LEG=full scripts/ci.sh
+#       the "full extras" matrix leg (.github/workflows/ci.yml): ruff and
+#       hypothesis are installed there, so a missing ruff is a FAILURE —
+#       lint is a hard gate, not an advisory skip.
+#   REPRO_CI_LEG=minimal (default)
+#       runtime deps only: ruff absent is tolerated with a notice.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+LEG="${REPRO_CI_LEG:-minimal}"
 
 if command -v ruff >/dev/null 2>&1; then
     echo "== ruff check =="
     ruff check src tests benchmarks examples
+elif [[ "$LEG" == "full" ]]; then
+    echo "== FAIL: REPRO_CI_LEG=full but ruff is not installed ==" >&2
+    exit 1
 else
     echo "== ruff not installed; skipping lint (pip install ruff to enable) =="
 fi
@@ -42,6 +51,24 @@ echo "== dynamic hypothesis interleavings + compile-count regression =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} REPRO_DYNAMIC_SEED=0 \
     REPRO_HYPOTHESIS_PROFILE=ci python -m pytest -x -q tests/test_dynamic.py \
     -k "hypothesis_interleavings or CarryChain"
+
+# Multi-device gate: a FRESH process with 4 forced host devices runs the
+# distributed suite plus the dynamic multi-device suite IN-PROCESS (the
+# @multi_device tests that tier-1 skips), so the sharded/forest/dynamic
+# fan-out paths are exercised on every CI run — not only inside the
+# subprocesses individual tests happen to spawn.
+echo "== multi-device gate (4 virtual host devices) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} REPRO_DYNAMIC_SEED=0 \
+    REPRO_HYPOTHESIS_PROFILE=ci python -m pytest -x -q \
+    tests/test_distributed.py tests/test_dynamic_multidevice.py
+
+# Dynamic bench smoke: quarter scale (never writes BENCH_dynamic.json —
+# same convention as engine_bench).  The bench itself asserts the mutable
+# forest's recompile budget: at most one compile per shard rung per device,
+# merge fold independent of the shard count — any excess fails CI here.
+echo "== dynamic bench smoke (scale 0.25) =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.dynamic_bench --scale 0.25
 
 if [[ "${1:-}" == "--slow" ]]; then
     echo "== slow suite =="

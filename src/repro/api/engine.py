@@ -63,6 +63,9 @@ class EngineCaps:
     needs_build: bool = True    # has a build phase (tree construction)
     stateful_query: bool = False  # query mutates state: one batch at a time
     mutable: bool = False       # supports incremental insert/delete
+    device_parallel_mutable: bool = False  # insert/delete compose with
+                                # multi-device placement (mutable shards can
+                                # be spread over devices, not just one)
     description: str = ""
 
 

@@ -438,20 +438,23 @@ class DynamicEngine(EngineBase):
     name = "dynamic"
     # stateful_query: shards above the brute cutoff are BufferKDTree
     # instances, whose queries mutate queues/chunk slots — and insert/
-    # delete rebuild shards, so the facade's lock serializes all three
+    # delete rebuild shards, so the facade's lock serializes all three.
+    # device_parallel_mutable: shard rungs are immutable, so the forest
+    # places them across devices like the static engines place trees —
+    # mutability and multi-device scaling compose (ISSUE 5 tentpole).
     caps = EngineCaps(
-        exact=True, out_of_core=True, multi_device=False,
-        stateful_query=True, mutable=True,
+        exact=True, out_of_core=True, multi_device=True,
+        stateful_query=True, mutable=True, device_parallel_mutable=True,
         description="batch-dynamic logarithmic-method forest "
-                    "(incremental insert/delete)",
+                    "(incremental insert/delete, device-placed shards)",
     )
 
     def build(self, points, spec, plan):
         from repro.api.planner import BRUTE_N_MAX
         from repro.core.dynamic import DEFAULT_BASE_CAPACITY, DynamicIndex
 
-        return DynamicIndex.from_points(
-            points,
+        idx = DynamicIndex(
+            points.shape[1] if points.ndim == 2 else 0,
             # shard rungs are B * 2^i with B from the plan's buffer size,
             # capped at the default so footnote-8 buffers on shallow trees
             # don't inflate the smallest rung
@@ -460,8 +463,17 @@ class DynamicEngine(EngineBase):
             rebuild_crossover=plan.crossover_batch,
             tile_q=plan.tile_q,
             backend=plan.backend,
-            device=spec.devices[0] if spec.devices else None,
+            devices=list(spec.devices) if spec.devices else None,
+            merge_async=plan.merge_async,
         )
+        # WARM-AT-BUILD: register the expected batch shape BEFORE the
+        # first insert so the initial shard — and every later shard,
+        # including background staging shards — precompiles its scan at
+        # construction instead of on the first query that touches it
+        if spec.m_hint:
+            idx.warm(spec.m_hint, spec.k_hint)
+        idx.insert(np.asarray(points, np.float32))
+        return idx
 
     def query(self, state, queries, k):
         return state.query(queries, k)
@@ -475,6 +487,9 @@ class DynamicEngine(EngineBase):
     def resident_bytes(self, plan, state=None) -> int:
         if state is not None:
             return state.resident_bytes()         # measured, not estimated
-        # worst case the forest holds ~2x the flat slab (carry-chain
-        # shards are power-of-two padded)
+        # worst case per DEVICE: the largest rung holds ~all n points in
+        # one power-of-two padded slab (~2x the flat slab) and a rung is
+        # never split across devices, so placement does NOT shrink the
+        # worst-device estimate — it only spreads the smaller rungs.  The
+        # measured path (state.resident_bytes) reports the true max.
         return 2 * plan.slab_bytes

@@ -95,6 +95,7 @@ class KNNIndex:
             backend=spec.backend,
             calibration=spec.calibration,
             mutable=spec.mutable,
+            merge_async=spec.merge_async,
         )
         engine = get_engine(pl.engine)
         state = engine.build(points, spec, pl)
@@ -163,6 +164,22 @@ class KNNIndex:
         removed = self._serialized(self._engine.delete, self._state, ids)
         self.n = getattr(self._state, "n_live", self.n - removed)
         return removed
+
+    # ------------------------------------------------------------------
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Wait for background index maintenance to settle.
+
+        The dynamic engine runs carry-chain merges on a background worker
+        (``Plan.merge_async``); queries are exact regardless, so this is
+        only needed when the caller wants a quiesced forest — benchmarks
+        measuring steady-state layout, tests asserting the binary-counter
+        invariant, or a drain before checkpointing.  Engines without
+        background work return immediately.  Re-raises any background
+        failure rather than letting it vanish with the worker thread.
+        """
+        fn = getattr(self._state, "drain_merges", None)
+        if fn is not None:
+            fn(timeout)
 
     # ------------------------------------------------------------------
     def warm(self, m: int, k: Optional[int] = None) -> None:

@@ -251,6 +251,8 @@ class Plan:
     crossover_batch: Optional[int] = None  # dynamic engine: insert batches
                                            # >= this trigger a flattening
                                            # rebuild instead of a carry chain
+    merge_async: bool = False   # dynamic engine: carry merges run on a
+                                # background worker, off the query path
     reasons: Tuple[str, ...] = ()
 
     def replace(self, **kw) -> "Plan":
@@ -274,6 +276,7 @@ def plan(
     backend: str = "auto",
     calibration: Optional[Calibration] = None,
     mutable: Optional[bool] = None,
+    merge_async: Optional[bool] = None,
 ) -> Plan:
     """Pick an engine + parameters for (n, d) references and (m, k) queries.
 
@@ -285,7 +288,11 @@ def plan(
     per-engine q/s) for the static rules where it has them — see
     ``Calibration``.  ``mutable=True`` requires an engine with incremental
     ``insert``/``delete`` (the ``dynamic`` logarithmic-method forest); the
-    rebuild-vs-merge crossover is costed here and pinned into the plan.
+    rebuild-vs-merge crossover is costed here and pinned into the plan,
+    and with >1 device the forest's shard rungs are PLACED across devices
+    (tree rungs least-loaded, brute rungs pinned — the assignment preview
+    lands in ``Plan.reasons``).  ``merge_async`` pins the dynamic engine's
+    carry-merge offload; ``None`` lets the planner decide (background).
     """
     if n < 1 or d < 1:
         raise ValueError(f"need n >= 1, d >= 1; got n={n} d={d}")
@@ -469,12 +476,6 @@ def plan(
     if engine is None:
         if mutable:
             engine = "dynamic"
-            if p > 1:
-                reasons.append(
-                    f"{p} devices visible but mutability wins: the dynamic "
-                    "engine is single-device (multi-device mutable shards "
-                    "are an open roadmap item)"
-                )
         elif not tree_requested and small_job and brute_fits:
             engine = "brute"
             reasons.append(
@@ -559,24 +560,71 @@ def plan(
             reasons.append(f"N={n_chunks} chunks pinned by caller")
 
     crossover = None
+    do_merge_async = False
     if engine == "dynamic":
         crossover, cx_note = mutable_costing()
         reasons.append(cx_note)
+        # carry-merge offload: background staging by default (queries keep
+        # answering from the pre-merge shards — exactness is unaffected,
+        # only the insert/query tail latency is), inline only when pinned
+        do_merge_async = True if merge_async is None else bool(merge_async)
+        if do_merge_async:
+            reasons.append(
+                "carry merges offloaded to a background staging worker; "
+                "queries answer from the pre-merge shards until the "
+                "atomic swap (merge_async=True)"
+            )
+        else:
+            reasons.append(
+                "carry merges run inline on the insert path "
+                "(merge_async=False pinned by caller)"
+            )
+        # device placement: shard rungs are immutable, so they place
+        # across devices like the static forest's trees — tree rungs
+        # least-loaded, churning brute rungs pinned to the lead device
+        if p > 1:
+            from repro.distributed.dynamic_shards import (
+                preview_rung_placement,
+            )
+
+            from repro.core.dynamic import DEFAULT_BASE_CAPACITY
+
+            preview = preview_rung_placement(
+                n,
+                base_capacity=min(b, DEFAULT_BASE_CAPACITY),
+                brute_cutoff=BRUTE_N_MAX,
+                n_devices=p,
+            )
+            pv = ", ".join(
+                f"rung {cap}->dev{dev}" for cap, dev in preview[:6]
+            )
+            reasons.append(
+                f"mutable multi-device: {p} devices; tree rungs placed "
+                f"least-loaded (steady-state preview: {pv}), brute rungs "
+                "pinned to dev0; per-device fan-out folds with the "
+                "two-phase rank merge"
+            )
+        else:
+            reasons.append(
+                "1 device: dynamic forest runs single-device (placement "
+                "and fan-out degenerate to the lead device)"
+            )
         if memory_budget is not None:
-            est = resident_for("dynamic")
+            est = resident_for("dynamic", ns=p)
             if est > memory_budget:
                 # unlike chunked/sharded, the dynamic forest cannot chunk-
                 # stream its shards yet — say so instead of silently
                 # ignoring the §3 constraint every other branch honors
                 reasons.append(
                     f"memory_budget {memory_budget}B below the dynamic "
-                    f"forest's resident estimate {est}B: best effort "
-                    "(mutable shard chunk-streaming is a roadmap item)"
+                    f"forest's per-device resident estimate {est}B: best "
+                    "effort (mutable shard chunk-streaming is a roadmap "
+                    "item)"
                 )
 
     nc = int(n_chunks) if n_chunks is not None else 1
     ns = int(n_shards) if n_shards is not None else (
-        p if engine in ("forest", "sharded", "ring") else 1
+        p if engine in ("forest", "sharded", "ring", "dynamic") else 1
     )
     deadline, dl_note = calibrated_deadline()
     if dl_note is not None and engine in ("chunked", "host", "sharded"):
@@ -587,5 +635,6 @@ def plan(
         starvation_deadline=deadline,
         calibrated=calibration is not None,
         crossover_batch=crossover,
+        merge_async=do_merge_async,
         reasons=tuple(reasons), **base
     )

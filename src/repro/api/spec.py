@@ -52,6 +52,10 @@ class IndexSpec:
     mutable: Optional[bool] = None        # True: index must support
                                           # insert/delete (planner picks a
                                           # mutable engine, e.g. 'dynamic')
+    merge_async: Optional[bool] = None    # dynamic engine: None => planner
+                                          # decides (background carry merges
+                                          # off the query path); False pins
+                                          # the inline carry chain
 
     def replace(self, **kw) -> "IndexSpec":
         return dataclasses.replace(self, **kw)

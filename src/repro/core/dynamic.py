@@ -1,75 +1,120 @@
-"""Batch-dynamic mutable index: a logarithmic-method forest of static shards.
+"""Batch-dynamic mutable index: a device-aware logarithmic-method forest.
 
 The paper's buffer k-d tree is STATIC: any change to the reference catalog
 means a full rebuild.  This module adds incremental ``insert``/``delete``
 without touching the static engines, using the classic logarithmic method
 (Bentley–Saxe; Parallel Batch-Dynamic kd-trees, PAPERS.md): the live point
 multiset is partitioned across a small forest of *immutable* shards whose
-capacities are ``B * 2^i`` (at most one shard per size rung, like the bits
-of a binary counter), and every shard is served by one of the repo's
-existing static engines:
+capacities are ``B * 2^i`` (at most one shard per size rung once merges
+settle, like the bits of a binary counter), and every shard is served by
+one of the repo's existing static engines:
 
-    rung capacity <= brute_cutoff   ->  ``knn_brute`` over the padded slab
+    rung capacity <= brute_cutoff   ->  tiled brute scan over the padded slab
     rung capacity  > brute_cutoff   ->  ``BufferKDTree`` (chunked engine)
 
   insert(points)   the batch becomes a new shard at the smallest fitting
-                   rung; while another shard occupies that rung the two are
-                   merged (live points collected, shard rebuilt one rung up
-                   if needed) — the binary-counter CARRY CHAIN.  Each point
-                   therefore participates in O(log(n/B)) rebuilds over the
-                   index lifetime, far below rebuild-from-scratch per batch.
-                   Batches at or beyond the rebuild/merge crossover (see
-                   ``rebuild_crossover``) skip the chain and trigger one
-                   flattening rebuild — the planner's rebuild-vs-merge cost
-                   decision, applied.
-  delete(ids)      TOMBSTONES: the row's ``live`` bit is cleared, the shard
-                   untouched.  A shard whose tombstone count exceeds
-                   ``tomb_limit`` is compacted (rebuilt from its live rows,
-                   possibly dropping to a smaller rung); a shard with no
-                   live rows is dropped outright.
-  query(q, k)      fans out over live shards and rank-merges their top-k.
+                   rung; a rung collision triggers a MERGE of the two
+                   shards (live points collected, shard rebuilt one rung
+                   up if needed) — the binary-counter CARRY CHAIN.  Each
+                   point participates in O(log(n/B)) rebuilds over the
+                   index lifetime.  Batches at or beyond the rebuild/merge
+                   crossover (``rebuild_crossover``) skip the chain and
+                   trigger one flattening rebuild.
+  delete(ids)      TOMBSTONES: the row's ``live`` bit is cleared; on brute
+                   shards the row's COORDINATES are overwritten with
+                   ``PAD_COORD`` too (see FETCH WIDTHS below).  A shard
+                   whose tombstone count exceeds ``tomb_limit`` is
+                   compacted; a shard with no live rows is dropped.
+  query(q, k)      fans out over live shards — grouped per DEVICE, one
+                   thread per device so every dispatch queue stays busy —
+                   and folds the per-shard lists with the Pallas kernel's
+                   two-phase ``_rank_merge``.
 
-EXACTNESS UNDER TOMBSTONES (the invariant the parity harness checks): every
-query fetches ``w = k + tomb_limit`` candidates per shard (capped at the
-shard capacity).  A shard never holds more than ``tomb_limit`` tombstones at
-query time, so its nearest ``w`` overall candidates contain at least ``k``
-live ones — and those are exactly its nearest live points (any closer live
-point would itself be fetched).  The union over shards therefore contains
-the global top-k of the live multiset; tombstoned/padding candidates are
-masked to +inf and the per-shard sorted lists are folded with the Pallas
-kernel's two-phase ``_rank_merge`` (kernels/knn_scan.py) at the fixed width
-``w``, one jitted pairwise merge per shard.
+MULTI-DEVICE PLACEMENT (distributed/dynamic_shards.py): shards are
+immutable, so each rung can live on its own device the way the static
+``forest``/``sharded`` engines place whole trees.  Tree rungs go to the
+least-loaded device (greedy, by capacity); brute rungs are pinned to the
+lead device so the churning low rungs never bounce slabs between devices.
+
+BACKGROUND CARRY MERGES: with ``merge_async=True`` a rung collision does
+NOT block the insert (or any query).  The colliding shards are snapshotted
+under the mutation lock, a single background worker builds the merged
+shard into a staging slab, and the result is atomically swapped in — the
+sources stay queryable until that instant, so the live multiset (and thus
+every query answer) is identical throughout.  Deletes that land on a
+source mid-merge are re-applied to the staging shard at swap time from the
+snapshot delta; a source that disappears entirely (compaction, flattening
+rebuild) aborts the merge and reschedules.  ``merge_async=False`` keeps
+the original inline carry chain (the default for direct construction; the
+planner decides for ``repro.api`` indexes and records why).
+
+FETCH WIDTHS — EXACTNESS UNDER TOMBSTONES (the invariant the parity
+harness checks): a shard must contribute its nearest ``min(k, n_live)``
+live points to the fold.
+
+  * TREE shards fetch ``min(k + tomb_limit, capacity)`` candidates: the
+    shard never holds more than ``tomb_limit`` tombstones at query time,
+    so its nearest ``k + tomb_limit`` physical rows contain at least its
+    nearest ``k`` live ones.  (The leaf structure holds an immutable copy
+    of the slab, so tombstoned coordinates cannot be overwritten there.)
+  * BRUTE shards fetch only ``min(k, capacity)``: every tombstoned row's
+    coordinates were overwritten with ``PAD_COORD`` at delete time, so
+    dead rows rank strictly after ALL live rows and the nearest ``k``
+    physical rows ARE the nearest ``k`` live rows.  This is the ROADMAP's
+    "tombstone coordinate overwrite" — the per-shard fetch width drops
+    below ``k + tomb_limit`` wherever the backing structure permits the
+    overwrite.
+
+Tombstoned/padding candidates are additionally masked via the ``live``
+bits, and the per-shard sorted lists are folded at the uniform merge width
+``w = k + tomb_limit`` (pad-extended where a shard fetched less), one
+jitted pairwise merge per shard.
 
 RECOMPILE DISCIPLINE (same contract as the compaction ladder): per-shard
-query shapes depend only on the rung, never on live counts —
+query shapes depend only on the rung, never on live or tombstone counts —
 
-  * shard slabs are padded to their rung capacity with ``PAD_COORD`` rows
-    (the repo's standard can't-win padding), so a rung has ONE reference
-    shape for the lifetime of the process;
-  * query batches are padded up to a power-of-two rung (``_pad_batch``), so
-    at most one compile per (batch rung, shard rung, k) triple;
+  * shard slabs are padded to their rung capacity with ``PAD_COORD`` rows,
+    so a rung has ONE reference shape for the lifetime of the process;
+  * query batches are padded up to a power-of-two rung (``_pad_batch``),
+    so at most one compile per (batch rung, shard rung, k) triple — and
+    per DEVICE, since each device compiles its own executable;
+  * fetch widths use the ``tomb_limit`` BOUND (tree) or bare ``k``
+    (brute), never the instantaneous tombstone count;
   * the merge chain is a Python fold over ONE jitted pairwise function, so
     its compile count is independent of how many shards are live.
 
+WARM-AT-BUILD: ``warm(m, k)`` registers the (batch, k) shape and every
+shard created afterwards — including staging shards built by the
+background merge worker — precompiles its scan for the registered shapes
+AT CONSTRUCTION, so no query ever pays a rung's first compile.
+
 ``tests/test_dynamic.py`` holds the generative parity harness (random
 insert/delete/query interleavings vs ``knn_brute`` over the live multiset)
-and the carry-chain compile-count regression.
+and the carry-chain compile-count regression;
+``tests/test_dynamic_multidevice.py`` replays it on 4 virtual devices with
+merges completing mid-stream.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import itertools
 import math
-from typing import Dict, List, Optional, Tuple
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.brute import knn_brute
 from repro.core.lazysearch import BufferKDTree, SearchStats
-from repro.core.toptree import PAD_COORD, suggest_height
+from repro.core.toptree import PAD_COORD, _round_up, suggest_height
+from repro.distributed.dynamic_shards import (
+    DeviceFanout,
+    MergeWorker,
+    ShardPlacer,
+)
 from repro.kernels.knn_scan import _rank_merge
 
 __all__ = [
@@ -137,17 +182,20 @@ def merge_cache_size() -> int:
 def shard_scan_cache_size() -> int:
     """Jit-cache entries of the brute shard scan (``knn_brute``'s tile step).
 
-    Grows once per (batch rung, shard rung, d, k + tomb_limit) — the
-    carry-chain compile-count regression's primary counter."""
+    Grows once per (batch rung, shard rung, d, fetch width) per device —
+    the carry-chain compile-count regression's primary counter."""
     from repro.core.brute import _tile_step
 
     return _tile_step._cache_size()
 
 
 # ---------------------------------------------------------------------------
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class _Shard:
-    """One immutable slab of the forest (mutated only via tombstone bits)."""
+    """One immutable slab of the forest (mutated only via tombstone bits and
+    the matching PAD_COORD coordinate overwrite on brute shards).  Identity
+    semantics (``eq=False``): the merge swap tracks shards by object, never
+    by content."""
 
     rung: int                      # capacity = base << rung
     capacity: int
@@ -157,6 +205,11 @@ class _Shard:
     n_rows: int                    # occupied rows (live + tombstoned)
     n_tomb: int = 0
     engine: Optional[BufferKDTree] = None   # None => brute scan
+    device: Any = None             # placement (None = process default)
+    seq: int = 0                   # creation order: stable fan-out slots
+    merging: bool = False          # reserved by an in-flight background merge
+    tomb_limit: int = DEFAULT_TOMB_LIMIT    # owning forest's bound
+    _dev_slab: Any = None          # brute: cached device copy (tile-padded)
 
     @property
     def n_live(self) -> int:
@@ -166,6 +219,33 @@ class _Shard:
     def kind(self) -> str:
         return "brute" if self.engine is None else "tree"
 
+    def fetch_width(self, k: int) -> int:
+        """Per-shard candidate fetch width for a k-NN query (see module
+        doc, FETCH WIDTHS): brute shards overwrite tombstone coordinates
+        so bare ``k`` suffices; tree shards add the tombstone BOUND (never
+        the live count — shapes must not depend on mutation history)."""
+        if self.engine is None:
+            return min(k, self.capacity)
+        return min(k + self.tomb_limit, self.capacity)
+
+    def dev_slab(self):
+        """Brute slab on this shard's device, tile-padded, built once and
+        invalidated by tombstone coordinate overwrites."""
+        if self._dev_slab is None:
+            tx = min(self.capacity, _BRUTE_TILE_X)
+            nx = _round_up(self.capacity, tx)
+            slab = self.points
+            if nx != self.capacity:
+                pad = np.full(
+                    (nx - self.capacity, slab.shape[1]), np.float32(PAD_COORD)
+                )
+                slab = np.concatenate([slab, pad])
+            arr = jnp.asarray(slab)
+            if self.device is not None:
+                arr = jax.device_put(arr, self.device)
+            self._dev_slab = arr
+        return self._dev_slab
+
 
 class DynamicIndex:
     """Mutable exact-kNN index over a logarithmic-method shard forest.
@@ -174,6 +254,13 @@ class DynamicIndex:
     ``from_points(points)`` batch gets ``0..n-1``), are never reused, and
     are what ``query`` returns — so they index any value array the caller
     appends to in lockstep (the kNN-LM datastore does exactly this).
+
+    ``devices`` places shards across multiple accelerators (see module
+    doc); ``merge_async=True`` moves carry-chain merges to a background
+    worker so neither inserts nor queries wait on them.  Both default to
+    the old single-device / inline behavior for direct construction; the
+    ``repro.api`` planner turns them on and records why in
+    ``Plan.reasons``.
     """
 
     def __init__(
@@ -186,7 +273,8 @@ class DynamicIndex:
         rebuild_crossover: Optional[int] = None,
         tile_q: int = 128,
         backend: str = "auto",
-        device=None,
+        devices: Optional[Sequence[Any]] = None,
+        merge_async: bool = False,
     ):
         if d < 1:
             raise ValueError(f"need d >= 1, got {d}")
@@ -205,11 +293,24 @@ class DynamicIndex:
         )
         self.tile_q = int(tile_q)
         self.backend = backend
-        self.device = device
-        self._shards: Dict[int, _Shard] = {}
+        self.merge_async = bool(merge_async)
+        self._placer = ShardPlacer(devices)
+        self._fanout = DeviceFanout()
+        self._merger: Optional[MergeWorker] = None
+        self._shards: List[_Shard] = []
+        self._seq = itertools.count()
         self._next_id = 0
         self._n_live = 0
         self._last_stats = SearchStats()
+        self._warm_shapes: set = set()
+        # _mu guards forest topology + live bits against the merge worker;
+        # user-facing calls are already serialized by the KNNIndex facade
+        self._mu = threading.RLock()
+        self._merge_stats = {
+            "scheduled": 0, "completed": 0, "aborted": 0, "failed": 0,
+            "inline": 0,
+        }
+        self._merge_test_hook = None   # tests: callable(phase, a, b)
 
     # ------------------------------------------------------------------
     @classmethod
@@ -228,36 +329,75 @@ class DynamicIndex:
 
     @property
     def n_tomb(self) -> int:
-        return sum(s.n_tomb for s in self._shards.values())
+        with self._mu:
+            return sum(s.n_tomb for s in self._shards)
 
     @property
     def stats(self) -> SearchStats:
         return self._last_stats
 
+    @property
+    def devices(self) -> List[Any]:
+        return list(self._placer.devices)
+
+    @property
+    def pending_merges(self) -> int:
+        """Background carry merges still in flight (0 when inline)."""
+        return self._merger.pending if self._merger is not None else 0
+
+    def merge_stats(self) -> Dict[str, int]:
+        with self._mu:
+            return dict(self._merge_stats)
+
+    def drain_merges(self, timeout: Optional[float] = None) -> None:
+        """Block until every background merge (and its carry chain) has
+        landed; re-raises any background failure.  No-op when inline."""
+        if self._merger is not None:
+            self._merger.drain(timeout)
+
+    def _sorted_shards(self) -> List[_Shard]:
+        return sorted(self._shards, key=lambda s: (s.rung, s.seq))
+
     def shard_layout(self) -> List[Tuple[int, int, int, str]]:
         """(capacity, live, tombstones, kind) per shard, smallest rung first
-        — the forest's 'binary counter' state, for tests and describe()."""
-        return [
-            (s.capacity, s.n_live, s.n_tomb, s.kind)
-            for _, s in sorted(self._shards.items())
-        ]
+        — the forest's 'binary counter' state, for tests and describe().
+        Transient duplicates at a rung mean a background merge is pending;
+        ``drain_merges()`` settles the counter."""
+        with self._mu:
+            return [
+                (s.capacity, s.n_live, s.n_tomb, s.kind)
+                for s in self._sorted_shards()
+            ]
+
+    def placement(self) -> List[Tuple[int, str, Any]]:
+        """(capacity, kind, device) per shard — the live placement map."""
+        with self._mu:
+            return [
+                (s.capacity, s.kind, s.device) for s in self._sorted_shards()
+            ]
 
     def live_ids(self) -> np.ndarray:
         """Sorted i64 ids of the live multiset (test oracle support)."""
-        parts = [s.ids[s.live] for s in self._shards.values()]
+        with self._mu:
+            parts = [s.ids[s.live] for s in self._shards]
         if not parts:
             return np.empty((0,), np.int64)
         return np.sort(np.concatenate(parts))
 
     def resident_bytes(self) -> int:
-        """Device bytes the shard slabs occupy during a query."""
-        total = 0
-        for s in self._shards.values():
-            if s.engine is not None:
-                total += s.engine.store.resident_bytes()
-            else:
-                total += s.capacity * self.d * 4
-        return total
+        """Largest per-device byte footprint of the shard slabs (the
+        planner's §3 memory term is per device)."""
+        with self._mu:
+            per_dev: Dict[int, int] = {}
+            for s in self._shards:
+                b = (
+                    s.engine.store.resident_bytes()
+                    if s.engine is not None
+                    else s.capacity * self.d * 4
+                )
+                key = id(s.device)
+                per_dev[key] = per_dev.get(key, 0) + b
+        return max(per_dev.values(), default=0)
 
     # ------------------------------------------------------------------
     def _fit_rung(self, count: int) -> int:
@@ -267,7 +407,10 @@ class DynamicIndex:
         return r
 
     def _make_shard(self, pts: np.ndarray, ids: np.ndarray) -> _Shard:
-        """Build one immutable shard from live rows (sorted by id)."""
+        """Build one immutable shard from live rows (sorted by id), place
+        it, and precompile its scan for every registered warm shape.  Runs
+        WITHOUT the mutation lock when called from the merge worker — all
+        inputs are snapshots, the placer carries its own lock."""
         order = np.argsort(ids, kind="stable")
         pts, ids = pts[order], ids[order]
         n = pts.shape[0]
@@ -279,8 +422,10 @@ class DynamicIndex:
         id_arr[:n] = ids
         live = np.zeros((cap,), bool)
         live[:n] = True
+        kind = "brute" if cap <= self.brute_cutoff else "tree"
+        device = self._placer.place(cap, kind)
         engine = None
-        if cap > self.brute_cutoff:
+        if kind == "tree":
             # static chunked-engine shard over the FULL padded slab: the
             # rung, not the live count, determines every compiled shape
             engine = BufferKDTree(
@@ -289,23 +434,173 @@ class DynamicIndex:
                 n_chunks=1,
                 tile_q=self.tile_q,
                 backend=self.backend,
-                device=self.device,
+                device=device,
             )
-        return _Shard(
+        shard = _Shard(
             rung=rung, capacity=cap, points=slab, ids=id_arr, live=live,
-            n_rows=n, engine=engine,
+            n_rows=n, engine=engine, device=device, seq=next(self._seq),
+            tomb_limit=self.tomb_limit,
         )
+        self._warm_shard(shard)
+        return shard
 
-    def _add_with_carry(self, shard: _Shard) -> None:
-        """Binary-counter carry: merge while the rung is occupied."""
-        while shard.rung in self._shards:
-            other = self._shards.pop(shard.rung)
-            pts = np.concatenate(
-                [shard.points[shard.live], other.points[other.live]]
-            )
-            ids = np.concatenate([shard.ids[shard.live], other.ids[other.live]])
-            shard = self._make_shard(pts, ids)
-        self._shards[shard.rung] = shard
+    def _warm_shard(self, shard: _Shard) -> None:
+        """Precompile the shard's scan for every registered (batch, k)
+        shape — at construction, i.e. in the background worker for staging
+        shards, never on the query path."""
+        with self._mu:
+            # snapshot: warm() mutates the set under _mu while the merge
+            # worker runs this lock-free (the compiles below must NOT hold
+            # the lock — they can take seconds)
+            shapes = sorted(self._warm_shapes)
+        for mp, k in shapes:
+            kq = shard.fetch_width(k)
+            if shard.engine is not None:
+                shard.engine.warm(mp, kq)
+            else:
+                qz = np.zeros((mp, self.d), np.float32)
+                self._brute_scan(shard, self._put_queries(qz, shard.device), kq)
+
+    def _drop_shard(self, shard: _Shard) -> None:
+        """Remove from the forest and return its capacity to the placer
+        (caller holds ``_mu``)."""
+        self._shards.remove(shard)
+        self._placer.release(shard.capacity, shard.device)
+
+    # ------------------------------------------------------------------
+    # carry chain: inline (merge_async=False) or background staging swap
+    # ------------------------------------------------------------------
+    def _collisions(self) -> Dict[int, List[_Shard]]:
+        by: Dict[int, List[_Shard]] = {}
+        for s in self._sorted_shards():
+            if not s.merging:
+                by.setdefault(s.rung, []).append(s)
+        return {r: ss for r, ss in by.items() if len(ss) >= 2}
+
+    def _schedule_carries(self) -> None:
+        """Resolve rung collisions (caller holds ``_mu``): inline fuse, or
+        snapshot + hand off to the background worker."""
+        if not self.merge_async:
+            while True:
+                coll = self._collisions()
+                if not coll:
+                    return
+                rung = min(coll)
+                a, b = coll[rung][0], coll[rung][1]
+                pts = np.concatenate([a.points[a.live], b.points[b.live]])
+                ids = np.concatenate([a.ids[a.live], b.ids[b.live]])
+                self._drop_shard(a)
+                self._drop_shard(b)
+                self._shards.append(self._make_shard(pts, ids))
+                self._merge_stats["inline"] += 1
+        if self._merger is None:
+            self._merger = MergeWorker()
+        while True:   # a rung may hold >2 free shards after an abort
+            coll = self._collisions()
+            if not coll:
+                return
+            for _, ss in sorted(coll.items()):
+                a, b = ss[0], ss[1]
+                a.merging = b.merging = True
+                # snapshot the live rows NOW, under the lock: the worker
+                # must never read arrays a concurrent delete overwrites
+                snaps = [
+                    (s, s.points[s.live].copy(), s.ids[s.live].copy())
+                    for s in (a, b)
+                ]
+                self._merge_stats["scheduled"] += 1
+                self._merger.submit(
+                    functools.partial(self._merge_task, snaps)
+                )
+
+    def _merge_task(self, snaps) -> None:
+        """Background carry merge: build the staging shard lock-free from
+        the snapshots, then swap it in atomically (re-applying any deletes
+        that landed on the sources mid-merge).  If the re-applied deltas
+        leave the staging shard over-tombstoned, it is compacted OUTSIDE
+        the lock and the swap retried — the forest is only ever mutated
+        once the shard that will replace the sources exists, and every
+        expensive build runs lock-free so queries never wait on a merge.
+
+        FAILURE CONTRACT: an exception anywhere (the realistic case is
+        ``_make_shard`` failing to build/compile a staging shard) must not
+        wedge the rung — the except path un-reserves the surviving
+        sources, returns any un-swapped staging placement, and re-raises
+        so ``MergeWorker`` surfaces the error on the next ``drain()``.
+        The sources are untouched until the single atomic swap, so no
+        data is ever lost to a failed merge."""
+        staged: List[_Shard] = []   # placed but not yet swapped/released
+        hook = self._merge_test_hook
+
+        def _discard(shard: _Shard) -> None:
+            self._placer.release(shard.capacity, shard.device)
+            staged.remove(shard)
+
+        try:
+            pts = np.concatenate([p for _, p, _ in snaps])
+            ids = np.concatenate([i for _, _, i in snaps])
+            while True:
+                if hook is not None:
+                    hook("build", snaps)
+                merged = self._make_shard(pts, ids)   # lock-free build
+                staged.append(merged)
+                if hook is not None:
+                    hook("swap", snaps)
+                with self._mu:
+                    sources = [s for s, _, _ in snaps]
+                    if not all(
+                        any(s is t for t in self._shards) for s in sources
+                    ):
+                        # a source was compacted or flattened away mid-
+                        # merge: its points live elsewhere now — discard
+                        # the staging shard
+                        for s in sources:
+                            if any(s is t for t in self._shards):
+                                s.merging = False
+                        _discard(merged)
+                        self._merge_stats["aborted"] += 1
+                        self._schedule_carries()
+                        return
+                    for src, _, snap_ids in snaps:
+                        # delta: snapshot rows whose live bit was cleared
+                        # since (idempotent across retries — only rows
+                        # still present and live in `merged` are touched)
+                        pos = np.searchsorted(src.ids[: src.n_rows], snap_ids)
+                        dead = snap_ids[~src.live[: src.n_rows][pos]]
+                        if dead.size:
+                            self._tombstone_rows(merged, dead)
+                    if merged.n_tomb <= self.tomb_limit or merged.n_live == 0:
+                        # THE swap: the only point where the forest mutates
+                        for src in sources:
+                            self._drop_shard(src)
+                        if merged.n_live == 0:
+                            _discard(merged)
+                        else:
+                            self._shards.append(merged)
+                            staged.remove(merged)
+                        self._merge_stats["completed"] += 1
+                        self._schedule_carries()
+                        return
+                    # over-tombstoned (deletes landed mid-merge): compact
+                    # OUTSIDE the lock and retry — `merged` is invisible
+                    # to every other thread, so its arrays are stable
+                    pts = merged.points[merged.live]
+                    ids = merged.ids[merged.live]
+                    _discard(merged)
+        except BaseException:
+            # deliberately NO reschedule here: a persistently failing
+            # merge must not retry in a tight worker loop — the next
+            # insert/delete/swap calls _schedule_carries and retries once
+            # per mutation, and queries stay exact off the sources
+            with self._mu:
+                for s, _, _ in snaps:
+                    if any(s is t for t in self._shards):
+                        s.merging = False
+                for sh in staged:
+                    if not any(sh is t for t in self._shards):
+                        self._placer.release(sh.capacity, sh.device)
+                self._merge_stats["failed"] += 1
+            raise
 
     # ------------------------------------------------------------------
     def insert(self, points: np.ndarray) -> np.ndarray:
@@ -314,40 +609,60 @@ class DynamicIndex:
         if pts.ndim != 2 or pts.shape[1] != self.d:
             raise ValueError(f"points must be [b, {self.d}], got {pts.shape}")
         b = pts.shape[0]
-        ids = np.arange(self._next_id, self._next_id + b, dtype=np.int64)
-        self._next_id += b
-        if b == 0:
-            return ids
-        # rebuild-vs-merge: a batch at/above the crossover makes one
-        # flattening rebuild cheaper than pushing a carry chain through
-        # every rung.  The planner-costed value was taken at BUILD-time n;
-        # the true crossover scales ~n/levels, so as the index grows the
-        # pinned number acts as a floor and the model takes over — a 10M-
-        # point index must not full-rebuild on every 4096-point batch just
-        # because 4096 was the right threshold at 20k points.
-        if self.rebuild_crossover is not None:
-            levels = max(1, math.ceil(math.log2(
-                max(2.0, max(1, self._n_live) / self.base_capacity)
-            )))
-            crossover = max(self.rebuild_crossover, self._n_live // levels)
-        else:
-            crossover = max(1, self._n_live)
-        if self._shards and b >= crossover:
-            all_pts = [s.points[s.live] for s in self._shards.values()]
-            all_ids = [s.ids[s.live] for s in self._shards.values()]
-            self._shards.clear()
-            self._add_with_carry(
-                self._make_shard(
-                    np.concatenate(all_pts + [pts]),
-                    np.concatenate(all_ids + [ids]),
+        with self._mu:
+            ids = np.arange(self._next_id, self._next_id + b, dtype=np.int64)
+            self._next_id += b
+            if b == 0:
+                return ids
+            # rebuild-vs-merge: a batch at/above the crossover makes one
+            # flattening rebuild cheaper than pushing a carry chain through
+            # every rung.  The planner-costed value was taken at BUILD-time
+            # n; the true crossover scales ~n/levels, so as the index grows
+            # the pinned number acts as a floor and the model takes over.
+            if self.rebuild_crossover is not None:
+                levels = max(1, math.ceil(math.log2(
+                    max(2.0, max(1, self._n_live) / self.base_capacity)
+                )))
+                crossover = max(self.rebuild_crossover, self._n_live // levels)
+            else:
+                crossover = max(1, self._n_live)
+            if self._shards and b >= crossover:
+                all_pts = [s.points[s.live] for s in self._shards]
+                all_ids = [s.ids[s.live] for s in self._shards]
+                for s in list(self._shards):
+                    self._drop_shard(s)   # in-flight merges abort at swap
+                self._shards.append(
+                    self._make_shard(
+                        np.concatenate(all_pts + [pts]),
+                        np.concatenate(all_ids + [ids]),
+                    )
                 )
-            )
-        else:
-            self._add_with_carry(self._make_shard(pts, ids))
-        self._n_live += b
-        return ids
+            else:
+                self._shards.append(self._make_shard(pts, ids))
+            self._n_live += b
+            self._schedule_carries()
+            return ids
 
     # ------------------------------------------------------------------
+    def _tombstone_rows(self, shard: _Shard, dead_ids: np.ndarray) -> None:
+        """Clear live bits for the ``dead_ids`` present AND live in the
+        shard (idempotent: ids already tombstoned or compacted away are
+        skipped — merge-retry deltas are cumulative) and, on brute shards,
+        overwrite the coordinates with PAD_COORD so the tightened fetch
+        width stays exact (caller holds ``_mu``)."""
+        sid = shard.ids[: shard.n_rows]
+        pos = np.searchsorted(sid, dead_ids)
+        safe = np.clip(pos, 0, max(0, shard.n_rows - 1))
+        hit = (pos < shard.n_rows) & (sid[safe] == dead_ids) & shard.live[safe]
+        rows = safe[hit]
+        if rows.size == 0:
+            return
+        shard.live[rows] = False
+        shard.n_tomb += int(rows.size)
+        if shard.engine is None:
+            shard.points[rows] = np.float32(PAD_COORD)
+            shard._dev_slab = None   # re-put on next query
+
     def delete(self, ids) -> int:
         """Tombstone the given live ids; returns the count removed.
 
@@ -359,56 +674,90 @@ class DynamicIndex:
             return 0
         if np.unique(req).size != req.size:
             raise KeyError("delete request contains duplicate ids")
-        # resolve EVERY id before touching any live bit: a bad request
-        # (unknown / already-deleted id) must leave the index unchanged
-        found = np.zeros(req.shape, bool)
-        hits: List[Tuple[_Shard, np.ndarray]] = []
-        for shard in self._shards.values():
-            sid = shard.ids[: shard.n_rows]
-            pos = np.searchsorted(sid, req)
-            safe = np.clip(pos, 0, max(0, shard.n_rows - 1))
-            hit = (pos < shard.n_rows) & (sid[safe] == req) & shard.live[safe]
-            if hit.any():
-                hits.append((shard, safe[hit]))
-                found |= hit
-        if not found.all():
-            missing = req[~found].tolist()
-            raise KeyError(f"ids not live in index: {missing}")
-        for shard, rows in hits:
-            shard.live[rows] = False
-            shard.n_tomb += int(rows.size)
-        self._n_live -= int(req.size)
-
-        # threshold-triggered compaction: rebuild over-tombstoned shards
-        # from their live rows (restores the n_tomb <= tomb_limit invariant
-        # the query-time exactness bound relies on); drop empty shards
-        for rung in sorted(self._shards):
-            shard = self._shards.get(rung)
-            if shard is None or shard.n_tomb <= self.tomb_limit:
-                if shard is not None and shard.n_live == 0:
-                    del self._shards[rung]
-                continue
-            del self._shards[rung]
-            if shard.n_live:
-                self._add_with_carry(
-                    self._make_shard(
-                        shard.points[shard.live], shard.ids[shard.live]
-                    )
+        with self._mu:
+            # resolve EVERY id before touching any live bit: a bad request
+            # (unknown / already-deleted id) must leave the index unchanged
+            found = np.zeros(req.shape, bool)
+            hits: List[Tuple[_Shard, np.ndarray]] = []
+            for shard in self._shards:
+                sid = shard.ids[: shard.n_rows]
+                pos = np.searchsorted(sid, req)
+                safe = np.clip(pos, 0, max(0, shard.n_rows - 1))
+                hit = (
+                    (pos < shard.n_rows) & (sid[safe] == req)
+                    & shard.live[safe]
                 )
+                if hit.any():
+                    hits.append((shard, req[hit]))
+                    found |= hit
+            if not found.all():
+                missing = req[~found].tolist()
+                raise KeyError(f"ids not live in index: {missing}")
+            for shard, dead in hits:
+                self._tombstone_rows(shard, dead)
+            self._n_live -= int(req.size)
+
+            # threshold-triggered compaction: rebuild over-tombstoned
+            # shards from their live rows (restores the n_tomb <=
+            # tomb_limit invariant the tree-shard exactness bound relies
+            # on); drop empty shards.  A shard reserved by an in-flight
+            # merge is handled the same way — the merge aborts at swap.
+            for shard in list(self._sorted_shards()):
+                if shard.n_live == 0:
+                    self._drop_shard(shard)
+                elif shard.n_tomb > self.tomb_limit:
+                    pts = shard.points[shard.live]
+                    sids = shard.ids[shard.live]
+                    self._drop_shard(shard)
+                    self._shards.append(self._make_shard(pts, sids))
+            self._schedule_carries()
         return int(req.size)
 
     # ------------------------------------------------------------------
-    def _shard_candidates(
-        self, shard: _Shard, qp: np.ndarray, w: int, sb: dict
-    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """One shard's nearest-w candidate list (dists, global ids, keep).
+    @staticmethod
+    def _put_queries(qp: np.ndarray, device) -> jnp.ndarray:
+        arr = jnp.asarray(qp)
+        return arr if device is None else jax.device_put(arr, device)
 
-        Fetches ``kq = min(w, capacity)`` neighbors through the shard's
-        static engine, maps rows to global ids, masks tombstones/padding,
+    def _brute_scan(
+        self, shard: _Shard, qp_dev: jnp.ndarray, kq: int
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Tiled brute scan of one shard's device-resident slab: the same
+        jitted tile step as ``knn_brute``, but the slab stays committed to
+        the shard's device across queries."""
+        from repro.core.brute import _tile_step
+
+        slab = shard.dev_slab()
+        nx = slab.shape[0]
+        tx = min(shard.capacity, _BRUTE_TILE_X)
+        mp = qp_dev.shape[0]
+        tq = min(mp, _BRUTE_TILE_Q)   # both powers of two: tq divides mp
+        out_d = np.empty((mp, kq), np.float32)
+        out_i = np.empty((mp, kq), np.int64)
+        for qs in range(0, mp, tq):
+            q = jax.lax.dynamic_slice_in_dim(qp_dev, qs, tq, 0)
+            best_d = jnp.full((tq, kq), jnp.inf, jnp.float32)
+            best_i = jnp.full((tq, kq), -1, jnp.int32)
+            for xs in range(0, nx, tx):
+                best_d, best_i = _tile_step(
+                    q, jax.lax.dynamic_slice_in_dim(slab, xs, tx, 0),
+                    jnp.int32(xs), best_d, best_i, k=kq,
+                )
+            out_d[qs:qs + tq] = np.sqrt(np.maximum(np.asarray(best_d), 0.0))
+            out_i[qs:qs + tq] = np.asarray(best_i)
+        return out_d, out_i
+
+    def _shard_candidates(
+        self, shard: _Shard, qp: np.ndarray, qp_dev, k: int, w: int, sb: dict
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """One shard's nearest candidates (dists, global ids, keep).
+
+        Fetches ``kq = shard.fetch_width(k)`` neighbors through the
+        shard's engine, maps rows to global ids, masks tombstones/padding,
         and pads the list out to the uniform merge width ``w``.
         """
         mp = qp.shape[0]
-        kq = min(w, shard.capacity)
+        kq = shard.fetch_width(k)
         if shard.engine is not None:
             dd, rows = shard.engine.query(qp, k=kq)
             st = shard.engine.stats
@@ -417,11 +766,7 @@ class DynamicIndex:
             sb["flushes"] += st.flushes
             sb["iterations"] = max(sb["iterations"], st.iterations)
         else:
-            dd, rows = knn_brute(
-                qp, shard.points, kq,
-                tile_q=min(mp, _BRUTE_TILE_Q),
-                tile_x=min(shard.capacity, _BRUTE_TILE_X),
-            )
+            dd, rows = self._brute_scan(shard, qp_dev, kq)
             sb["points_scanned"] += mp * shard.capacity
             sb["iterations"] = max(sb["iterations"], 1)
         rows = np.asarray(rows)
@@ -441,7 +786,15 @@ class DynamicIndex:
         self, queries: np.ndarray, k: int
     ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
         """Exact kNN of the live multiset: (dists f32[m, k] ascending
-        Euclidean, ids i64[m, k] global insertion ids, SearchStats)."""
+        Euclidean, ids i64[m, k] global insertion ids, SearchStats).
+
+        Fan-out runs one thread per DEVICE GROUP (each device's shards
+        scanned in slot order on its own thread, so every dispatch queue
+        stays busy); the fold is the usual jitted rank-merge chain.
+        Background merges never block here — the snapshot taken under the
+        lock answers from whichever side of a pending swap is current, and
+        both sides hold the identical live multiset.
+        """
         q = np.asarray(queries, np.float32)
         if q.ndim != 2 or q.shape[1] != self.d:
             raise ValueError(f"queries must be [m, {self.d}], got {q.shape}")
@@ -453,11 +806,34 @@ class DynamicIndex:
         qp[:m] = q
         w = k + self.tomb_limit
 
-        sb = dict(points_scanned=0, units_scanned=0, flushes=0, iterations=0)
+        with self._mu:
+            shards = self._sorted_shards()
+
+        results: List = [None] * len(shards)
+        by_dev: Dict[Any, List[int]] = {}
+        for slot, s in enumerate(shards):
+            by_dev.setdefault(s.device, []).append(slot)
+        boards: List[dict] = []
+
+        def group_thunk(device, slots):
+            def run():
+                sb = dict(points_scanned=0, units_scanned=0, flushes=0,
+                          iterations=0)
+                qp_dev = self._put_queries(qp, device)
+                for slot in slots:
+                    results[slot] = self._shard_candidates(
+                        shards[slot], qp, qp_dev, k, w, sb
+                    )
+                boards.append(sb)
+            return run
+
+        self._fanout.run(
+            {dev: group_thunk(dev, slots) for dev, slots in by_dev.items()}
+        )
+
         acc_d = acc_c = None
         gid_lists: List[np.ndarray] = []
-        for slot, (_, shard) in enumerate(sorted(self._shards.items())):
-            dd, gids, keep = self._shard_candidates(shard, qp, w, sb)
+        for slot, (dd, gids, keep) in enumerate(results):
             gid_lists.append(gids)
             sd, sc = _filter_sort(
                 jnp.asarray(dd), jnp.asarray(keep), jnp.int32(slot * w)
@@ -476,18 +852,22 @@ class DynamicIndex:
         # for the impossible tail (keeps the -1 contract if it ever trips)
         out_i[~np.isfinite(out_d)] = -1
         self._last_stats = SearchStats(
-            iterations=sb["iterations"],
-            flushes=sb["flushes"],
-            units_scanned=sb["units_scanned"],
-            points_scanned=sb["points_scanned"],
+            iterations=max((sb["iterations"] for sb in boards), default=0),
+            flushes=sum(sb["flushes"] for sb in boards),
+            units_scanned=sum(sb["units_scanned"] for sb in boards),
+            points_scanned=sum(sb["points_scanned"] for sb in boards),
             queries_advanced=m,
         )
         return out_d, out_i, self._last_stats
 
     # ------------------------------------------------------------------
     def warm(self, m: int, k: int) -> None:
-        """Precompile the fan-out for ``m``-query batches: one throwaway
-        query (``query`` pads to the batch rung itself) through every live
-        shard + the merge chain (no-op while the index holds < k points)."""
+        """Register the (batch, k) shape so every FUTURE shard — including
+        background-merge staging shards — precompiles its scan at
+        construction, and precompile the current fan-out + merge chain
+        with one throwaway query (no-op while the index holds < k
+        points)."""
+        with self._mu:
+            self._warm_shapes.add((_pad_batch(int(m)), int(k)))
         if 1 <= k <= self._n_live:
             self.query(np.zeros((m, self.d), np.float32), k)

@@ -3,6 +3,12 @@
 from repro.distributed.ring_knn import ring_knn_brute
 from repro.distributed.forest import forest_knn, build_forest
 from repro.distributed.sharded import MultiDeviceTrees, multi_device_query
+from repro.distributed.dynamic_shards import (
+    DeviceFanout,
+    MergeWorker,
+    ShardPlacer,
+    preview_rung_placement,
+)
 
 __all__ = [
     "ring_knn_brute",
@@ -10,4 +16,8 @@ __all__ = [
     "build_forest",
     "MultiDeviceTrees",
     "multi_device_query",
+    "ShardPlacer",
+    "MergeWorker",
+    "DeviceFanout",
+    "preview_rung_placement",
 ]

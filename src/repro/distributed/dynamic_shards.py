@@ -1,0 +1,212 @@
+"""Device placement + background merge machinery for the mutable forest.
+
+The paper's second headline claim — "a simple yet efficient way of using
+multiple devices given in a single workstation" — composes with the
+batch-dynamic engine (``core/dynamic.py``) because logarithmic-method
+shards are *immutable*: once built, a rung's slab can live on any device
+and be queried there independently, exactly like the static ``forest`` /
+``sharded`` engines place whole trees.  This module holds the two pieces
+that make that composition work, kept separate from the forest logic so
+the planner can consult them without importing the engine:
+
+``ShardPlacer``
+    Greedy least-loaded placement of shard rungs across a device list.
+    Tree rungs (the big ones — they dominate both memory and scan time)
+    go to the device with the least assigned capacity; brute rungs (small,
+    cheap, short-lived under the carry chain) are pinned to the lead
+    device so their slabs never bounce between devices as the binary
+    counter churns.  ``preview_rung_placement`` exposes the same policy as
+    a pure function so ``planner.plan`` can record the expected assignment
+    in ``Plan.reasons`` before any shard exists.
+
+``MergeWorker``
+    One background thread executing carry-chain merges *off the query
+    path*.  A merge builds the combined shard into a staging slab while
+    queries keep answering from the pre-merge shards (the live multiset is
+    identical either way, so exactness is preserved — the invariant
+    ``tests/test_dynamic.py`` checks), then atomically swaps it in under
+    the forest's mutation lock.  The worker is deliberately single-
+    threaded: merges are rare relative to queries, and one thread keeps
+    the carry chain's rung-by-rung ordering trivially serializable.
+
+``DeviceFanout``
+    A persistent thread pool that runs one task per *device group* so each
+    device's async dispatch queue stays busy during a query fan-out (the
+    same thread-per-device idiom as ``distributed/sharded.py``).
+"""
+
+from __future__ import annotations
+
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "ShardPlacer",
+    "MergeWorker",
+    "DeviceFanout",
+    "preview_rung_placement",
+]
+
+
+def preview_rung_placement(
+    n: int,
+    *,
+    base_capacity: int,
+    brute_cutoff: int,
+    n_devices: int,
+    max_rungs: int = 48,
+) -> List[Tuple[int, int]]:
+    """Steady-state rung placement preview: [(capacity, device_index)].
+
+    Decomposes ``n`` binary-counter style over ``base_capacity`` (the
+    forest's steady state after many small inserts: one shard per set bit
+    of ``n // base_capacity``) and assigns each rung with the same policy
+    ``ShardPlacer`` applies live: tree rungs (capacity > ``brute_cutoff``)
+    least-loaded across the ``n_devices`` devices, brute rungs pinned to
+    device 0.  Pure function — the planner records the result in
+    ``Plan.reasons`` without touching any device.
+    """
+    units = max(1, -(-n // max(1, base_capacity)))
+    caps = [
+        base_capacity << r
+        for r in range(min(max_rungs, units.bit_length()))
+        if (units >> r) & 1
+    ]
+    load = [0] * max(1, n_devices)
+    out: List[Tuple[int, int]] = []
+    for cap in sorted(caps, reverse=True):   # biggest first, like any
+        if cap > brute_cutoff and n_devices > 1:   # bin-packing heuristic
+            dev = min(range(len(load)), key=load.__getitem__)
+            load[dev] += cap
+        else:
+            dev = 0
+        out.append((cap, dev))
+    return out
+
+
+class ShardPlacer:
+    """Greedy least-loaded device placement for forest shards.
+
+    Thread-safe: the merge worker places staging shards concurrently with
+    foreground inserts.  Load is tracked in shard-capacity units (rows),
+    a good proxy for both resident bytes and scan cost at fixed d.
+    """
+
+    def __init__(self, devices: Optional[Sequence[Any]] = None):
+        devs = list(devices) if devices else []
+        self.devices: List[Any] = devs or [None]
+        self._load = [0] * len(self.devices)
+        self._mu = threading.Lock()
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.devices)
+
+    def place(self, capacity: int, kind: str) -> Any:
+        """Pick a device for a new shard and charge its capacity."""
+        with self._mu:
+            if len(self.devices) == 1 or kind == "brute":
+                idx = 0
+            else:
+                idx = min(range(len(self._load)), key=self._load.__getitem__)
+            self._load[idx] += capacity
+            return self.devices[idx]
+
+    def release(self, capacity: int, device: Any) -> None:
+        """Return a dropped shard's capacity to its device's budget."""
+        with self._mu:
+            for i, d in enumerate(self.devices):
+                if d is device:
+                    self._load[i] = max(0, self._load[i] - capacity)
+                    return
+
+    def loads(self) -> List[int]:
+        with self._mu:
+            return list(self._load)
+
+
+class MergeWorker:
+    """Single background thread running carry merges off the query path."""
+
+    def __init__(self):
+        self._ex = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="dyn-merge"
+        )
+        self._mu = threading.Lock()
+        self._idle = threading.Condition(self._mu)
+        self._pending = 0
+        self._error: Optional[BaseException] = None
+
+    @property
+    def pending(self) -> int:
+        with self._mu:
+            return self._pending
+
+    def submit(self, fn: Callable[[], None]) -> None:
+        """Queue one merge.  ``fn`` may itself submit follow-up merges
+        (the carry chain): it does so before this wrapper decrements the
+        pending count, so ``drain`` always waits for the whole chain."""
+        with self._mu:
+            self._pending += 1
+
+        def run():
+            try:
+                fn()
+            except BaseException as e:  # noqa: BLE001 - surfaced in drain()
+                with self._mu:
+                    self._error = e
+            finally:
+                with self._mu:
+                    self._pending -= 1
+                    if self._pending == 0:
+                        self._idle.notify_all()
+
+        self._ex.submit(run)
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until every queued merge (and its chain) has completed.
+        Re-raises the first background exception, so a broken merge can
+        never fail silently."""
+        with self._idle:
+            if not self._idle.wait_for(
+                lambda: self._pending == 0, timeout=timeout
+            ):
+                raise TimeoutError(
+                    f"{self._pending} background merge(s) still running "
+                    f"after {timeout}s"
+                )
+            if self._error is not None:
+                err, self._error = self._error, None
+                raise RuntimeError("background carry merge failed") from err
+
+
+class DeviceFanout:
+    """Persistent pool running one query task per device group.
+
+    ``run(groups)`` executes each thunk concurrently (thread-per-group, so
+    every device's dispatch queue fills) and returns when all finish; a
+    single group runs inline, keeping the 1-device path allocation-free.
+    Exceptions propagate to the caller.
+    """
+
+    def __init__(self):
+        self._ex: Optional[ThreadPoolExecutor] = None
+        self._workers = 0
+
+    def run(self, groups: Dict[Any, Callable[[], None]]) -> None:
+        thunks = list(groups.values())
+        if len(thunks) <= 1:
+            for t in thunks:
+                t()
+            return
+        if self._ex is None or self._workers < len(thunks):
+            if self._ex is not None:
+                self._ex.shutdown(wait=False)
+            self._workers = len(thunks)
+            self._ex = ThreadPoolExecutor(
+                max_workers=self._workers, thread_name_prefix="dyn-fanout"
+            )
+        futures = [self._ex.submit(t) for t in thunks]
+        for f in futures:
+            f.result()

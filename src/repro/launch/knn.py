@@ -49,6 +49,9 @@ def main(argv=None):
                          "the build (plans a mutable index)")
     ap.add_argument("--append-batches", type=int, default=4,
                     help="number of insert batches --append is split into")
+    ap.add_argument("--sync-merges", action="store_true",
+                    help="pin the dynamic engine's carry merges to the "
+                         "insert path (default: background staging worker)")
     ap.add_argument("--verify", type=int, default=256,
                     help="verify this many queries against brute force")
     ap.add_argument("--seed", type=int, default=0)
@@ -66,6 +69,7 @@ def main(argv=None):
         k_hint=args.k,
         m_hint=args.m,
         mutable=True if args.append else None,
+        merge_async=False if args.sync_merges else None,
     )
     t0 = time.time()
     idx = KNNIndex.build(pts, spec=spec)
@@ -97,6 +101,16 @@ def main(argv=None):
                   f"{dt:.3f}s ({batch.shape[0] / max(dt, 1e-9):.0f} pts/s)")
         print(f"[knn] append total: +{args.append} pts in {t_ingest:.2f}s "
               f"(full rebuild took {t_build:.2f}s for {args.n})")
+        t0 = time.time()
+        idx.drain()
+        state = idx._state  # dynamic engine: report the forest's placement
+        print(f"[knn] background merges drained in {time.time() - t0:.3f}s "
+              f"({state.merge_stats()})")
+        placed = {}
+        for cap, kind, dev in state.placement():
+            placed.setdefault(str(dev), []).append(f"{kind}:{cap}")
+        for dev, shards in placed.items():
+            print(f"[knn]   {dev}: {' '.join(shards)}")
         pts = np.concatenate([pts, extra])
         t0 = time.time()
         res = idx.query(q, k=args.k)

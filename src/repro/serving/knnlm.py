@@ -24,7 +24,12 @@ is a new (key -> next-token) pair).  Construct with ``mutable=True`` and the
 planner picks the batch-dynamic engine; ``extend_datastore`` then APPENDS
 (context, next-token) pairs incrementally — ``KNNIndex.insert`` assigns ids
 in insertion order, so the value array extends in lockstep and retrieved
-ids keep indexing it directly.  No rebuild, no re-projection.
+ids keep indexing it directly.  No rebuild, no re-projection.  The dynamic
+engine runs its carry-chain merges on a background worker (and spreads
+shard rungs over every visible device), so neither ``extend_datastore``
+nor ``next_token_probs`` ever waits on index maintenance — retrieval stays
+exact throughout; call ``drain_index()`` only when a quiesced index is
+wanted (e.g. before checkpointing the datastore).
 """
 
 from __future__ import annotations
@@ -132,6 +137,14 @@ class KNNLM:
             [self.values, nxt.reshape(-1).astype(np.int64)]
         )
         return ids
+
+    def drain_index(self, timeout=None) -> None:
+        """Wait for background index maintenance (the dynamic engine's
+        carry merges) to settle.  Retrieval is exact WITHOUT calling this —
+        it exists for checkpoint/shutdown paths that want a quiesced
+        forest, not for the serving loop."""
+        if self.index is not None:
+            self.index.drain(timeout)
 
     # ------------------------------------------------------------------
     def next_token_probs(self, tokens: np.ndarray) -> np.ndarray:

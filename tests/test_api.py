@@ -130,10 +130,47 @@ class TestMutabilityContract:
         assert p.crossover_batch and p.crossover_batch > 0
         assert any("rebuild" in r and "crossover" in r for r in p.reasons)
 
-    def test_mutable_overrides_multi_device(self):
+    def test_mutable_multi_device_places_rungs(self):
+        # the old rule forced mutable specs onto one device; now the
+        # forest's shard rungs are PLACED across devices and the plan
+        # records the assignment preview + the merge-offload decision
         p = plan(100_000, 10, k=10, devices=[object()] * 4, mutable=True)
         assert p.engine == "dynamic"
+        assert p.n_shards == 4 and p.n_devices == 4
+        assert p.merge_async
+        assert not any("single-device" in r for r in p.reasons)
+        placement = [r for r in p.reasons if "mutable multi-device" in r]
+        assert placement and "4 devices" in placement[0]
+        assert "rung" in placement[0] and "->dev" in placement[0]
+        assert "brute rungs pinned" in placement[0]
+        assert any("background staging worker" in r for r in p.reasons)
+
+    def test_mutable_single_device_fallback(self):
+        # devices=1: placement and fan-out degenerate, and the plan says so
+        p = plan(100_000, 10, k=10, devices=[object()], mutable=True)
+        assert p.engine == "dynamic"
+        assert p.n_shards == 1
         assert any("single-device" in r for r in p.reasons)
+        assert not any("mutable multi-device" in r for r in p.reasons)
+
+    def test_merge_async_pin_is_honored(self):
+        p = plan(100_000, 10, k=10, devices=[object()] * 2, mutable=True,
+                 merge_async=False)
+        assert not p.merge_async
+        assert any("inline" in r and "merge_async=False" in r
+                   for r in p.reasons)
+        # default (None) resolves to background merges
+        p2 = plan(100_000, 10, k=10, devices=[object()] * 2, mutable=True)
+        assert p2.merge_async
+
+    def test_dynamic_caps_declare_device_parallel_mutability(self):
+        caps = available_engines()["dynamic"]
+        assert caps.multi_device and caps.mutable
+        assert caps.device_parallel_mutable
+        # no immutable engine claims the composed capability
+        for name, c in available_engines().items():
+            if not c.mutable:
+                assert not c.device_parallel_mutable, name
 
     def test_mutable_budget_shortfall_is_recorded(self):
         # the dynamic forest cannot chunk-stream yet; a busted budget must
@@ -141,6 +178,14 @@ class TestMutabilityContract:
         p = plan(200_000, 10, k=10, devices=[object()], mutable=True,
                  memory_budget=100_000)
         assert p.engine == "dynamic"
+        assert any("best effort" in r for r in p.reasons)
+
+    def test_mutable_budget_shortfall_not_hidden_by_placement(self):
+        # the largest rung is never split across devices, so more devices
+        # must NOT shrink the per-device worst-case estimate below the
+        # budget and silently drop the warning
+        p = plan(200_000, 10, k=10, devices=[object()] * 4, mutable=True,
+                 memory_budget=100_000)
         assert any("best effort" in r for r in p.reasons)
 
     def test_mutable_with_immutable_pin_rejected(self):

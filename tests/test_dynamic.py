@@ -84,10 +84,10 @@ def _apply_insert(idx, model, pts):
     return ids
 
 
-def _run_script(rng, n_ops=12, max_points=240):
+def _run_script(rng, n_ops=12, max_points=240, **extra_cfg):
     """One random interleaving of insert/delete/query batches, checked
     against the shadow model after every query and once at the end."""
-    idx = DynamicIndex(D, **CFG)
+    idx = DynamicIndex(D, **CFG, **extra_cfg)
     model = {}
     checked = 0
     for _ in range(n_ops):
@@ -125,6 +125,17 @@ def _run_script(rng, n_ops=12, max_points=240):
         )
     k = min(K_CHOICES[-1], len(model))
     _check_parity(idx, model, rng.normal(size=(4, D)).astype(np.float32), k)
+    if extra_cfg.get("merge_async"):
+        # settle the forest and re-check: the post-drain multiset must be
+        # identical to the mid-stream one (merges never change answers)
+        idx.drain_merges(timeout=60)
+        caps = [cap for cap, *_ in idx.shard_layout()]
+        assert len(caps) == len(set(caps)), (
+            "binary counter must settle once background merges drain"
+        )
+        _check_parity(
+            idx, model, rng.normal(size=(4, D)).astype(np.float32), k
+        )
     return checked + 1
 
 
@@ -328,6 +339,254 @@ class TestCarryChainCompiles:
         for _ in range(3):
             idx.query(rng.normal(size=(16, D)).astype(np.float32), 3)
         assert chunk_round_cache_size() == rounds1
+
+
+class TestBackgroundMerges:
+    """Carry merges run OFF the query path (merge_async=True): queries keep
+    answering from the pre-merge shards, the staging swap is atomic, and
+    deletes that land on a source mid-merge are re-applied to the staging
+    shard (or abort it when the source is compacted away)."""
+
+    def test_async_interleavings_parity(self):
+        # the generative runner, with background merges live the whole way
+        # (and a drain + binary-counter + parity recheck at the end)
+        for script in range(10):
+            rng = np.random.default_rng(SEED * 7_000_003 + script)
+            _run_script(rng, merge_async=True)
+
+    def _held_merge(self):
+        """Index with one background merge parked before its swap."""
+        import threading
+
+        rng = np.random.default_rng(31)
+        idx = DynamicIndex(D, **CFG, merge_async=True)
+        release = threading.Event()
+        swapping = threading.Event()
+
+        def hook(phase, snaps):
+            if phase == "swap":
+                swapping.set()
+                assert release.wait(30), "test forgot to release the merge"
+
+        idx._merge_test_hook = hook
+        model = {}
+        _apply_insert(idx, model, rng.normal(size=(20, D)).astype(np.float32))
+        # second batch at the same rung, BELOW the flattening crossover
+        # (b < n_live) -> rung collision -> background merge
+        _apply_insert(idx, model, rng.normal(size=(12, D)).astype(np.float32))
+        assert swapping.wait(30), "merge was never scheduled"
+        assert idx.pending_merges >= 1
+        return idx, model, release, rng
+
+    def test_queries_exact_while_merge_in_flight(self):
+        idx, model, release, rng = self._held_merge()
+        try:
+            # both colliding shards still answer — the pre-merge multiset
+            q = rng.normal(size=(6, D)).astype(np.float32)
+            _check_parity(idx, model, q, 4)
+            layout = idx.shard_layout()
+            caps = [cap for cap, *_ in layout]
+            assert len(caps) != len(set(caps)), (
+                "expected the transient rung collision while the merge "
+                f"is parked, got {layout}"
+            )
+        finally:
+            release.set()
+        idx._merge_test_hook = None
+        idx.drain_merges(timeout=60)
+        assert idx.merge_stats()["completed"] >= 1
+        _check_parity(idx, model, rng.normal(size=(6, D)).astype(np.float32), 4)
+
+    def test_delete_during_merge_reapplied_at_swap(self):
+        idx, model, release, rng = self._held_merge()
+        try:
+            # delete ids that live INSIDE the merging sources: the staging
+            # shard was built from a pre-delete snapshot, so the swap must
+            # re-apply these as tombstones
+            ids, _ = _live_arrays(model)
+            dels = rng.choice(ids, size=4, replace=False)
+            idx.delete(dels)
+            for g in dels:
+                del model[int(g)]
+            _check_parity(
+                idx, model, rng.normal(size=(4, D)).astype(np.float32), 3
+            )
+        finally:
+            release.set()
+        idx._merge_test_hook = None
+        idx.drain_merges(timeout=60)
+        # the deleted ids must stay dead after the swap
+        assert not np.isin(dels, idx.live_ids()).any()
+        _check_parity(idx, model, rng.normal(size=(6, D)).astype(np.float32), 4)
+
+    def test_compaction_mid_merge_aborts_staging(self):
+        idx, model, release, rng = self._held_merge()
+        try:
+            # tombstone a merging source past tomb_limit: compaction
+            # replaces it immediately (the exactness bound cannot wait for
+            # the swap), so the parked merge must abort, not resurrect it
+            ids, _ = _live_arrays(model)
+            # ids 0..19 all live in the FIRST source shard: concentrate the
+            # tombstones there so that one shard crosses tomb_limit
+            dels = ids[: CFG["tomb_limit"] + 3]
+            idx.delete(dels)
+            for g in dels:
+                del model[int(g)]
+            assert all(
+                t <= CFG["tomb_limit"] for _, _, t, _ in idx.shard_layout()
+            )
+            _check_parity(
+                idx, model, rng.normal(size=(4, D)).astype(np.float32), 3
+            )
+        finally:
+            release.set()
+        idx._merge_test_hook = None
+        idx.drain_merges(timeout=60)
+        assert idx.merge_stats()["aborted"] >= 1
+        assert not np.isin(dels, idx.live_ids()).any()
+        _check_parity(idx, model, rng.normal(size=(6, D)).astype(np.float32), 4)
+
+    def test_failed_merge_unreserves_sources_and_surfaces_error(self):
+        # a merge that dies (e.g. staging build failure) must not wedge
+        # the rung: sources are un-reserved, the error re-raises on
+        # drain, and the next mutation retries the merge successfully
+        rng = np.random.default_rng(53)
+        idx = DynamicIndex(D, **CFG, merge_async=True)
+        boom = {"armed": True}
+
+        def hook(phase, snaps):
+            if phase == "build" and boom["armed"]:
+                boom["armed"] = False
+                raise RuntimeError("injected staging failure")
+
+        idx._merge_test_hook = hook
+        model = {}
+        _apply_insert(idx, model, rng.normal(size=(20, D)).astype(np.float32))
+        _apply_insert(idx, model, rng.normal(size=(12, D)).astype(np.float32))
+        with pytest.raises(RuntimeError, match="background carry merge"):
+            idx.drain_merges(timeout=30)
+        assert idx.merge_stats()["failed"] == 1
+        # rung not wedged: nothing is left reserved, queries stay exact
+        assert not any(s.merging for s in idx._shards)
+        _check_parity(idx, model, rng.normal(size=(4, D)).astype(np.float32), 3)
+        # the next mutation reschedules; this time the merge succeeds
+        _apply_insert(idx, model, rng.normal(size=(2, D)).astype(np.float32))
+        idx.drain_merges(timeout=60)
+        assert idx.merge_stats()["completed"] >= 1
+        caps = [cap for cap, *_ in idx.shard_layout()]
+        assert len(caps) == len(set(caps))
+        _check_parity(idx, model, rng.normal(size=(6, D)).astype(np.float32), 4)
+
+    def test_failed_compaction_retry_loses_nothing(self):
+        # mid-merge deletes push the staging shard over tomb_limit, and
+        # the compaction REBUILD then fails: the sources must be fully
+        # intact (the forest only mutates at the single atomic swap) —
+        # the counter, the live set and query parity all agree
+        import threading
+
+        rng = np.random.default_rng(59)
+        idx = DynamicIndex(D, **CFG, merge_async=True)
+        release = threading.Event()
+        swapping = threading.Event()
+        state = {"builds": 0}
+
+        def hook(phase, snaps):
+            if phase == "build":
+                state["builds"] += 1
+                if state["builds"] == 2:   # the compaction-retry build
+                    raise RuntimeError("injected compaction-rebuild failure")
+            if phase == "swap" and state["builds"] == 1:
+                swapping.set()
+                assert release.wait(30), "test forgot to release the merge"
+
+        idx._merge_test_hook = hook
+        model = {}
+        _apply_insert(idx, model, rng.normal(size=(20, D)).astype(np.float32))
+        _apply_insert(idx, model, rng.normal(size=(12, D)).astype(np.float32))
+        assert swapping.wait(30), "merge was never scheduled"
+        ids, _ = _live_arrays(model)
+        # 4 tombstones in source A (ids 0..19), 3 in source B (20..31):
+        # each source stays under tomb_limit=6, the merged shard's 7 do not
+        dels = np.concatenate([ids[:4], ids[20:23]])
+        idx.delete(dels)
+        for g in dels:
+            del model[int(g)]
+        release.set()
+        with pytest.raises(RuntimeError, match="background carry merge"):
+            idx.drain_merges(timeout=30)
+        assert idx.merge_stats()["failed"] == 1
+        assert idx.n_live == len(model)
+        assert idx.live_ids().size == len(model)
+        assert not any(s.merging for s in idx._shards)
+        _check_parity(idx, model, rng.normal(size=(6, D)).astype(np.float32), 4)
+        # the next mutation retries; this time both builds succeed
+        _apply_insert(idx, model, rng.normal(size=(2, D)).astype(np.float32))
+        idx.drain_merges(timeout=60)
+        assert idx.merge_stats()["completed"] >= 1
+        _check_parity(idx, model, rng.normal(size=(6, D)).astype(np.float32), 4)
+
+    def test_flatten_rebuild_aborts_in_flight_merge(self):
+        idx, model, release, rng = self._held_merge()
+        try:
+            # an at-crossover batch flattens the whole forest while the
+            # merge is parked; its sources are gone, so it must abort
+            big = rng.normal(size=(len(model) + 8, D)).astype(np.float32)
+            _apply_insert(idx, model, big)
+        finally:
+            release.set()
+        idx._merge_test_hook = None
+        idx.drain_merges(timeout=60)
+        assert idx.merge_stats()["aborted"] >= 1
+        _check_parity(idx, model, rng.normal(size=(6, D)).astype(np.float32), 5)
+
+
+class TestTombstoneOverwrite:
+    """ROADMAP debt: tombstoned rows on brute shards get PAD_COORD written,
+    so the per-shard fetch width tightens from k + tomb_limit to bare k —
+    and the tightened bound must stay exact (the parity harness covers the
+    behavior generatively; these pin the mechanism)."""
+
+    def test_brute_rows_overwritten_and_width_tightened(self):
+        from repro.core.toptree import PAD_COORD
+
+        rng = np.random.default_rng(37)
+        idx = DynamicIndex(D, base_capacity=32, tomb_limit=8,
+                           brute_cutoff=1 << 30)
+        model = {}
+        _apply_insert(idx, model, rng.normal(size=(30, D)).astype(np.float32))
+        ids, _ = _live_arrays(model)
+        dels = rng.choice(ids, size=5, replace=False)
+        idx.delete(dels)
+        for g in dels:
+            del model[int(g)]
+        shard = idx._shards[0]
+        assert shard.kind == "brute" and shard.n_tomb == 5
+        dead_rows = ~shard.live[: shard.n_rows]
+        assert (shard.points[: shard.n_rows][dead_rows]
+                == np.float32(PAD_COORD)).all()
+        # the tightened bound: bare k, NOT k + tomb_limit
+        assert shard.fetch_width(4) == 4
+        _check_parity(idx, model, rng.normal(size=(6, D)).astype(np.float32), 4)
+
+    def test_tree_shards_keep_tombstone_bound(self):
+        rng = np.random.default_rng(38)
+        idx = DynamicIndex(D, base_capacity=32, tomb_limit=4, brute_cutoff=32)
+        model = {}
+        _apply_insert(idx, model, rng.normal(size=(60, D)).astype(np.float32))
+        layout = {kind for *_, kind in idx.shard_layout()}
+        assert "tree" in layout
+        tree = next(s for s in idx._shards if s.kind == "tree")
+        # the leaf structure holds an immutable slab copy: no overwrite,
+        # so the fetch width must keep the tombstone BOUND (and never the
+        # instantaneous count — shapes stay mutation-independent)
+        assert tree.fetch_width(3) == 3 + 4
+        ids, _ = _live_arrays(model)
+        dels = rng.choice(ids, size=3, replace=False)
+        idx.delete(dels)
+        for g in dels:
+            del model[int(g)]
+        assert tree.fetch_width(3) == 3 + 4
+        _check_parity(idx, model, rng.normal(size=(6, D)).astype(np.float32), 3)
 
 
 class TestDynamicUnits:
