@@ -70,6 +70,31 @@ XLA_FLAGS="--xla_force_host_platform_device_count=4" \
 echo "== dynamic bench smoke (scale 0.25) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.dynamic_bench --scale 0.25
 
+# Chaos leg: a FRESH process with 4 forced host devices runs the fault-
+# injection suite (device-loss degradation drill + merge-retry/drain-
+# timeout faults, including the @multi_device in-process cases tier-1
+# skips) and re-runs the crash-restore parity harness under a sweep of
+# REPRO_FAULT_SEED values.  Each seed shifts the generative scripts to a
+# disjoint block (seed*1000 .. +N), so every CI run proves kill-at-any-
+# boundary recovery on interleavings tier-1 never saw.  A smaller script
+# count per seed keeps the sweep's wall time near one tier-1 harness run.
+echo "== chaos leg (fault injection + crash-restore sweep, 4 virtual devices) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -x -q tests/test_faults.py
+for seed in 1 2 3; do
+    echo "== chaos leg: crash-restore harness @ REPRO_FAULT_SEED=$seed =="
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} REPRO_FAULT_SEED=$seed \
+        REPRO_PERSIST_SCRIPTS=40 python -m pytest -x -q \
+        tests/test_persist.py -k "CrashRestoreHarness"
+done
+
+# Persistence bench smoke: quarter scale (never writes BENCH_persist.json).
+# The bench proves save -> mutate -> load equivalence end-to-end at every
+# scale; the >=10x warm-restart speedup bar is asserted only at scale 1.0.
+echo "== persist bench smoke (scale 0.25) =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.persist_bench --scale 0.25
+
 if [[ "${1:-}" == "--slow" ]]; then
     echo "== slow suite =="
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m slow

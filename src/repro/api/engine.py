@@ -33,12 +33,14 @@ from typing import Dict, Optional, Tuple, Type
 import numpy as np
 
 from repro.core.lazysearch import SearchStats
+from repro.persist.format import PersistUnsupported
 
 __all__ = [
     "Engine",
     "EngineBase",
     "EngineCaps",
     "MutabilityError",
+    "PersistUnsupported",
     "register_engine",
     "get_engine",
     "available_engines",
@@ -104,6 +106,29 @@ class EngineBase:
         raise MutabilityError(
             f"engine {self.name!r} is immutable (caps.mutable=False); "
             "rebuild the index, or plan with mutable=True / engine='dynamic'"
+        )
+
+    def snapshot_state(self, state) -> Tuple[Dict[str, np.ndarray], dict]:
+        """Serialize the built state: (flat {path: ndarray} map, JSON-able
+        meta dict) — what ``KNNIndex.save`` hands to ``repro.persist``.
+
+        Engines whose state has no host-side serialization (the
+        mesh-programmed ``forest``/``ring``/``sharded`` states) inherit
+        this default and raise the typed ``PersistUnsupported``; see
+        docs/OPERATIONS.md for the engine support matrix."""
+        raise PersistUnsupported(
+            f"engine {self.name!r} has no snapshot representation; "
+            "rebuild from source points on restart (docs/OPERATIONS.md)"
+        )
+
+    def restore_state(self, arrays: Dict[str, np.ndarray], meta: dict,
+                      spec, plan):
+        """Reconstruct engine state from ``snapshot_state`` output on the
+        CURRENT topology (``spec.devices``/``plan``), without re-running
+        any build-phase work that was persisted (top-tree splits etc.)."""
+        raise PersistUnsupported(
+            f"engine {self.name!r} has no snapshot representation; "
+            "rebuild from source points on restart (docs/OPERATIONS.md)"
         )
 
     def resident_bytes(self, plan, state=None) -> int:

@@ -87,6 +87,12 @@ class BruteEngine(EngineBase):
         )
         return d, i, stats
 
+    def snapshot_state(self, state):
+        return {"points": np.asarray(state)}, {}
+
+    def restore_state(self, arrays, meta, spec, plan):
+        return np.ascontiguousarray(arrays["points"], np.float32)
+
     def resident_bytes(self, plan, state=None) -> int:
         # the padded reference set (knn_brute's tile_x granularity), not a
         # leaf structure — no tree is ever built
@@ -113,6 +119,22 @@ class HostKDTreeEngine(EngineBase):
         d, i = knn_host_kdtree(queries, state, k)
         stats = SearchStats(queries_advanced=queries.shape[0])
         return d, i, stats
+
+    def snapshot_state(self, state):
+        from repro.core.toptree import tree_to_arrays
+
+        arrays = dict(tree_to_arrays(state, include_derived=True))
+        return arrays, {"height": state.height, "leaf_pad": state.leaf_pad}
+
+    def restore_state(self, arrays, meta, spec, plan):
+        from repro.core.toptree import tree_from_arrays
+
+        return tree_from_arrays(
+            np.ascontiguousarray(arrays["points"], np.float32),
+            arrays,
+            height=int(meta["height"]),
+            leaf_pad=int(meta["leaf_pad"]),
+        )
 
     def resident_bytes(self, plan, state=None) -> int:
         return 0  # pure host numpy: nothing lives on a device
@@ -141,6 +163,37 @@ class _BufferTreeEngine(EngineBase):
     def query(self, state: BufferKDTree, queries, k):
         d, i = state.query(queries, k=k)
         return d, i, state.stats  # per-call immutable snapshot
+
+    def snapshot_state(self, state: BufferKDTree):
+        from repro.core.toptree import tree_to_arrays
+
+        tree = state.tree
+        arrays = dict(tree_to_arrays(tree, include_derived=True))
+        return arrays, {"height": tree.height, "leaf_pad": tree.leaf_pad}
+
+    def restore_state(self, arrays, meta, spec, plan):
+        from repro.core.toptree import tree_from_arrays
+
+        tree = tree_from_arrays(
+            np.ascontiguousarray(arrays["points"], np.float32),
+            arrays,
+            height=int(meta["height"]),
+            leaf_pad=int(meta["leaf_pad"]),
+        )
+        # tree= skips the O(h*n) median build; only the chunk slabs and
+        # the jitted scans are (re)materialized, lazily
+        return BufferKDTree(
+            tree.points,
+            tree=tree,
+            n_chunks=plan.n_chunks,
+            buffer_size=plan.buffer_size,
+            fetch_m=plan.fetch_m,
+            tile_q=plan.tile_q,
+            backend=plan.backend,
+            engine=self._tier,
+            starvation_deadline=plan.starvation_deadline,
+            device=spec.devices[0] if spec.devices else None,
+        )
 
     def resident_bytes(self, plan, state=None) -> int:
         if state is not None:
@@ -231,6 +284,43 @@ class JitEngine(EngineBase):
             iterations=int(rounds), queries_advanced=int(rounds) * m
         )
         return dists, idx, stats
+
+    def snapshot_state(self, state: _JitState):
+        arrays = {
+            f"tree/{name}": np.asarray(value)
+            for name, value in state.tree._asdict().items()
+        }
+        meta = {
+            "first_leaf_heap": state.first_leaf_heap,
+            "d": state.d,
+            "tq": state.tq,
+            "backend": state.backend,
+        }
+        return arrays, meta
+
+    def restore_state(self, arrays, meta, spec, plan):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.jitsearch import TreeArrays
+
+        tree = TreeArrays(
+            **{
+                name: jnp.asarray(arrays[f"tree/{name}"])
+                for name in TreeArrays._fields
+            }
+        )
+        if spec.devices:
+            tree = jax.tree.map(
+                lambda a: jax.device_put(a, spec.devices[0]), tree
+            )
+        return _JitState(
+            tree=tree,
+            first_leaf_heap=int(meta["first_leaf_heap"]),
+            d=int(meta["d"]),
+            tq=int(meta["tq"]),
+            backend=str(meta["backend"]),
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -483,6 +573,20 @@ class DynamicEngine(EngineBase):
 
     def delete(self, state, ids):
         return state.delete(ids)
+
+    def snapshot_state(self, state):
+        return state.snapshot()
+
+    def restore_state(self, arrays, meta, spec, plan):
+        from repro.core.dynamic import DynamicIndex
+
+        idx = DynamicIndex.restore(
+            arrays, meta,
+            devices=list(spec.devices) if spec.devices else None,
+        )
+        if spec.m_hint:
+            idx.warm(spec.m_hint, spec.k_hint)
+        return idx
 
     def resident_bytes(self, plan, state=None) -> int:
         if state is not None:

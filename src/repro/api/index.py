@@ -16,16 +16,28 @@ can evolve — or be added — without another call-site migration.
 
 from __future__ import annotations
 
+import os
 import threading
-from typing import Optional
+import time
+from typing import Dict, Optional
 
 import numpy as np
 
 from repro.api.engine import EngineBase, MutabilityError, get_engine
 from repro.api.planner import Plan, plan as make_plan
 from repro.api.spec import IndexSpec, QueryResult, SearchStats
+from repro.persist import PersistError, VersionStore, WriteAheadLog
 
 __all__ = ["KNNIndex"]
+
+# IndexSpec fields recorded in a snapshot manifest (JSON-able, topology-
+# free): device handles and measured calibrations belong to the HOST that
+# saved, not the snapshot; persist_dir is where the snapshot LIVES.
+_SPEC_MANIFEST_FIELDS = (
+    "engine", "height", "n_chunks", "n_shards", "buffer_size", "tile_q",
+    "backend", "k_hint", "m_hint", "memory_budget", "mutable",
+    "merge_async", "snapshot_keep", "wal_fsync",
+)
 
 
 class KNNIndex:
@@ -42,6 +54,13 @@ class KNNIndex:
         self.n = n
         self.d = d
         self._last_stats: Optional[SearchStats] = None
+        # crash-safe lifecycle (spec.persist_dir / KNNIndex.load): the
+        # snapshot store, the mutation WAL and the acknowledged-mutation
+        # counter.  All None/0 for a plain in-memory index.
+        self._store: Optional[VersionStore] = None
+        self._wal: Optional[WriteAheadLog] = None
+        self._mutation_seq: int = 0
+        self._extra_arrays: Dict[str, np.ndarray] = {}
         # engines declaring stateful_query mutate queues/buffers/chunk
         # slots during a query: one batch at a time per index.  Stateless
         # engines (brute/jit/forest/ring/kdtree) run lock-free so
@@ -99,7 +118,172 @@ class KNNIndex:
         )
         engine = get_engine(pl.engine)
         state = engine.build(points, spec, pl)
-        return cls(spec=spec, plan=pl, engine=engine, state=state, n=n, d=d)
+        idx = cls(spec=spec, plan=pl, engine=engine, state=state, n=n, d=d)
+        if spec.persist_dir:
+            idx._init_persistence()
+        return idx
+
+    # -- crash-safe lifecycle ------------------------------------------
+    def _init_persistence(self) -> None:
+        """Root a fresh persist dir: baseline snapshot + empty WAL.
+
+        Refuses a directory that already holds versions — silently
+        re-baselining over an existing lifecycle would orphan its WAL
+        tail; resume one with ``KNNIndex.load`` instead."""
+        root = self.spec.persist_dir
+        store = VersionStore(os.path.join(root, "versions"))
+        if store.versions():
+            raise PersistError(
+                f"persist_dir {root!r} already holds snapshot versions; "
+                "resume it with KNNIndex.load(...) or point build at a "
+                "fresh directory"
+            )
+        self._store = store
+        self._wal = WriteAheadLog(
+            os.path.join(root, "wal"), fsync=self.spec.wal_fsync
+        )
+        self.plan = self.plan.replace(reasons=self.plan.reasons + (
+            f"persistence: versioned snapshots + mutation WAL at {root}",
+        ))
+        self.save()
+
+    def save(self, path: Optional[str] = None, *,
+             extra_arrays: Optional[Dict[str, np.ndarray]] = None) -> int:
+        """Write one complete snapshot version; returns its number.
+
+        With ``path=None`` the version lands in the index's live persist
+        dir (``spec.persist_dir``; error if persistence is off), the WAL
+        rotates to a fresh segment, and segments no retained snapshot
+        needs are dropped.  An explicit ``path`` writes a one-off export
+        (no WAL bookkeeping).  ``extra_arrays`` ride along under
+        ``extra/`` — e.g. the kNN-LM value store — and come back via
+        ``load``.  Crash-atomic: a version is either complete (manifest
+        present) or invisible to ``load``.
+        """
+        if path is None:
+            if self._store is None:
+                raise PersistError(
+                    "index has no live persist dir: build with "
+                    "IndexSpec(persist_dir=...) or pass save(path=...)"
+                )
+            store = self._store
+        else:
+            store = VersionStore(os.path.join(path, "versions"))
+        arrays, meta = self._serialized(
+            self._engine.snapshot_state, self._state
+        )
+        arrays = dict(arrays)
+        for key, value in (extra_arrays or self._extra_arrays).items():
+            arrays[f"extra/{key}"] = np.asarray(value)
+        pl = self.plan
+        manifest = {
+            "engine": pl.engine,
+            "n": int(self.n),
+            "d": int(self.d),
+            "mutation_seq": int(self._mutation_seq),
+            "spec": {
+                f: getattr(self.spec, f) for f in _SPEC_MANIFEST_FIELDS
+            },
+            # pin the built geometry so load re-plans to the SAME layout
+            # the persisted state was shaped for
+            "plan": {
+                "height": pl.height, "n_chunks": pl.n_chunks,
+                "n_shards": pl.n_shards, "buffer_size": pl.buffer_size,
+            },
+            "meta": meta,
+            "created": time.time(),
+        }
+        version = store.commit(
+            arrays, manifest, keep=max(1, self.spec.snapshot_keep)
+        )
+        if store is self._store and self._wal is not None:
+            self._wal.rotate(self._mutation_seq)
+            kept = store.versions()
+            self._wal.gc(min(
+                int(store.read_manifest(v)["mutation_seq"]) for v in kept
+            ))
+        return version
+
+    @classmethod
+    def load(cls, path: str, *, devices=None) -> "KNNIndex":
+        """Restore an index from a persist dir: latest complete snapshot
+        + replay of the WAL tail (every mutation acknowledged after that
+        snapshot).  The loaded index continues the same lifecycle — later
+        mutations append to the same WAL, later ``save()`` calls add
+        versions — so crash/restore cycles compose.
+
+        ``devices`` re-targets the restored state at the CURRENT topology
+        (default: ``jax.devices()``); the snapshot itself is host-side
+        and topology-free.
+        """
+        import jax
+
+        store = VersionStore(os.path.join(path, "versions"))
+        # copy-on-write mmap: restore cost is page-table setup, not a
+        # bulk read — slabs page in lazily (free on a warm page cache)
+        arrays, manifest, version = store.read(mmap=True)
+        devs = tuple(devices) if devices else tuple(jax.devices())
+        pins = manifest["plan"]
+        spec = IndexSpec(**manifest["spec"]).replace(
+            engine=manifest["engine"],
+            devices=devs,
+            persist_dir=str(path),
+            height=pins["height"],
+            n_chunks=pins["n_chunks"],
+            n_shards=pins["n_shards"],
+            buffer_size=pins["buffer_size"],
+        )
+        n, d = int(manifest["n"]), int(manifest["d"])
+        pl = make_plan(
+            max(1, n), d,
+            m=spec.m_hint,
+            k=spec.k_hint,
+            devices=devs,
+            memory_budget=spec.memory_budget,
+            engine=spec.engine,
+            height=spec.height,
+            n_chunks=spec.n_chunks,
+            n_shards=spec.n_shards,
+            buffer_size=spec.buffer_size,
+            tile_q=spec.tile_q,
+            backend=spec.backend,
+            mutable=spec.mutable,
+            merge_async=spec.merge_async,
+        )
+        engine = get_engine(pl.engine)
+        state = engine.restore_state(
+            {k: v for k, v in arrays.items() if not k.startswith("extra/")},
+            manifest["meta"], spec, pl,
+        )
+        idx = cls(spec=spec, plan=pl, engine=engine, state=state, n=n, d=d)
+        idx._extra_arrays = {
+            k[len("extra/"):]: v
+            for k, v in arrays.items() if k.startswith("extra/")
+        }
+        seq = int(manifest["mutation_seq"])
+        wal = WriteAheadLog(os.path.join(path, "wal"), fsync=spec.wal_fsync)
+        replayed = 0
+        for rseq, op, arr in wal.replay(min_seq=seq):
+            if op == "insert":
+                idx._serialized(
+                    engine.insert, state,
+                    np.ascontiguousarray(arr, np.float32),
+                )
+            else:
+                idx._serialized(
+                    engine.delete, state, np.asarray(arr, np.int64)
+                )
+            seq = rseq + 1
+            replayed += 1
+        idx.n = int(getattr(state, "n_live", idx.n))
+        idx._store, idx._wal, idx._mutation_seq = store, wal, seq
+        idx.plan = pl.replace(reasons=pl.reasons + (
+            f"restored from {path} v{version} (format "
+            f"{manifest['format']}, snapshot seq "
+            f"{manifest['mutation_seq']}, replayed {replayed} WAL "
+            "record(s))",
+        ))
+        return idx
 
     # ------------------------------------------------------------------
     def query(self, queries: np.ndarray, k: Optional[int] = None) -> QueryResult:
@@ -120,6 +304,12 @@ class KNNIndex:
             self._engine.query, self._state, queries, k
         )
         self._last_stats = stats
+        if getattr(stats, "events", ()):
+            # degradation events (device loss re-placement) are plan-level
+            # facts: surface them where describe()/reasons readers look
+            self.plan = self.plan.replace(
+                reasons=self.plan.reasons + tuple(stats.events)
+            )
         return QueryResult(
             dists=dists, idx=idx, stats=stats, engine=self.plan.engine, k=k
         )
@@ -147,6 +337,12 @@ class KNNIndex:
             )
         ids = self._serialized(self._engine.insert, self._state, points)
         self.n = getattr(self._state, "n_live", self.n + points.shape[0])
+        # WAL ordering: append AFTER the engine applied (a rejected batch
+        # never pollutes the log), BEFORE the ack returns (an acknowledged
+        # mutation is always replayable)
+        if self._wal is not None:
+            self._wal.append("insert", points, self._mutation_seq)
+            self._mutation_seq += 1
         return ids
 
     def delete(self, ids) -> int:
@@ -163,6 +359,13 @@ class KNNIndex:
             )
         removed = self._serialized(self._engine.delete, self._state, ids)
         self.n = getattr(self._state, "n_live", self.n - removed)
+        if self._wal is not None:
+            self._wal.append(
+                "delete",
+                np.ascontiguousarray(np.asarray(ids, np.int64).ravel()),
+                self._mutation_seq,
+            )
+            self._mutation_seq += 1
         return removed
 
     # ------------------------------------------------------------------

@@ -56,6 +56,20 @@ class IndexSpec:
                                           # decides (background carry merges
                                           # off the query path); False pins
                                           # the inline carry chain
+    # -- crash-safe lifecycle (docs/OPERATIONS.md) ---------------------
+    persist_dir: Optional[str] = None     # enable versioned snapshots + a
+                                          # mutation WAL rooted here: build
+                                          # writes a baseline snapshot, every
+                                          # insert/delete appends to the WAL,
+                                          # KNNIndex.load replays the tail
+    snapshot_keep: int = 2                # complete snapshot versions kept
+                                          # by save()'s GC (WAL segments
+                                          # older than the oldest kept
+                                          # snapshot are dropped too)
+    wal_fsync: bool = True                # fsync each WAL record before the
+                                          # mutation is acknowledged; False
+                                          # trades the last few batches'
+                                          # crash-durability for latency
 
     def replace(self, **kw) -> "IndexSpec":
         return dataclasses.replace(self, **kw)

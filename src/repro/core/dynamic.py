@@ -108,20 +108,31 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import faults
 from repro.core.lazysearch import BufferKDTree, SearchStats
-from repro.core.toptree import PAD_COORD, _round_up, suggest_height
+from repro.core.toptree import (
+    PAD_COORD,
+    _round_up,
+    suggest_height,
+    tree_from_arrays,
+    tree_to_arrays,
+)
 from repro.distributed.dynamic_shards import (
     DeviceFanout,
+    MergeRetryExhausted,
     MergeWorker,
     ShardPlacer,
 )
 from repro.kernels.knn_scan import _rank_merge
+
+faults.load_env()
 
 __all__ = [
     "DynamicIndex",
     "DEFAULT_BASE_CAPACITY",
     "DEFAULT_TOMB_LIMIT",
     "DEFAULT_BRUTE_CUTOFF",
+    "MERGE_MAX_RETRIES",
     "merge_cache_size",
     "shard_scan_cache_size",
 ]
@@ -129,6 +140,14 @@ __all__ = [
 DEFAULT_BASE_CAPACITY = 1024   # B: smallest shard rung (paper footnote-8 scale)
 DEFAULT_TOMB_LIMIT = 32        # per-shard tombstones before compaction
 DEFAULT_BRUTE_CUTOFF = 2048    # rungs above this get a BufferKDTree engine
+
+# Bounded retry of failed background merges: a transient failure (OOM
+# blip, compile hiccup, a staging device that just died) is retried with
+# capped exponential backoff; a persistent one surfaces as
+# ``MergeRetryExhausted`` on ``drain()`` instead of a silent retry storm.
+MERGE_MAX_RETRIES = 4
+_MERGE_RETRY_BASE_S = 0.05
+_MERGE_RETRY_CAP_S = 1.0
 
 _MIN_BATCH_PAD = 16            # smallest padded query-batch rung
 _BRUTE_TILE_X = 2048           # reference tile for brute shards (cap-aligned)
@@ -295,6 +314,9 @@ class DynamicIndex:
         self.backend = backend
         self.merge_async = bool(merge_async)
         self._placer = ShardPlacer(devices)
+        # stable device ordinals for fault injection / event strings:
+        # placement drops lost devices, this list never mutates
+        self._all_devices = list(self._placer.devices)
         self._fanout = DeviceFanout()
         self._merger: Optional[MergeWorker] = None
         self._shards: List[_Shard] = []
@@ -308,8 +330,10 @@ class DynamicIndex:
         self._mu = threading.RLock()
         self._merge_stats = {
             "scheduled": 0, "completed": 0, "aborted": 0, "failed": 0,
-            "inline": 0,
+            "inline": 0, "retried": 0, "device_loss": 0,
         }
+        self._retry_streak = 0         # consecutive merge failures
+        self._events: List[str] = []   # operational events -> SearchStats
         self._merge_test_hook = None   # tests: callable(phase, a, b)
 
     # ------------------------------------------------------------------
@@ -350,8 +374,13 @@ class DynamicIndex:
             return dict(self._merge_stats)
 
     def drain_merges(self, timeout: Optional[float] = None) -> None:
-        """Block until every background merge (and its carry chain) has
-        landed; re-raises any background failure.  No-op when inline."""
+        """Block until every background merge (and its carry chain,
+        including backoff retries) has landed.  No-op when inline.
+
+        Raises ``MergeRetryExhausted`` (with ``.rung``) when a merge kept
+        failing through its bounded retries, and ``DrainTimeout`` (with
+        the stuck ``.rungs``) when ``timeout`` expires first — a wedged
+        worker can bound shutdown, never hang it."""
         if self._merger is not None:
             self._merger.drain(timeout)
 
@@ -376,6 +405,57 @@ class DynamicIndex:
                 (s.capacity, s.kind, s.device) for s in self._sorted_shards()
             ]
 
+    def _device_ordinal(self, device: Any) -> int:
+        for i, d in enumerate(self._all_devices):
+            if d is device:
+                return i
+        return -1
+
+    def handle_device_loss(self, device: Any) -> str:
+        """Degrade gracefully after ``device`` stops answering: drop it
+        from placement and rebuild its shards onto the survivors from the
+        host slabs (shards are immutable host-resident arrays plus a
+        persisted top tree, so migration is a device transfer, never a
+        median-split rebuild).  Returns the event string, which is also
+        queued for the next ``SearchStats.events`` (and from there lands
+        in ``Plan.reasons`` via the api facade).  Raises when the lost
+        device is the LAST one — there is nothing left to degrade to.
+
+        The migrated shards warm lazily: their first scan on the new
+        device pays that device's compile, the price of degraded mode.
+        In-flight merges targeting the dead device fail and re-route via
+        the bounded-backoff retry (the placer no longer offers it).
+        """
+        with self._mu:
+            if not any(d is device for d in self._placer.devices):
+                return ""   # concurrent loss already handled
+            self._placer.drop_device(device)   # raises on the last device
+            moved = 0
+            for s in self._shards:
+                if s.device is device:
+                    new_dev = self._placer.place(s.capacity, s.kind)
+                    s.device = new_dev
+                    s._dev_slab = None
+                    if s.engine is not None:
+                        s.engine = BufferKDTree(
+                            s.points,
+                            tree=s.engine.tree,
+                            n_chunks=1,
+                            tile_q=self.tile_q,
+                            backend=self.backend,
+                            device=new_dev,
+                        )
+                    moved += 1
+            self._merge_stats["device_loss"] += 1
+            event = (
+                f"device loss: device {self._device_ordinal(device)} "
+                f"({device}) dropped; re-placed {moved} shard(s) across "
+                f"{self._placer.n_devices} surviving device(s); queries "
+                f"degrade to survivors, exactness preserved"
+            )
+            self._events.append(event)
+        return event
+
     def live_ids(self) -> np.ndarray:
         """Sorted i64 ids of the live multiset (test oracle support)."""
         with self._mu:
@@ -398,6 +478,147 @@ class DynamicIndex:
                 key = id(s.device)
                 per_dev[key] = per_dev.get(key, 0) + b
         return max(per_dev.values(), default=0)
+
+    # ------------------------------------------------------------------
+    # persistence: array-map snapshot of the live forest + lossless restore
+    # (serialized by repro.persist; see docs/OPERATIONS.md for the format)
+    # ------------------------------------------------------------------
+    def snapshot(self) -> Tuple[Dict[str, np.ndarray], dict]:
+        """Consistent array-map snapshot of the forest: per-shard slabs,
+        ids, live bits, and (for tree shards) the top-tree arrays — plus a
+        JSON-able meta dict (ctor params, id counter, warm-shape set).
+
+        Taken under the mutation lock, so it is consistent at a mutation
+        boundary even with background merges in flight: a pending merge's
+        SOURCES are captured (same live multiset as the merged result),
+        and ``restore`` re-schedules the collision.  No drain required.
+        """
+        with self._mu:
+            shards = self._sorted_shards()
+            arrays: Dict[str, np.ndarray] = {}
+            shard_meta: List[dict] = []
+            for i, s in enumerate(shards):
+                arrays[f"shard{i}/points"] = s.points.copy()
+                arrays[f"shard{i}/ids"] = s.ids.copy()
+                arrays[f"shard{i}/live"] = s.live.copy()
+                sm = dict(
+                    rung=s.rung, capacity=s.capacity, n_rows=s.n_rows,
+                    n_tomb=s.n_tomb, kind=s.kind,
+                )
+                if s.engine is not None:
+                    # include_derived: the leaf-ordered slab + padded slab
+                    # are immutable after build (tombstones only flip
+                    # ``live``), so no copy is needed, and persisting them
+                    # keeps restore free of the [n] gather and the padded
+                    # fill — pure mmap-able I/O (space-for-time; see
+                    # docs/OPERATIONS.md)
+                    t = s.engine.tree
+                    for key, arr in tree_to_arrays(
+                        t, include_derived=True
+                    ).items():
+                        arrays[f"shard{i}/tree/{key}"] = arr
+                    sm["tree"] = dict(height=t.height, leaf_pad=t.leaf_pad)
+                shard_meta.append(sm)
+            meta = dict(
+                d=self.d,
+                base_capacity=self.base_capacity,
+                tomb_limit=self.tomb_limit,
+                brute_cutoff=self.brute_cutoff,
+                rebuild_crossover=self.rebuild_crossover,
+                tile_q=self.tile_q,
+                backend=self.backend,
+                merge_async=self.merge_async,
+                next_id=int(self._next_id),
+                n_live=int(self._n_live),
+                warm_shapes=sorted(list(t) for t in self._warm_shapes),
+                shards=shard_meta,
+            )
+        return arrays, meta
+
+    @classmethod
+    def restore(
+        cls,
+        arrays: Dict[str, np.ndarray],
+        meta: dict,
+        *,
+        devices: Optional[Sequence[Any]] = None,
+    ) -> "DynamicIndex":
+        """Rebuild a forest from ``snapshot()`` output WITHOUT re-running
+        any O(h*n) median-split build: tree shards reconstruct their
+        ``TopTree`` from the persisted split arrays (``tree_from_arrays``)
+        and hand it to ``BufferKDTree`` prebuilt — the warm-restart path.
+
+        ``devices`` is the CURRENT device list (snapshots are placement-
+        free: shards are re-placed biggest-first on whatever is visible
+        now, so a snapshot from a 4-device host restores on 1 and vice
+        versa).  The warm-shape set is restored for FUTURE shards; the
+        restored shards themselves compile lazily on first touch (both
+        boot paths pay the same compiles, so this keeps restore I/O-bound
+        — call ``warm`` after restore to front-load them).
+        """
+        idx = cls(
+            int(meta["d"]),
+            base_capacity=int(meta["base_capacity"]),
+            tomb_limit=int(meta["tomb_limit"]),
+            brute_cutoff=int(meta["brute_cutoff"]),
+            rebuild_crossover=meta.get("rebuild_crossover"),
+            tile_q=int(meta["tile_q"]),
+            backend=meta["backend"],
+            devices=devices,
+            merge_async=bool(meta["merge_async"]),
+        )
+        idx._warm_shapes = {tuple(t) for t in meta.get("warm_shapes", [])}
+        # biggest-first placement, like any bin-packing heuristic
+        order = sorted(
+            range(len(meta["shards"])),
+            key=lambda i: -int(meta["shards"][i]["capacity"]),
+        )
+        with idx._mu:
+            for i in order:
+                sm = meta["shards"][i]
+                pts = np.ascontiguousarray(
+                    arrays[f"shard{i}/points"], np.float32
+                )
+                ids = np.ascontiguousarray(arrays[f"shard{i}/ids"], np.int64)
+                live = np.ascontiguousarray(arrays[f"shard{i}/live"], bool)
+                cap = int(sm["capacity"])
+                device = idx._placer.place(cap, sm["kind"])
+                engine = None
+                if sm["kind"] == "tree":
+                    tm = sm["tree"]
+                    prefix = f"shard{i}/tree/"
+                    t_arr = {
+                        key[len(prefix):]: arr
+                        for key, arr in arrays.items()
+                        if key.startswith(prefix)
+                    }
+                    # snapshots with derived slabs restore without the
+                    # [n] gather; older ones fall back to it
+                    reordered = t_arr.get("points")
+                    if reordered is None:
+                        reordered = pts[t_arr["orig_idx"]]
+                    tree = tree_from_arrays(
+                        reordered,
+                        t_arr,
+                        height=int(tm["height"]),
+                        leaf_pad=int(tm["leaf_pad"]),
+                    )
+                    engine = BufferKDTree(
+                        pts, tree=tree, n_chunks=1, tile_q=idx.tile_q,
+                        backend=idx.backend, device=device,
+                    )
+                idx._shards.append(_Shard(
+                    rung=int(sm["rung"]), capacity=cap, points=pts,
+                    ids=ids, live=live, n_rows=int(sm["n_rows"]),
+                    n_tomb=int(sm["n_tomb"]), engine=engine, device=device,
+                    seq=next(idx._seq), tomb_limit=idx.tomb_limit,
+                ))
+            idx._next_id = int(meta["next_id"])
+            idx._n_live = int(meta["n_live"])
+            # a snapshot taken mid-merge holds the pre-swap sources: the
+            # rung collision is still pending — resolve it now
+            idx._schedule_carries()
+        return idx
 
     # ------------------------------------------------------------------
     def _fit_rung(self, count: int) -> int:
@@ -510,7 +731,7 @@ class DynamicIndex:
                 ]
                 self._merge_stats["scheduled"] += 1
                 self._merger.submit(
-                    functools.partial(self._merge_task, snaps)
+                    functools.partial(self._merge_task, snaps), meta=a.rung
                 )
 
     def _merge_task(self, snaps) -> None:
@@ -525,10 +746,13 @@ class DynamicIndex:
         FAILURE CONTRACT: an exception anywhere (the realistic case is
         ``_make_shard`` failing to build/compile a staging shard) must not
         wedge the rung — the except path un-reserves the surviving
-        sources, returns any un-swapped staging placement, and re-raises
-        so ``MergeWorker`` surfaces the error on the next ``drain()``.
-        The sources are untouched until the single atomic swap, so no
-        data is ever lost to a failed merge."""
+        sources and returns any un-swapped staging placement.  The merge
+        is then RETRIED with capped exponential backoff (fresh snapshots
+        each attempt, so a retry also re-routes around a dropped device);
+        after ``MERGE_MAX_RETRIES`` consecutive failures the typed
+        ``MergeRetryExhausted`` surfaces on the next ``drain()`` instead
+        of a silent retry storm.  The sources are untouched until the
+        single atomic swap, so no data is ever lost to a failed merge."""
         staged: List[_Shard] = []   # placed but not yet swapped/released
         hook = self._merge_test_hook
 
@@ -542,10 +766,12 @@ class DynamicIndex:
             while True:
                 if hook is not None:
                     hook("build", snaps)
+                faults.fire("merge.build", rung=snaps[0][0].rung)
                 merged = self._make_shard(pts, ids)   # lock-free build
                 staged.append(merged)
                 if hook is not None:
                     hook("swap", snaps)
+                faults.fire("merge.swap", rung=snaps[0][0].rung)
                 with self._mu:
                     sources = [s for s, _, _ in snaps]
                     if not all(
@@ -579,6 +805,7 @@ class DynamicIndex:
                             self._shards.append(merged)
                             staged.remove(merged)
                         self._merge_stats["completed"] += 1
+                        self._retry_streak = 0
                         self._schedule_carries()
                         return
                     # over-tombstoned (deletes landed mid-merge): compact
@@ -587,11 +814,10 @@ class DynamicIndex:
                     pts = merged.points[merged.live]
                     ids = merged.ids[merged.live]
                     _discard(merged)
-        except BaseException:
-            # deliberately NO reschedule here: a persistently failing
-            # merge must not retry in a tight worker loop — the next
-            # insert/delete/swap calls _schedule_carries and retries once
-            # per mutation, and queries stay exact off the sources
+        except BaseException as err:
+            # clean up first (un-reserve sources, return staging
+            # placement), then decide: bounded backoff retry, or surface.
+            # Queries stay exact off the untouched sources either way.
             with self._mu:
                 for s, _, _ in snaps:
                     if any(s is t for t in self._shards):
@@ -600,7 +826,37 @@ class DynamicIndex:
                     if not any(sh is t for t in self._shards):
                         self._placer.release(sh.capacity, sh.device)
                 self._merge_stats["failed"] += 1
-            raise
+                self._retry_streak += 1
+                streak = self._retry_streak
+            rung = snaps[0][0].rung
+            if isinstance(err, Exception) and streak <= MERGE_MAX_RETRIES:
+                # NOT a tight worker loop: the retry re-enters via
+                # _schedule_carries after a capped exponential delay,
+                # taking FRESH snapshots (sources may have gained deltas,
+                # a dead staging device is no longer in the placer).  The
+                # timer raises the worker's pending count immediately, so
+                # drain() waits through the backoff window.
+                delay = min(
+                    _MERGE_RETRY_BASE_S * (2 ** (streak - 1)),
+                    _MERGE_RETRY_CAP_S,
+                )
+                with self._mu:
+                    self._merge_stats["retried"] += 1
+                self._merger.submit_after(delay, self._retry_carries, meta=rung)
+                return
+            raise MergeRetryExhausted(
+                f"carry merge at rung {rung} failed {streak} consecutive "
+                f"time(s); bounded backoff exhausted "
+                f"(MERGE_MAX_RETRIES={MERGE_MAX_RETRIES})",
+                rung=rung,
+            ) from err
+
+    def _retry_carries(self) -> None:
+        """Backoff retry body: the cleaned-up collision is still visible
+        to ``_collisions()``, so re-running the scheduler re-snapshots the
+        sources and resubmits the merge."""
+        with self._mu:
+            self._schedule_carries()
 
     # ------------------------------------------------------------------
     def insert(self, points: np.ndarray) -> np.ndarray:
@@ -806,30 +1062,48 @@ class DynamicIndex:
         qp[:m] = q
         w = k + self.tomb_limit
 
-        with self._mu:
-            shards = self._sorted_shards()
+        # Fan-out with device-loss degradation: a DeviceLost from any
+        # group re-places that device's shards onto the survivors (from
+        # the host slabs — shards are immutable host arrays, nothing is
+        # lost) and the fan-out restarts over the new placement.  Bounded
+        # by the device count: each loss removes a device for good, and
+        # losing the last one raises.
+        for _attempt in range(len(self._placer.devices) + 1):
+            with self._mu:
+                shards = self._sorted_shards()
+            results: List = [None] * len(shards)
+            by_dev: Dict[Any, List[int]] = {}
+            for slot, s in enumerate(shards):
+                by_dev.setdefault(s.device, []).append(slot)
+            boards: List[dict] = []
 
-        results: List = [None] * len(shards)
-        by_dev: Dict[Any, List[int]] = {}
-        for slot, s in enumerate(shards):
-            by_dev.setdefault(s.device, []).append(slot)
-        boards: List[dict] = []
-
-        def group_thunk(device, slots):
-            def run():
-                sb = dict(points_scanned=0, units_scanned=0, flushes=0,
-                          iterations=0)
-                qp_dev = self._put_queries(qp, device)
-                for slot in slots:
-                    results[slot] = self._shard_candidates(
-                        shards[slot], qp, qp_dev, k, w, sb
+            def group_thunk(device, slots, shards=shards, results=results,
+                            boards=boards):
+                def run():
+                    faults.fire(
+                        "device.scan", device=device,
+                        device_index=self._device_ordinal(device),
                     )
-                boards.append(sb)
-            return run
+                    sb = dict(points_scanned=0, units_scanned=0, flushes=0,
+                              iterations=0)
+                    qp_dev = self._put_queries(qp, device)
+                    for slot in slots:
+                        results[slot] = self._shard_candidates(
+                            shards[slot], qp, qp_dev, k, w, sb
+                        )
+                    boards.append(sb)
+                return run
 
-        self._fanout.run(
-            {dev: group_thunk(dev, slots) for dev, slots in by_dev.items()}
-        )
+            try:
+                self._fanout.run(
+                    {dev: group_thunk(dev, slots)
+                     for dev, slots in by_dev.items()}
+                )
+                break
+            except faults.DeviceLost as e:
+                self.handle_device_loss(e.device)
+        else:  # pragma: no cover - handle_device_loss raises first
+            raise RuntimeError("query fan-out kept losing devices")
 
         acc_d = acc_c = None
         gid_lists: List[np.ndarray] = []
@@ -851,12 +1125,16 @@ class DynamicIndex:
         # k <= n_live guarantees k finite candidates per row; belt+braces
         # for the impossible tail (keeps the -1 contract if it ever trips)
         out_i[~np.isfinite(out_d)] = -1
+        with self._mu:
+            events = tuple(self._events)
+            self._events.clear()
         self._last_stats = SearchStats(
             iterations=max((sb["iterations"] for sb in boards), default=0),
             flushes=sum(sb["flushes"] for sb in boards),
             units_scanned=sum(sb["units_scanned"] for sb in boards),
             points_scanned=sum(sb["points_scanned"] for sb in boards),
             queries_advanced=m,
+            events=events,
         )
         return out_d, out_i, self._last_stats
 

@@ -86,6 +86,10 @@ class SearchStats:
     tail_s: float = 0.0      # wall seconds in tail (compacted) rounds
     sync_wait_s: float = 0.0  # wall seconds blocked on schedule readbacks
                               # and compaction barriers
+    # operational events absorbed during the call (e.g. a device loss the
+    # dynamic engine degraded around); also appended to Plan.reasons by
+    # the api facade so post-hoc `describe()` shows them
+    events: Tuple[str, ...] = ()
 
 
 class _StatsBuilder:

@@ -25,7 +25,14 @@ from typing import Optional
 
 import numpy as np
 
-__all__ = ["TopTree", "build_top_tree", "default_buffer_size", "suggest_height"]
+__all__ = [
+    "TopTree",
+    "build_top_tree",
+    "default_buffer_size",
+    "suggest_height",
+    "tree_to_arrays",
+    "tree_from_arrays",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -181,6 +188,78 @@ def build_top_tree(
         leaf_end=leaf_end,
         points=reordered,
         orig_idx=orig_idx,
+        points_padded=padded,
+        leaf_pad=leaf_pad,
+    )
+
+
+def tree_to_arrays(tree: TopTree, *, include_derived: bool = False) -> dict:
+    """Flat array map for persistence (see ``repro.persist``).
+
+    With ``include_derived`` the leaf-ordered point slab and the padded
+    slab ride along too.  They are derived data (recomputable from the
+    split arrays + points), so storing them trades ~2x snapshot bytes
+    for a restore that is pure I/O — no ``[n]`` gather, no padded-slab
+    fill.  ``tree_from_arrays`` uses them when present and falls back to
+    the rebuild otherwise, so both snapshot flavors stay readable.
+    """
+    out = {
+        "split_dim": tree.split_dim,
+        "split_val": tree.split_val,
+        "leaf_start": tree.leaf_start,
+        "leaf_end": tree.leaf_end,
+        "orig_idx": tree.orig_idx,
+    }
+    if include_derived:
+        out["points"] = tree.points
+        out["points_padded"] = tree.points_padded
+    return out
+
+
+def tree_from_arrays(
+    points_reordered: np.ndarray,
+    arrays: dict,
+    *,
+    height: int,
+    leaf_pad: int,
+    pad_value: float = PAD_COORD,
+) -> TopTree:
+    """Rebuild a ``TopTree`` from persisted arrays WITHOUT re-running the
+    O(h*n) median-split build — the core of the warm-restart speedup.
+
+    ``points_reordered`` is the leaf-ordered point slab (``tree.points``
+    at save time, or ``slab[orig_idx]`` when the caller persisted the
+    original-order slab instead).  When the snapshot carries a
+    ``points_padded`` slab (``tree_to_arrays(include_derived=True)``)
+    the per-leaf fill is skipped entirely and the persisted slab is
+    adopted as-is — with an mmap-backed array map this makes restore
+    allocation-free for the bulk data.
+    """
+    pts = np.ascontiguousarray(points_reordered, np.float32)
+    n, d = pts.shape
+    leaf_start = np.asarray(arrays["leaf_start"], np.int32)
+    leaf_end = np.asarray(arrays["leaf_end"], np.int32)
+    n_leaves = 1 << height
+    padded = arrays.get("points_padded")
+    if padded is not None and (
+        padded.shape != (n_leaves, leaf_pad, d) or padded.dtype != np.float32
+    ):
+        padded = None  # foreign/corrupt derived slab: rebuild from source
+    if padded is None:
+        padded = np.full((n_leaves, leaf_pad, d), np.float32(pad_value))
+        for leaf in range(n_leaves):
+            s, e = int(leaf_start[leaf]), int(leaf_end[leaf])
+            padded[leaf, : e - s] = pts[s:e]
+    return TopTree(
+        height=height,
+        n=n,
+        d=d,
+        split_dim=np.asarray(arrays["split_dim"], np.int32),
+        split_val=np.asarray(arrays["split_val"], np.float32),
+        leaf_start=leaf_start,
+        leaf_end=leaf_end,
+        points=pts,
+        orig_idx=np.asarray(arrays["orig_idx"], np.int32),
         points_padded=padded,
         leaf_pad=leaf_pad,
     )

@@ -45,8 +45,33 @@ __all__ = [
     "ShardPlacer",
     "MergeWorker",
     "DeviceFanout",
+    "MergeRetryExhausted",
+    "DrainTimeout",
     "preview_rung_placement",
 ]
+
+
+class MergeRetryExhausted(RuntimeError):
+    """A background carry merge kept failing through its bounded
+    exponential-backoff retries (``core.dynamic.MERGE_MAX_RETRIES``).
+    Raised by ``drain()``; ``rung`` identifies the wedged rung."""
+
+    def __init__(self, msg: str, rung: Optional[int] = None):
+        super().__init__(msg)
+        self.rung = rung
+
+
+class DrainTimeout(TimeoutError):
+    """``drain(timeout=...)`` expired with merges still in flight.
+
+    ``rungs`` lists the rungs of the stuck merges (``rung`` is the first,
+    for the common single-merge case); the worker keeps running — the
+    timeout bounds the WAIT, it does not cancel the merge."""
+
+    def __init__(self, msg: str, rungs: Tuple[int, ...] = ()):
+        super().__init__(msg)
+        self.rungs = tuple(rungs)
+        self.rung = self.rungs[0] if self.rungs else None
 
 
 def preview_rung_placement(
@@ -121,6 +146,26 @@ class ShardPlacer:
                     self._load[i] = max(0, self._load[i] - capacity)
                     return
 
+    def drop_device(self, device: Any) -> None:
+        """Remove a lost device from the placement pool (device-loss
+        degradation): later ``place`` calls only see the survivors.  The
+        caller re-places the dead device's shards (``release``/``place``),
+        so the dropped load entry is simply discarded.  Raises when asked
+        to drop the LAST device — with no survivors there is nothing to
+        degrade to."""
+        with self._mu:
+            for i, d in enumerate(self.devices):
+                if d is device:
+                    if len(self.devices) == 1:
+                        raise RuntimeError(
+                            "cannot drop the last device: no surviving "
+                            "device to re-place shards onto"
+                        )
+                    del self.devices[i]
+                    del self._load[i]
+                    return
+        raise KeyError(f"device {device!r} not in placement pool")
+
     def loads(self) -> List[int]:
         with self._mu:
             return list(self._load)
@@ -136,6 +181,7 @@ class MergeWorker:
         self._mu = threading.Lock()
         self._idle = threading.Condition(self._mu)
         self._pending = 0
+        self._metas: List[Any] = []     # one entry per outstanding task
         self._error: Optional[BaseException] = None
 
     @property
@@ -143,13 +189,7 @@ class MergeWorker:
         with self._mu:
             return self._pending
 
-    def submit(self, fn: Callable[[], None]) -> None:
-        """Queue one merge.  ``fn`` may itself submit follow-up merges
-        (the carry chain): it does so before this wrapper decrements the
-        pending count, so ``drain`` always waits for the whole chain."""
-        with self._mu:
-            self._pending += 1
-
+    def _runner(self, fn: Callable[[], None], meta: Any) -> Callable[[], None]:
         def run():
             try:
                 fn()
@@ -158,26 +198,64 @@ class MergeWorker:
                     self._error = e
             finally:
                 with self._mu:
+                    self._metas.remove(meta)
                     self._pending -= 1
                     if self._pending == 0:
                         self._idle.notify_all()
 
-        self._ex.submit(run)
+        return run
+
+    def submit(self, fn: Callable[[], None], meta: Any = None) -> None:
+        """Queue one merge.  ``fn`` may itself submit follow-up merges
+        (the carry chain): it does so before this wrapper decrements the
+        pending count, so ``drain`` always waits for the whole chain.
+        ``meta`` (typically the merge's rung) is reported by
+        ``DrainTimeout`` when the task is still outstanding."""
+        with self._mu:
+            self._pending += 1
+            self._metas.append(meta)
+        self._ex.submit(self._runner(fn, meta))
+
+    def submit_after(
+        self, delay: float, fn: Callable[[], None], meta: Any = None
+    ) -> None:
+        """Queue one merge after ``delay`` seconds (bounded-backoff
+        retries).  The pending count is raised IMMEDIATELY, so ``drain``
+        waits through the backoff window instead of racing the timer."""
+        with self._mu:
+            self._pending += 1
+            self._metas.append(meta)
+        t = threading.Timer(
+            delay, lambda: self._ex.submit(self._runner(fn, meta))
+        )
+        t.daemon = True
+        t.start()
 
     def drain(self, timeout: Optional[float] = None) -> None:
-        """Block until every queued merge (and its chain) has completed.
-        Re-raises the first background exception, so a broken merge can
-        never fail silently."""
+        """Block until every queued merge (and its chain, including any
+        backoff retries in flight) has completed.  Re-raises the first
+        background exception, so a broken merge can never fail silently:
+        ``MergeRetryExhausted`` surfaces as itself, anything else (a bug
+        in the worker plumbing — task failures are retried) is wrapped.
+        A ``timeout`` raises the typed ``DrainTimeout`` naming the stuck
+        rungs."""
         with self._idle:
             if not self._idle.wait_for(
                 lambda: self._pending == 0, timeout=timeout
             ):
-                raise TimeoutError(
+                rungs = tuple(
+                    sorted({m for m in self._metas if m is not None})
+                )
+                raise DrainTimeout(
                     f"{self._pending} background merge(s) still running "
                     f"after {timeout}s"
+                    + (f" (stuck rung(s): {list(rungs)})" if rungs else ""),
+                    rungs=rungs,
                 )
             if self._error is not None:
                 err, self._error = self._error, None
+                if isinstance(err, MergeRetryExhausted):
+                    raise err
                 raise RuntimeError("background carry merge failed") from err
 
 

@@ -1,0 +1,25 @@
+"""Crash-safe index persistence: versioned snapshots + mutation WAL.
+
+See docs/OPERATIONS.md for the on-disk format, replay semantics and the
+recovery guarantees; ``KNNIndex.save``/``KNNIndex.load`` are the
+front-door entry points.
+"""
+
+from repro import faults as _faults
+from repro.persist.format import (
+    FORMAT_VERSION,
+    PersistError,
+    PersistUnsupported,
+    VersionStore,
+)
+from repro.persist.wal import WriteAheadLog
+
+_faults.load_env()
+
+__all__ = [
+    "FORMAT_VERSION",
+    "PersistError",
+    "PersistUnsupported",
+    "VersionStore",
+    "WriteAheadLog",
+]

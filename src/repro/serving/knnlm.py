@@ -147,6 +147,50 @@ class KNNLM:
             self.index.drain(timeout)
 
     # ------------------------------------------------------------------
+    def save_datastore(self, path: Optional[str] = None) -> int:
+        """Snapshot the datastore (index + the value array, atomically in
+        ONE version) so a restart serves warm instead of re-embedding and
+        re-indexing the corpus.  ``path=None`` uses the index's live
+        persist dir (``IndexSpec(persist_dir=...)``); see
+        ``KNNIndex.save``.  Returns the snapshot version."""
+        if self.index is None or self.values is None:
+            raise RuntimeError("no datastore to save: call build_datastore")
+        self.drain_index()
+        return self.index.save(path, extra_arrays={"values": self.values})
+
+    def load_datastore(self, path: str, *, devices=None) -> None:
+        """Warm-restart the datastore from ``save_datastore`` output:
+        restores the index (snapshot + WAL-tail replay) and the value
+        array from the same version.  Keys inserted after the last
+        ``save_datastore`` are replayed by the WAL, but their VALUES were
+        only in memory — that mismatch is detected and raised rather than
+        served as silently-wrong tokens."""
+        self.index = KNNIndex.load(path, devices=devices)
+        values = self.index._extra_arrays.get("values")
+        if values is None:
+            raise RuntimeError(
+                f"{path!r} holds no kNN-LM value array: it was not written "
+                "by save_datastore"
+            )
+        self.values = np.asarray(values, np.int64)
+        # WAL replay can resurrect keys newer than the saved value array
+        # (extend_datastore between save and crash): ids would index past
+        # the end.  Refuse: re-extend from the corpus, or save after every
+        # extend (docs/OPERATIONS.md).
+        live = getattr(self.index._state, "live_ids", None)
+        if callable(live):
+            ids = live()                    # sorted i64
+            max_id = int(ids[-1]) if ids.size else -1
+        else:
+            max_id = self.index.n - 1       # immutable: ids are 0..n-1
+        if max_id >= self.values.shape[0]:
+            raise RuntimeError(
+                f"datastore values predate the index's WAL tail (max key "
+                f"id {max_id} >= {self.values.shape[0]} values): call "
+                "save_datastore after extend_datastore, or rebuild"
+            )
+
+    # ------------------------------------------------------------------
     def next_token_probs(self, tokens: np.ndarray) -> np.ndarray:
         """Interpolated next-token distribution for each sequence's last
         position.  tokens: i32[B, S] -> f32[B, vocab]."""

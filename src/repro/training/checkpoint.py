@@ -34,6 +34,9 @@ import jax
 import ml_dtypes
 import numpy as np
 
+from repro import faults
+from repro.persist.format import fsync_dir
+
 __all__ = ["CheckpointManager"]
 
 
@@ -99,12 +102,22 @@ class CheckpointManager:
             shutil.rmtree(tmp)
         os.makedirs(tmp)
         try:
-            np.savez(os.path.join(tmp, "arrays.npz"), **host_tree)
+            # arrays must be ON DISK before the manifest that vouches for
+            # them: without the fsync, os.replace can land while the npz
+            # bytes are still page-cache-only — a power cut then leaves a
+            # "complete" checkpoint with a torn arrays.npz that restore()
+            # happily picks (the torn-write regression test's scenario)
+            with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+                np.savez(f, **host_tree)
+                f.flush()
+                os.fsync(f.fileno())
+            faults.fire("checkpoint.write", step=step)
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump(manifest, f)
                 f.flush()
                 os.fsync(f.fileno())
             os.replace(tmp, final)  # atomic commit
+            fsync_dir(self.dir)     # make the rename itself durable
             self._gc()
         except BaseException as e:  # pragma: no cover
             self._error = e
@@ -118,6 +131,9 @@ class CheckpointManager:
         for s in steps:
             if s not in protected:
                 shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"), ignore_errors=True)
+        for name in os.listdir(self.dir):  # crashed-commit leftovers
+            if name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.dir, name), ignore_errors=True)
 
     # ------------------------------------------------------------------
     def save(self, step: int, state: Any, *, extra: Optional[dict] = None, block: bool = False):
@@ -146,7 +162,12 @@ class CheckpointManager:
             if block:
                 self.wait()
         else:
-            self._write(step, host, manifest)
+            try:
+                self._write(step, host, manifest)
+            finally:
+                # sync save: the exception (if any) propagates RIGHT HERE;
+                # leaving it in _error would re-raise it on the next wait()
+                self._error = None
 
     def wait(self):
         if self._thread is not None:

@@ -34,6 +34,34 @@ class TestCheckpoint:
         assert not any(n.endswith(".tmp") for n in names)
         assert ck.all_steps() == [10, 11, 12]  # keep 2 latest + every 10
 
+    def test_torn_write_never_yields_a_complete_checkpoint(self, tmp_path):
+        """Torn-write regression: a crash AFTER the arrays are written but
+        BEFORE the manifest lands (the ``checkpoint.write`` kill-point)
+        must leave no restorable step — the previous checkpoint stays the
+        latest, and the next successful save clears the debris.  Before
+        the ``_write`` hardening, arrays.npz was never fsynced, so the
+        manifest could vouch for bytes still in the page cache."""
+        from repro import faults
+
+        ck = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+        ck.save(1, {"x": jnp.float32(1.0)}, block=True)
+        faults.arm("checkpoint.write")
+        try:
+            with pytest.raises(faults.SimulatedCrash):
+                ck.save(2, {"x": jnp.float32(2.0)}, block=True)
+        finally:
+            faults.reset()
+        assert ck.all_steps() == [1]          # torn step invisible
+        assert ck.latest_step() == 1
+        got, man = ck.restore({"x": jnp.zeros(())})
+        assert man["step"] == 1 and float(got["x"]) == 1.0
+        assert any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+        # "restart" the writer: the next save clears the crashed debris
+        ck2 = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+        ck2.save(3, {"x": jnp.float32(3.0)}, block=True)
+        assert ck2.all_steps() == [1, 3]
+        assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
     def test_restore_missing_raises(self, tmp_path):
         ck = CheckpointManager(str(tmp_path))
         with pytest.raises(FileNotFoundError):

@@ -446,10 +446,11 @@ class TestBackgroundMerges:
         assert not np.isin(dels, idx.live_ids()).any()
         _check_parity(idx, model, rng.normal(size=(6, D)).astype(np.float32), 4)
 
-    def test_failed_merge_unreserves_sources_and_surfaces_error(self):
-        # a merge that dies (e.g. staging build failure) must not wedge
-        # the rung: sources are un-reserved, the error re-raises on
-        # drain, and the next mutation retries the merge successfully
+    def test_failed_merge_retries_in_background_and_recovers(self):
+        # a merge that dies once (e.g. transient staging build failure)
+        # must not wedge the rung OR surface to the caller: sources are
+        # un-reserved, the worker retries with bounded backoff, and
+        # drain() returns cleanly once the retry lands
         rng = np.random.default_rng(53)
         idx = DynamicIndex(D, **CFG, merge_async=True)
         boom = {"armed": True}
@@ -463,25 +464,56 @@ class TestBackgroundMerges:
         model = {}
         _apply_insert(idx, model, rng.normal(size=(20, D)).astype(np.float32))
         _apply_insert(idx, model, rng.normal(size=(12, D)).astype(np.float32))
-        with pytest.raises(RuntimeError, match="background carry merge"):
-            idx.drain_merges(timeout=30)
-        assert idx.merge_stats()["failed"] == 1
-        # rung not wedged: nothing is left reserved, queries stay exact
+        idx.drain_merges(timeout=60)   # waits THROUGH the backoff window
+        stats = idx.merge_stats()
+        assert stats["failed"] == 1
+        assert stats["retried"] >= 1
+        assert stats["completed"] >= 1
+        # rung not wedged: nothing is left reserved, layout is canonical
         assert not any(s.merging for s in idx._shards)
-        _check_parity(idx, model, rng.normal(size=(4, D)).astype(np.float32), 3)
-        # the next mutation reschedules; this time the merge succeeds
-        _apply_insert(idx, model, rng.normal(size=(2, D)).astype(np.float32))
-        idx.drain_merges(timeout=60)
-        assert idx.merge_stats()["completed"] >= 1
         caps = [cap for cap, *_ in idx.shard_layout()]
         assert len(caps) == len(set(caps))
         _check_parity(idx, model, rng.normal(size=(6, D)).astype(np.float32), 4)
 
+    def test_persistently_failing_merge_exhausts_retries(self):
+        # a merge that NEVER succeeds must not retry forever: after
+        # MERGE_MAX_RETRIES backoff rounds drain() raises the typed
+        # MergeRetryExhausted naming the wedged rung — and the forest
+        # still answers exactly (the live multiset never depended on the
+        # merge landing)
+        from repro.core.dynamic import MERGE_MAX_RETRIES
+        from repro.distributed.dynamic_shards import MergeRetryExhausted
+
+        rng = np.random.default_rng(54)
+        idx = DynamicIndex(D, **CFG, merge_async=True)
+
+        def hook(phase, snaps):
+            if phase == "build":
+                raise RuntimeError("injected persistent staging failure")
+
+        idx._merge_test_hook = hook
+        model = {}
+        _apply_insert(idx, model, rng.normal(size=(20, D)).astype(np.float32))
+        _apply_insert(idx, model, rng.normal(size=(12, D)).astype(np.float32))
+        with pytest.raises(MergeRetryExhausted) as ei:
+            idx.drain_merges(timeout=60)
+        assert ei.value.rung == 0
+        assert idx.merge_stats()["failed"] == MERGE_MAX_RETRIES + 1
+        assert not any(s.merging for s in idx._shards)
+        _check_parity(idx, model, rng.normal(size=(4, D)).astype(np.float32), 3)
+        # clearing the fault lets the next mutation heal the rung
+        idx._merge_test_hook = None
+        _apply_insert(idx, model, rng.normal(size=(2, D)).astype(np.float32))
+        idx.drain_merges(timeout=60)
+        assert idx.merge_stats()["completed"] >= 1
+        _check_parity(idx, model, rng.normal(size=(6, D)).astype(np.float32), 4)
+
     def test_failed_compaction_retry_loses_nothing(self):
         # mid-merge deletes push the staging shard over tomb_limit, and
-        # the compaction REBUILD then fails: the sources must be fully
-        # intact (the forest only mutates at the single atomic swap) —
-        # the counter, the live set and query parity all agree
+        # the compaction REBUILD then fails once: the sources must be
+        # fully intact (the forest only mutates at the single atomic
+        # swap), the background retry heals the rung, and the counter,
+        # the live set and query parity all agree throughout
         import threading
 
         rng = np.random.default_rng(59)
@@ -512,17 +544,14 @@ class TestBackgroundMerges:
         for g in dels:
             del model[int(g)]
         release.set()
-        with pytest.raises(RuntimeError, match="background carry merge"):
-            idx.drain_merges(timeout=30)
-        assert idx.merge_stats()["failed"] == 1
+        idx.drain_merges(timeout=60)   # the backoff retry heals the rung
+        stats = idx.merge_stats()
+        assert stats["failed"] == 1
+        assert stats["retried"] >= 1
+        assert stats["completed"] >= 1
         assert idx.n_live == len(model)
         assert idx.live_ids().size == len(model)
         assert not any(s.merging for s in idx._shards)
-        _check_parity(idx, model, rng.normal(size=(6, D)).astype(np.float32), 4)
-        # the next mutation retries; this time both builds succeed
-        _apply_insert(idx, model, rng.normal(size=(2, D)).astype(np.float32))
-        idx.drain_merges(timeout=60)
-        assert idx.merge_stats()["completed"] >= 1
         _check_parity(idx, model, rng.normal(size=(6, D)).astype(np.float32), 4)
 
     def test_flatten_rebuild_aborts_in_flight_merge(self):

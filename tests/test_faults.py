@@ -1,0 +1,402 @@
+"""Fault-injection registry + the failure drills it powers.
+
+Three layers:
+
+  * UNIT tests of ``repro.faults`` itself (arming, after-counts, sticky,
+    ctx matching, env parsing) — the registry must be trustworthy before
+    any chaos result built on it means anything;
+  * MERGE-FAILURE drills: the background carry merge's bounded-backoff
+    retry contract, driven through the registry's ``merge.build`` /
+    ``merge.swap`` points (the ``_merge_test_hook`` variants live in
+    ``test_dynamic.py``; here the production injection sites are used);
+  * DEVICE-LOSS drills: a subprocess acceptance test (tier-1, forces 4
+    virtual host devices) asserting queries DEGRADE — exact answers from
+    the survivors, a re-placement event in ``SearchStats.events`` and
+    ``Plan.reasons``, no raise — plus in-process variants behind the
+    ``multi_device`` skip (exercised by ``scripts/ci.sh``'s chaos gate).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro import faults
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _device_count() -> int:
+    import jax
+
+    return jax.device_count()
+
+
+multi_device = pytest.mark.skipif(
+    _device_count() < 4,
+    reason="needs >= 4 devices (ci.sh chaos gate forces 4 host devices)",
+)
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    faults.reset()
+    yield
+    faults.reset()
+
+
+# ---------------------------------------------------------------------------
+# registry units
+# ---------------------------------------------------------------------------
+class TestRegistry:
+    def test_disarmed_fire_is_a_noop(self):
+        for point in faults.INJECTION_POINTS:
+            faults.fire(point)  # must not raise
+
+    def test_unknown_point_refused_at_arm_time(self):
+        with pytest.raises(ValueError, match="unknown injection point"):
+            faults.arm("wal.tron")
+
+    def test_fires_on_nth_hit_then_disarms(self):
+        faults.arm("wal.append", after=3)
+        faults.fire("wal.append")
+        faults.fire("wal.append")
+        with pytest.raises(faults.SimulatedCrash):
+            faults.fire("wal.append")
+        faults.fire("wal.append")  # non-sticky: disarmed after firing
+
+    def test_sticky_keeps_firing(self):
+        faults.arm("merge.build", sticky=True)
+        for _ in range(3):
+            with pytest.raises(faults.FaultError):
+                faults.fire("merge.build")
+
+    def test_ctx_match_filters_hits(self):
+        faults.arm("device.scan", device_index=2)
+        faults.fire("device.scan", device_index=0)
+        faults.fire("device.scan", device_index=1)
+        faults.fire("device.scan")          # missing key: no match
+        with pytest.raises(faults.DeviceLost) as ei:
+            faults.fire("device.scan", device_index=2, device="cpu:2")
+        assert ei.value.device == "cpu:2"
+        assert ei.value.device_index == 2
+
+    def test_default_exception_types_by_prefix(self):
+        cases = {
+            "wal.torn": faults.SimulatedCrash,
+            "persist.commit": faults.SimulatedCrash,
+            "checkpoint.write": faults.SimulatedCrash,
+            "merge.swap": faults.FaultError,
+            "device.scan": faults.DeviceLost,
+        }
+        for point, exc_type in cases.items():
+            faults.arm(point)
+            with pytest.raises(exc_type):
+                faults.fire(point)
+
+    def test_explicit_exception_override(self):
+        boom = KeyError("custom")
+        faults.arm("merge.build", exc=boom)
+        with pytest.raises(KeyError):
+            faults.fire("merge.build")
+
+    def test_hit_counting_enumerates_boundaries(self):
+        faults.count_hits()
+        faults.fire("wal.append")
+        faults.fire("wal.append")
+        faults.fire("persist.commit")
+        assert faults.hits("wal.append") == 2
+        assert faults.hits("persist.commit") == 1
+        assert faults.hits("wal.torn") == 0
+
+    def test_env_spec_parsing(self):
+        # load_env is idempotent-by-flag; drive the parser via a subprocess
+        script = textwrap.dedent("""
+            import os
+            os.environ["REPRO_FAULTS"] = "wal.torn:2,device.scan:1:sticky"
+            from repro import faults
+            faults.load_env()
+            faults.fire("wal.torn")
+            try:
+                faults.fire("wal.torn")
+                raise SystemExit("wal.torn never fired")
+            except faults.SimulatedCrash:
+                pass
+            for _ in range(2):
+                try:
+                    faults.fire("device.scan")
+                    raise SystemExit("device.scan not sticky")
+                except faults.DeviceLost:
+                    pass
+            print("ENV_FAULTS_OK")
+        """)
+        env = dict(os.environ)
+        env["PYTHONPATH"] = SRC
+        out = subprocess.run(
+            [sys.executable, "-c", script], capture_output=True, text=True,
+            env=env, timeout=120,
+        )
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert "ENV_FAULTS_OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# merge-failure drills through the production injection sites
+# ---------------------------------------------------------------------------
+D = 4
+CFG = dict(base_capacity=16, tomb_limit=6, brute_cutoff=16)
+
+
+def _apply_insert(idx, model, pts):
+    for j, g in enumerate(idx.insert(pts)):
+        model[int(g)] = pts[j]
+
+
+def _check_parity(idx, model, q, k):
+    from repro.core.brute import knn_brute
+
+    ids = np.fromiter(sorted(model), np.int64, len(model))
+    live = np.stack([model[int(g)] for g in ids])
+    dd, di, _ = idx.query(q, k)
+    bd, _ = knn_brute(q, live, k)
+    np.testing.assert_allclose(dd, bd, rtol=1e-4, atol=1e-4)
+    assert np.isin(di, ids).all()
+
+
+class TestMergeFaults:
+    def test_transient_build_fault_is_retried(self):
+        from repro.core.dynamic import DynamicIndex
+
+        rng = np.random.default_rng(7)
+        idx = DynamicIndex(D, **CFG, merge_async=True)
+        model = {}
+        faults.arm("merge.build")   # one staging build dies
+        _apply_insert(idx, model, rng.normal(size=(10, D)).astype(np.float32))
+        _apply_insert(idx, model, rng.normal(size=(8, D)).astype(np.float32))
+        idx.drain_merges(timeout=60)
+        stats = idx.merge_stats()
+        assert stats["failed"] == 1 and stats["retried"] >= 1
+        assert stats["completed"] >= 1
+        _check_parity(idx, model, rng.normal(size=(6, D)).astype(np.float32), 3)
+
+    def test_swap_fault_is_retried(self):
+        from repro.core.dynamic import DynamicIndex
+
+        rng = np.random.default_rng(8)
+        idx = DynamicIndex(D, **CFG, merge_async=True)
+        model = {}
+        faults.arm("merge.swap")    # dies AFTER the build, before the swap
+        _apply_insert(idx, model, rng.normal(size=(10, D)).astype(np.float32))
+        _apply_insert(idx, model, rng.normal(size=(8, D)).astype(np.float32))
+        idx.drain_merges(timeout=60)
+        assert idx.merge_stats()["completed"] >= 1
+        assert not any(s.merging for s in idx._shards)
+        _check_parity(idx, model, rng.normal(size=(6, D)).astype(np.float32), 3)
+
+    def test_sticky_fault_exhausts_bounded_retries(self):
+        from repro.core.dynamic import DynamicIndex, MERGE_MAX_RETRIES
+        from repro.distributed.dynamic_shards import MergeRetryExhausted
+
+        rng = np.random.default_rng(9)
+        idx = DynamicIndex(D, **CFG, merge_async=True)
+        model = {}
+        faults.arm("merge.build", sticky=True)
+        _apply_insert(idx, model, rng.normal(size=(10, D)).astype(np.float32))
+        _apply_insert(idx, model, rng.normal(size=(8, D)).astype(np.float32))
+        with pytest.raises(MergeRetryExhausted) as ei:
+            idx.drain_merges(timeout=60)
+        assert ei.value.rung == 0
+        assert idx.merge_stats()["failed"] == MERGE_MAX_RETRIES + 1
+        # exactness never depended on the merge landing
+        _check_parity(idx, model, rng.normal(size=(4, D)).astype(np.float32), 3)
+
+    def test_drain_timeout_names_the_stuck_rung(self):
+        import threading
+
+        from repro.core.dynamic import DynamicIndex
+        from repro.distributed.dynamic_shards import DrainTimeout
+
+        rng = np.random.default_rng(10)
+        idx = DynamicIndex(D, **CFG, merge_async=True)
+        release = threading.Event()
+
+        def hook(phase, snaps):
+            if phase == "build":
+                assert release.wait(30)
+
+        idx._merge_test_hook = hook
+        model = {}
+        _apply_insert(idx, model, rng.normal(size=(10, D)).astype(np.float32))
+        _apply_insert(idx, model, rng.normal(size=(8, D)).astype(np.float32))
+        try:
+            with pytest.raises(DrainTimeout) as ei:
+                idx.drain_merges(timeout=0.2)
+            assert ei.value.rung == 0 and ei.value.rungs == (0,)
+        finally:
+            release.set()
+            idx._merge_test_hook = None
+        idx.drain_merges(timeout=60)   # the timeout bounded the WAIT only
+        assert idx.merge_stats()["completed"] >= 1
+
+    def test_facade_drain_timeout_passes_through(self):
+        import threading
+
+        from repro.api import IndexSpec, KNNIndex
+        from repro.distributed.dynamic_shards import DrainTimeout
+
+        rng = np.random.default_rng(11)
+        pts = rng.normal(size=(64, D)).astype(np.float32)
+        idx = KNNIndex.build(
+            pts, spec=IndexSpec(mutable=True, buffer_size=32, merge_async=True)
+        )
+        release = threading.Event()
+
+        def hook(phase, snaps):
+            if phase == "build":
+                assert release.wait(30)
+
+        idx._state._merge_test_hook = hook
+        try:
+            idx.insert(rng.normal(size=(24, D)).astype(np.float32))
+            idx.insert(rng.normal(size=(24, D)).astype(np.float32))
+            with pytest.raises(DrainTimeout):
+                idx.drain(timeout=0.2)
+        finally:
+            release.set()
+            idx._state._merge_test_hook = None
+        idx.drain(timeout=60)
+
+
+# ---------------------------------------------------------------------------
+# device-loss degradation
+# ---------------------------------------------------------------------------
+def test_device_loss_degrades_not_raises_subprocess():
+    """Tier-1 acceptance drill: 4 forced host devices, a shard-bearing
+    device dies mid-stream — queries keep answering exactly from the
+    survivors, the re-placement reason lands in stats/plan, and later
+    mutations proceed."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import numpy as np
+        import jax
+        jax.config.update("jax_cpu_enable_async_dispatch", False)
+        from repro import faults
+        from repro.api import IndexSpec, KNNIndex, knn_brute
+
+        rng = np.random.default_rng(0)
+        d, k = 5, 5
+        # rungs are tree-kind (device-spread) only above the planner's
+        # brute cutoff (2048): build an 8192-cap rung, then carry-merge
+        # four 1024 batches into a 4096-cap rung -> two tree rungs, two
+        # devices
+        pts = rng.normal(size=(12288, d)).astype(np.float32)
+        idx = KNNIndex.build(
+            pts[:8192],
+            spec=IndexSpec(mutable=True, buffer_size=1024, k_hint=k),
+        )
+        model = {i: pts[i] for i in range(8192)}
+        for lo in range(8192, 12288, 1024):
+            b = pts[lo:lo + 1024]
+            for j, g in enumerate(idx.insert(b)):
+                model[int(g)] = b[j]
+        idx.drain(timeout=120)
+        st = idx._state
+        devs = jax.devices()
+        victims = [
+            i for i, dev in enumerate(devs)
+            if any(s.device is dev for s in st._shards)
+        ]
+        assert len({
+            str(s.device) for s in st._shards
+        }) >= 2, "forest never spread over devices"
+        victim = victims[-1]
+
+        faults.arm("device.scan", device_index=victim, sticky=True)
+        q = rng.normal(size=(16, d)).astype(np.float32)
+        dd, di = idx.query(q, k=k)           # must NOT raise
+        faults.reset()
+
+        ids = np.fromiter(sorted(model), np.int64, len(model))
+        live = np.stack([model[int(g)] for g in ids])
+        bd, _ = knn_brute(q, live, k)
+        assert np.allclose(dd, bd, rtol=1e-4, atol=1e-4), "degraded != exact"
+        assert np.isin(di, ids).all()
+
+        ev = idx.stats.events
+        assert len(ev) == 1 and "device loss" in ev[0], ev
+        assert "re-placed" in ev[0] and "surviving device" in ev[0], ev
+        assert any("device loss" in r for r in idx.plan.reasons)
+        assert not any(s.device is devs[victim] for s in st._shards), (
+            "victim still holds shards"
+        )
+        assert st.merge_stats()["device_loss"] == 1
+
+        # the degraded index keeps mutating and answering exactly
+        b = rng.normal(size=(150, d)).astype(np.float32)
+        for j, g in enumerate(idx.insert(b)):
+            model[int(g)] = b[j]
+        idx.drain(timeout=120)
+        ids = np.fromiter(sorted(model), np.int64, len(model))
+        live = np.stack([model[int(g)] for g in ids])
+        dd, di = idx.query(q, k=k)
+        bd, _ = knn_brute(q, live, k)
+        assert np.allclose(dd, bd, rtol=1e-4, atol=1e-4)
+        print("DEVICE_LOSS_DEGRADE_OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        env=env, timeout=1800,
+    )
+    assert out.returncode == 0, f"subprocess failed:\n{out.stderr[-3000:]}"
+    assert "DEVICE_LOSS_DEGRADE_OK" in out.stdout
+
+
+@multi_device
+class TestInProcessDeviceLoss:
+    def test_placer_drop_device_contract(self):
+        import jax
+
+        from repro.distributed.dynamic_shards import ShardPlacer
+
+        devs = jax.devices()[:4]
+        placer = ShardPlacer(devs)
+        placer.drop_device(devs[2])
+        assert devs[2] not in placer.devices
+        assert len(placer.devices) == 3
+        with pytest.raises(KeyError):
+            placer.drop_device(devs[2])
+        for dev in (devs[0], devs[1]):
+            placer.drop_device(dev)
+        with pytest.raises(RuntimeError, match="last device"):
+            placer.drop_device(devs[3])
+
+    def test_handle_device_loss_moves_shards(self):
+        import jax
+
+        from repro.core.dynamic import DynamicIndex
+
+        rng = np.random.default_rng(21)
+        idx = DynamicIndex(
+            D, base_capacity=32, brute_cutoff=32,
+            devices=jax.devices()[:4], merge_async=False,
+        )
+        model = {}
+        for _ in range(10):
+            _apply_insert(
+                idx, model, rng.normal(size=(200, D)).astype(np.float32)
+            )
+        victim = next(
+            dev for dev in jax.devices()[:4][::-1]
+            if any(s.device is dev for s in idx._shards)
+        )
+        event = idx.handle_device_loss(victim)
+        assert "device loss" in event and "re-placed" in event
+        assert not any(s.device is victim for s in idx._shards)
+        assert idx.handle_device_loss(victim) == ""   # already gone: no-op
+        _check_parity(idx, model, rng.normal(size=(8, D)).astype(np.float32), 4)

@@ -1,0 +1,412 @@
+"""Crash-safe index lifecycle: snapshot store, WAL, facade round-trips,
+and the generative crash-restore parity harness.
+
+The harness (``TestCrashRestoreHarness``) is the PR's acceptance oracle:
+seeded mutation scripts against a live persisted ``KNNIndex``, killed at
+WAL-record and snapshot boundaries via ``repro.faults``, restored with
+``KNNIndex.load``, and compared — ids AND distances — against
+``knn_brute`` over a shadow dict that only records *acknowledged*
+mutations.  Crash semantics under test: an acknowledged mutation is
+always replayed; an unacknowledged one may be lost but can never corrupt.
+
+``REPRO_PERSIST_SCRIPTS`` (default 100) scales the number of seeded
+interleavings; ``REPRO_FAULT_SEED`` offsets the seed range so CI's chaos
+leg sweeps disjoint script populations across runs.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.api import IndexSpec, KNNIndex
+from repro.core.brute import knn_brute
+from repro.persist import (
+    FORMAT_VERSION,
+    PersistError,
+    PersistUnsupported,
+    VersionStore,
+    WriteAheadLog,
+)
+
+D = 4
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    faults.reset()
+    yield
+    faults.reset()
+
+
+def _rand(seed, n, d=D):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# VersionStore
+# ---------------------------------------------------------------------------
+class TestVersionStore:
+    def test_commit_read_roundtrip(self, tmp_path):
+        store = VersionStore(str(tmp_path))
+        arrs = {"a/b": np.arange(6).reshape(2, 3), "c": np.float32([1.5])}
+        v = store.commit(arrs, {"engine": "x", "mutation_seq": 3})
+        assert v == 1
+        got, manifest, version = store.read()
+        assert version == 1
+        assert manifest["engine"] == "x" and manifest["mutation_seq"] == 3
+        assert manifest["format"] == FORMAT_VERSION
+        assert set(got) == {"a/b", "c"}
+        np.testing.assert_array_equal(got["a/b"], arrs["a/b"])
+
+    def test_keep_k_gc_and_tmp_cleanup(self, tmp_path):
+        store = VersionStore(str(tmp_path))
+        os.makedirs(tmp_path / "v_0000000042.tmp")  # crashed-commit leftover
+        for i in range(4):
+            store.commit({"x": np.int64([i])}, {"i": i}, keep=2)
+        assert store.versions() == [3, 4]
+        assert not any(
+            name.endswith(".tmp") for name in os.listdir(tmp_path)
+        )
+        got, _, _ = store.read()
+        assert got["x"][0] == 3  # latest complete version's payload
+
+    def test_version_without_manifest_is_invisible(self, tmp_path):
+        store = VersionStore(str(tmp_path))
+        store.commit({"x": np.int64([1])}, {})
+        half = tmp_path / "v_0000000002"
+        half.mkdir()
+        (half / VersionStore.ARRAYS).write_bytes(b"torn")
+        assert store.versions() == [1]
+        _, _, version = store.read()
+        assert version == 1
+        # and the next commit claims the NEXT number past the latest
+        # complete one (the half version is just debris)
+        assert store.commit({"x": np.int64([2])}, {}) == 2
+
+    def test_mmap_read_matches_eager_read(self, tmp_path):
+        """``read(mmap=True)`` must return the same values as the eager
+        path for every member shape/dtype a snapshot uses — including
+        the 0-d / empty edge cases the zip-offset trick cannot map."""
+        store = VersionStore(str(tmp_path))
+        arrs = {
+            "slab": np.arange(24, dtype=np.float32).reshape(2, 4, 3),
+            "ids": np.arange(7, dtype=np.int64) * 3,
+            "live": np.array([True, False, True]),
+            "empty": np.empty((0, 5), np.float32),
+            "scalarish": np.float32([2.5]),
+        }
+        store.commit(arrs, {})
+        eager, _, _ = store.read()
+        mapped, _, _ = store.read(mmap=True)
+        assert set(mapped) == set(eager)
+        for key in eager:
+            np.testing.assert_array_equal(mapped[key], eager[key])
+            assert mapped[key].dtype == eager[key].dtype
+
+    def test_mmap_is_copy_on_write(self, tmp_path):
+        """In-place mutation of an mmap-ed array (tombstone bits, pad
+        writes) must never reach the snapshot on disk."""
+        store = VersionStore(str(tmp_path))
+        store.commit({"live": np.ones(64, bool)}, {})
+        mapped, _, _ = store.read(mmap=True)
+        mapped["live"][10:20] = False     # a delete's live-bit flip
+        again, _, _ = store.read(mmap=True)
+        assert again["live"].all()        # snapshot untouched
+        fresh, _, _ = store.read()
+        assert fresh["live"].all()
+
+    def test_format_version_mismatch_raises(self, tmp_path):
+        store = VersionStore(str(tmp_path))
+        store.commit({"x": np.int64([1])}, {})
+        mpath = tmp_path / "v_0000000001" / VersionStore.MANIFEST
+        manifest = json.loads(mpath.read_text())
+        manifest["format"] = 999
+        mpath.write_text(json.dumps(manifest))
+        with pytest.raises(PersistError, match="format"):
+            store.read()
+
+    def test_empty_store_read_raises(self, tmp_path):
+        with pytest.raises(PersistError, match="no complete snapshot"):
+            VersionStore(str(tmp_path)).read()
+
+    def test_crash_before_slab_write_leaves_no_version(self, tmp_path):
+        store = VersionStore(str(tmp_path))
+        store.commit({"x": np.int64([1])}, {})
+        faults.arm("persist.slab_write")
+        with pytest.raises(faults.SimulatedCrash):
+            store.commit({"x": np.int64([2])}, {})
+        assert store.versions() == [1]
+        got, _, _ = store.read()
+        assert got["x"][0] == 1
+
+    def test_crash_before_rename_leaves_no_version(self, tmp_path):
+        # the nastiest point: arrays AND manifest fully written, crash
+        # before os.replace — the tmp dir must stay invisible and the
+        # next commit must GC it
+        store = VersionStore(str(tmp_path))
+        store.commit({"x": np.int64([1])}, {})
+        faults.arm("persist.commit")
+        with pytest.raises(faults.SimulatedCrash):
+            store.commit({"x": np.int64([2])}, {})
+        assert store.versions() == [1]
+        assert any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+        v = store.commit({"x": np.int64([3])}, {})
+        assert store.versions() == [1, v]
+        assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# WriteAheadLog
+# ---------------------------------------------------------------------------
+class TestWriteAheadLog:
+    def test_append_replay_roundtrip(self, tmp_path):
+        wal = WriteAheadLog(str(tmp_path))
+        a, b = _rand(0, 3), np.int64([4, 7])
+        wal.append("insert", a, 0)
+        wal.append("delete", b, 1)
+        recs = wal.replay()
+        assert [(s, op) for s, op, _ in recs] == [(0, "insert"), (1, "delete")]
+        np.testing.assert_array_equal(recs[0][2], a)
+        np.testing.assert_array_equal(recs[1][2], b)
+        assert wal.replay(min_seq=1)[0][0] == 1
+        assert wal.replay(min_seq=2) == []
+
+    def test_rotate_and_gc_drop_covered_segments(self, tmp_path):
+        wal = WriteAheadLog(str(tmp_path))
+        wal.append("insert", _rand(1, 2), 0)
+        wal.append("insert", _rand(2, 2), 1)
+        wal.rotate(2)                       # snapshot at seq 2
+        wal.rotate(2)                       # idempotent
+        wal.append("insert", _rand(3, 2), 2)
+        assert len(wal._segments()) == 2
+        wal.gc(min_seq=2)
+        assert wal._segments() == [2]
+        assert [s for s, _, _ in wal.replay(min_seq=2)] == [2]
+        wal.gc(min_seq=99)                  # never drops the live segment
+        assert wal._segments() == [2]
+
+    def test_torn_tail_truncated_on_reopen(self, tmp_path):
+        wal = WriteAheadLog(str(tmp_path))
+        wal.append("insert", _rand(4, 3), 0)
+        faults.arm("wal.torn")
+        with pytest.raises(faults.SimulatedCrash):
+            wal.append("insert", _rand(5, 3), 1)
+        wal.close()
+        seg = os.path.join(str(tmp_path), "wal_000000000000.log")
+        torn_size = os.path.getsize(seg)
+        wal2 = WriteAheadLog(str(tmp_path))   # reopen = process restart
+        assert os.path.getsize(seg) < torn_size
+        recs = wal2.replay()
+        assert [s for s, _, _ in recs] == [0]
+        wal2.append("insert", _rand(6, 3), 1)  # appends land after the cut
+        assert [s for s, _, _ in wal2.replay()] == [0, 1]
+
+    def test_mid_log_corruption_raises(self, tmp_path):
+        wal = WriteAheadLog(str(tmp_path))
+        wal.append("insert", _rand(7, 2), 0)
+        wal.rotate(1)
+        wal.append("insert", _rand(8, 2), 1)
+        wal.close()
+        first = os.path.join(str(tmp_path), "wal_000000000000.log")
+        with open(first, "r+b") as f:       # flip a payload byte
+            f.seek(os.path.getsize(first) - 1)
+            f.write(b"\xff")
+        with pytest.raises(PersistError, match="torn WAL record in non-final"):
+            WriteAheadLog(str(tmp_path)).replay()
+
+    def test_seq_regression_raises(self, tmp_path):
+        wal = WriteAheadLog(str(tmp_path))
+        wal.append("insert", _rand(9, 2), 5)
+        wal.append("insert", _rand(10, 2), 3)
+        with pytest.raises(PersistError, match="seq went backwards"):
+            wal.replay()
+
+
+# ---------------------------------------------------------------------------
+# facade round-trips
+# ---------------------------------------------------------------------------
+class TestFacadeRoundtrip:
+    @pytest.mark.parametrize(
+        "engine", ["brute", "kdtree", "host", "chunked", "jit", "dynamic"]
+    )
+    def test_save_load_query_parity(self, engine, tmp_path):
+        pts = _rand(11, 400)
+        q = _rand(12, 16)
+        idx = KNNIndex.build(pts, engine=engine)
+        d0, i0 = idx.query(q, k=5)
+        assert idx.save(str(tmp_path / engine)) == 1
+        idx2 = KNNIndex.load(str(tmp_path / engine))
+        assert idx2.engine_name == engine
+        assert (idx2.n, idx2.d) == (idx.n, idx.d)
+        d1, i1 = idx2.query(q, k=5)
+        np.testing.assert_array_equal(i0, i1)
+        np.testing.assert_allclose(d0, d1, rtol=1e-6, atol=1e-6)
+        assert any("restored from" in r for r in idx2.plan.reasons)
+
+    def test_mesh_engines_raise_typed_unsupported(self, tmp_path):
+        pts = _rand(13, 300)
+        idx = KNNIndex.build(pts, engine="sharded")
+        with pytest.raises(PersistUnsupported, match="sharded"):
+            idx.save(str(tmp_path / "x"))
+
+    def test_save_without_persist_dir_needs_path(self):
+        idx = KNNIndex.build(_rand(14, 100))
+        with pytest.raises(PersistError, match="no live persist dir"):
+            idx.save()
+
+    def test_extra_arrays_roundtrip(self, tmp_path):
+        idx = KNNIndex.build(_rand(15, 100), engine="brute")
+        vals = np.arange(100, dtype=np.int64)
+        idx.save(str(tmp_path), extra_arrays={"values": vals})
+        idx2 = KNNIndex.load(str(tmp_path))
+        np.testing.assert_array_equal(idx2._extra_arrays["values"], vals)
+
+    def test_persist_dir_refuses_rebaseline(self, tmp_path):
+        spec = IndexSpec(
+            mutable=True, buffer_size=16, persist_dir=str(tmp_path)
+        )
+        KNNIndex.build(_rand(16, 50), spec=spec)
+        with pytest.raises(PersistError, match="already holds snapshot"):
+            KNNIndex.build(_rand(17, 50), spec=spec)
+
+    def test_save_rotates_and_gcs_wal(self, tmp_path):
+        spec = IndexSpec(
+            mutable=True, buffer_size=16, persist_dir=str(tmp_path),
+            snapshot_keep=1, merge_async=False,
+        )
+        idx = KNNIndex.build(_rand(18, 50), spec=spec)
+        for seed in (19, 20, 21):
+            idx.insert(_rand(seed, 8))
+            idx.save()
+        wal_segs = [
+            f for f in os.listdir(tmp_path / "wal") if f.endswith(".log")
+        ]
+        # keep=1: only the tail segment for the latest snapshot survives
+        assert wal_segs == ["wal_000000000003.log"]
+        assert VersionStore(str(tmp_path / "versions")).versions() == [4]
+
+
+# ---------------------------------------------------------------------------
+# the generative crash-restore parity harness (the PR's acceptance oracle)
+# ---------------------------------------------------------------------------
+N_SCRIPTS = int(os.environ.get("REPRO_PERSIST_SCRIPTS", "100"))
+SEED_BASE = 1000 * int(os.environ.get("REPRO_FAULT_SEED", "0"))
+
+# (armed point, op kinds it applies to); "none" = clean kill between ops
+_CRASH_MODES = (
+    ("none", ("insert", "delete", "save")),
+    ("wal.append", ("insert", "delete")),
+    ("wal.torn", ("insert", "delete")),
+    ("persist.slab_write", ("save",)),
+    ("persist.commit", ("save",)),
+)
+
+
+def _gen_ops(rng, n_ops):
+    """A mutation script: save every 3rd op, insert/delete otherwise."""
+    ops = []
+    for i in range(n_ops):
+        if i % 3 == 2:
+            ops.append(("save", None))
+        elif rng.random() < 0.7 or i < 2:
+            ops.append(("insert", int(rng.integers(4, 17))))
+        else:
+            ops.append(("delete", int(rng.integers(1, 5))))
+    return ops
+
+
+def _apply_op(idx, shadow, rng, op, arg):
+    """Execute one op; update the shadow ONLY after the call returns
+    (crash semantics: an unacknowledged mutation may be lost)."""
+    if op == "insert":
+        pts = rng.normal(size=(arg, D)).astype(np.float32)
+        ids = idx.insert(pts)
+        for j, g in enumerate(ids):
+            shadow[int(g)] = pts[j]
+    elif op == "delete":
+        live = np.fromiter(sorted(shadow), np.int64, len(shadow))
+        take = min(arg, len(live) - 8)  # keep enough points for k
+        if take < 1:
+            return
+        dels = rng.choice(live, size=take, replace=False)
+        idx.delete(dels)
+        for g in dels:
+            del shadow[int(g)]
+    else:
+        idx.save()
+
+
+def _assert_parity(idx, shadow, rng, *, k=3):
+    ids = np.fromiter(sorted(shadow), np.int64, len(shadow))
+    live = np.stack([shadow[int(g)] for g in ids])
+    q = rng.normal(size=(4, D)).astype(np.float32)
+    dd, di = idx.query(q, k=k)
+    bd, bi = knn_brute(q, live, k)
+    np.testing.assert_array_equal(di, ids[bi])
+    np.testing.assert_allclose(dd, bd, rtol=1e-5, atol=1e-5)
+    assert idx.n == len(shadow)
+
+
+def _run_crash_script(seed, root, *, crash_at=None, mode=None):
+    """One interleaving: build -> ops[0:c] -> injected kill at ops[c] ->
+    restore -> parity -> one more acknowledged mutation -> parity."""
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=(40, D)).astype(np.float32)
+    idx = KNNIndex.build(base, spec=IndexSpec(
+        mutable=True, buffer_size=16, k_hint=3,
+        persist_dir=root, merge_async=False,
+    ))
+    shadow = {i: base[i] for i in range(40)}
+    ops = _gen_ops(rng, n_ops=8)
+    if crash_at is None:
+        crash_at = int(rng.integers(0, len(ops) + 1))
+    crashed = False
+    for i, (op, arg) in enumerate(ops):
+        if i == crash_at:
+            if mode is None:
+                candidates = [
+                    m for m, kinds in _CRASH_MODES if op in kinds
+                ]
+                mode = candidates[int(rng.integers(0, len(candidates)))]
+            if mode != "none":
+                faults.arm(mode)
+                with pytest.raises(faults.SimulatedCrash):
+                    _apply_op(idx, shadow, rng, op, arg)
+                faults.reset()
+            crashed = True
+            break   # process "dies" here; the object is abandoned
+        _apply_op(idx, shadow, rng, op, arg)
+    assert crashed or crash_at >= len(ops)
+
+    idx2 = KNNIndex.load(root)
+    _assert_parity(idx2, shadow, rng)
+    # the restored index continues the SAME lifecycle
+    _apply_op(idx2, shadow, rng, "insert", 6)
+    _assert_parity(idx2, shadow, rng)
+    return idx2
+
+
+class TestCrashRestoreHarness:
+    def test_every_boundary_of_a_fixed_script(self, tmp_path):
+        """Exhaustive kill sweep: the same seeded script killed at EVERY
+        op boundary x every applicable fault mode."""
+        rng = np.random.default_rng(0)
+        ops = _gen_ops(rng, n_ops=8)
+        runs = 0
+        for c, (op, _) in enumerate(ops):
+            for mode, kinds in _CRASH_MODES:
+                if op not in kinds:
+                    continue
+                root = str(tmp_path / f"c{c}_{mode.replace('.', '_')}")
+                _run_crash_script(777, root, crash_at=c, mode=mode)
+                runs += 1
+        assert runs >= len(ops)  # every boundary was actually exercised
+
+    @pytest.mark.parametrize(
+        "seed", range(SEED_BASE, SEED_BASE + N_SCRIPTS)
+    )
+    def test_seeded_interleavings(self, seed, tmp_path):
+        _run_crash_script(seed, str(tmp_path / "s"))

@@ -188,6 +188,66 @@ class TestKNNLM:
         with pytest.raises(MutabilityError):
             knn2.extend_datastore(extra)
 
+    def test_datastore_warm_restart_roundtrip(self, lm_and_params, tmp_path):
+        """save_datastore / load_datastore: a restarted server answers
+        identically WITHOUT re-embedding or re-indexing the corpus —
+        including keys streamed in after the snapshot (WAL replay)."""
+        from repro.api import IndexSpec
+
+        lm, params = lm_and_params
+        cfg = lm.cfg
+        root = str(tmp_path / "store")
+        knn = KNNLM(
+            lm, params, proj_dim=8, k=5, mutable=True,
+            index_spec=IndexSpec(persist_dir=root),
+        )
+        rng = np.random.default_rng(5)
+        corpus = rng.integers(0, cfg.vocab_size, size=(6, 25)).astype(np.int32)
+        knn.build_datastore(corpus)
+        knn.save_datastore()
+        extra = rng.integers(0, cfg.vocab_size, size=(3, 25)).astype(np.int32)
+        knn.extend_datastore(extra)
+        knn.save_datastore()   # values stay in lockstep with the WAL
+        q = corpus[:3, :10]
+        p0 = knn.next_token_probs(q)
+
+        knn2 = KNNLM(lm, params, proj_dim=8, k=5, mutable=True, seed=0)
+        knn2.load_datastore(root)
+        np.testing.assert_array_equal(knn2.values, knn.values)
+        assert knn2.index.n == knn.index.n
+        p1 = knn2.next_token_probs(q)
+        np.testing.assert_allclose(p0, p1, rtol=1e-4, atol=1e-5)
+
+        # the restarted datastore keeps streaming
+        more = rng.integers(0, cfg.vocab_size, size=(2, 25)).astype(np.int32)
+        knn2.extend_datastore(more)
+        assert knn2.index.n == knn2.values.shape[0]
+
+    def test_stale_values_detected_on_load(self, lm_and_params, tmp_path):
+        """Keys replayed from the WAL whose values were never saved must
+        be refused, not served as silently-wrong tokens."""
+        from repro.api import IndexSpec
+
+        lm, params = lm_and_params
+        cfg = lm.cfg
+        root = str(tmp_path / "store")
+        knn = KNNLM(
+            lm, params, proj_dim=8, k=3, mutable=True,
+            index_spec=IndexSpec(persist_dir=root),
+        )
+        rng = np.random.default_rng(6)
+        corpus = rng.integers(0, cfg.vocab_size, size=(4, 17)).astype(np.int32)
+        knn.build_datastore(corpus)
+        knn.save_datastore()
+        # extend WITHOUT saving: keys hit the WAL, values stay in memory
+        knn.extend_datastore(
+            rng.integers(0, cfg.vocab_size, size=(2, 17)).astype(np.int32)
+        )
+        knn.drain_index()
+        knn2 = KNNLM(lm, params, proj_dim=8, k=3, mutable=True)
+        with pytest.raises(RuntimeError, match="values predate"):
+            knn2.load_datastore(root)
+
     def test_lam_zero_equals_lm(self, lm_and_params):
         lm, params = lm_and_params
         cfg = lm.cfg
