@@ -89,6 +89,14 @@ for seed in 1 2 3; do
         tests/test_persist.py -k "CrashRestoreHarness"
 done
 
+# Serving smoke: quarter-scale KNNServer under open-loop Poisson load
+# (never writes BENCH_serving.json).  The bench itself asserts the serving
+# guarantees at every scale: zero fused-round recompiles across the whole
+# load run (rung-bucket micro-batching stays inside the warmed shape set),
+# every accepted request completed, and streamed rows exact vs knn_brute.
+echo "== serving smoke (serving bench @ scale 0.25) =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serving_bench --scale 0.25
+
 # Persistence bench smoke: quarter scale (never writes BENCH_persist.json).
 # The bench proves save -> mutate -> load equivalence end-to-end at every
 # scale; the >=10x warm-restart speedup bar is asserted only at scale 1.0.

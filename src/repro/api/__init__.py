@@ -16,7 +16,8 @@ Layers (each importable on its own):
            device-memory constraint and §3.2 topology split as a cost model
   engines  the registered strategies: brute, kdtree, host, chunked, jit,
            sharded, forest, ring, dynamic (the mutable one:
-           ``KNNIndex.insert``/``delete``)
+           ``KNNIndex.insert``/``delete``), streaming (per-row delivery:
+           ``KNNIndex.query_stream`` — the online serving engine)
   index    the ``KNNIndex`` facade tying them together
 
 ``knn_brute`` is re-exported as the ground-truth oracle (it is also the
@@ -30,6 +31,7 @@ from repro.api.engine import (
     EngineBase,
     EngineCaps,
     MutabilityError,
+    StreamingUnsupported,
     available_engines,
     get_engine,
     register_engine,
@@ -66,6 +68,7 @@ __all__ = [
     "EngineBase",
     "EngineCaps",
     "MutabilityError",
+    "StreamingUnsupported",
     "register_engine",
     "get_engine",
     "available_engines",

@@ -41,6 +41,7 @@ __all__ = [
     "EngineCaps",
     "MutabilityError",
     "PersistUnsupported",
+    "StreamingUnsupported",
     "register_engine",
     "get_engine",
     "available_engines",
@@ -53,6 +54,14 @@ class MutabilityError(TypeError):
     A typed error so callers can distinguish "this engine cannot mutate"
     (pick a mutable engine, e.g. ``dynamic``, or rebuild) from argument
     mistakes that raise ``ValueError``."""
+
+
+class StreamingUnsupported(TypeError):
+    """``query_stream`` called on an engine with ``caps.streaming=False``.
+
+    Same contract as ``MutabilityError``: a typed error so callers can
+    distinguish "this engine cannot stream per-row completions" (pin
+    ``engine='streaming'``) from argument mistakes."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +77,8 @@ class EngineCaps:
     device_parallel_mutable: bool = False  # insert/delete compose with
                                 # multi-device placement (mutable shards can
                                 # be spread over devices, not just one)
+    streaming: bool = False     # query_stream: per-row completions emitted
+                                # as queries retire from the round loop
     description: str = ""
 
 
@@ -86,6 +97,22 @@ class EngineBase:
     ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
         """Exact kNN of ``queries`` against the built state."""
         raise NotImplementedError
+
+    def query_stream(
+        self, state, queries: np.ndarray, k: int, emit
+    ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
+        """Exact kNN with per-row streaming delivery: ``emit(rows, dists,
+        idx)`` is called as query rows retire from the engine's round loop
+        (each row exactly once, finalized values identical to ``query``),
+        and the assembled batch result is returned at the end.
+
+        Only engines declaring ``caps.streaming`` implement this; the
+        default raises the typed ``StreamingUnsupported`` (mirror of the
+        ``MutabilityError`` caps-contract)."""
+        raise StreamingUnsupported(
+            f"engine {self.name!r} cannot stream per-row completions "
+            "(caps.streaming=False); plan with engine='streaming'"
+        )
 
     def insert(self, state, points: np.ndarray) -> np.ndarray:
         """Incrementally add ``points``; returns assigned i64 ids.

@@ -13,6 +13,9 @@ how the work is scheduled* — which is precisely what the planner chooses on:
   ring     reference shards resident, query blocks rotated over the ICI
   dynamic  batch-dynamic logarithmic-method forest of static shards — the
            one MUTABLE engine (insert/delete); see core/dynamic.py
+  streaming  the chunked tier with per-row early retirement: query_stream
+           emits each query's finalized result the round it retires instead
+           of at batch end; the serving tier's engine (core/streaming.py)
 
 Engines translate their implementation's native conventions (squared vs
 Euclidean distances, local vs global ids, i32 vs i64) into the one
@@ -221,6 +224,33 @@ class ChunkedEngine(_BufferTreeEngine):
         stateful_query=True,
         description="chunk-resident bulk-synchronous LazySearch (§3)",
     )
+
+
+@register_engine
+class StreamingEngine(_BufferTreeEngine):
+    """The chunked tier plus per-row streaming delivery.
+
+    Identical build/state/batch-query to ``chunked`` (so it inherits the
+    whole parity suite); adds ``query_stream``, which runs the same round
+    loop with the early-retirement hook attached and emits each row's
+    finalized result the round it retires.  Never auto-picked by the
+    planner — pinned by callers that serve online traffic (``KNNServer``).
+    """
+
+    name = "streaming"
+    _tier = "chunked"
+    caps = EngineCaps(
+        exact=True, out_of_core=True, multi_device=False,
+        stateful_query=True, streaming=True,
+        description="chunked tier + per-row early-retirement streaming "
+                    "(the online serving engine)",
+    )
+
+    def query_stream(self, state: BufferKDTree, queries, k, emit):
+        from repro.core.streaming import stream_query
+
+        d, i, stats = stream_query(state, queries, k, emit)
+        return d, i, stats
 
 
 # ---------------------------------------------------------------------------

@@ -23,7 +23,12 @@ from typing import Dict, Optional
 
 import numpy as np
 
-from repro.api.engine import EngineBase, MutabilityError, get_engine
+from repro.api.engine import (
+    EngineBase,
+    MutabilityError,
+    StreamingUnsupported,
+    get_engine,
+)
 from repro.api.planner import Plan, plan as make_plan
 from repro.api.spec import IndexSpec, QueryResult, SearchStats
 from repro.persist import PersistError, VersionStore, WriteAheadLog
@@ -32,12 +37,46 @@ __all__ = ["KNNIndex"]
 
 # IndexSpec fields recorded in a snapshot manifest (JSON-able, topology-
 # free): device handles and measured calibrations belong to the HOST that
-# saved, not the snapshot; persist_dir is where the snapshot LIVES.
+# saved, not the snapshot; persist_dir is where the snapshot LIVES (and
+# compile_cache_dir is a host-local path, like persist_dir).
 _SPEC_MANIFEST_FIELDS = (
     "engine", "height", "n_chunks", "n_shards", "buffer_size", "tile_q",
     "backend", "k_hint", "m_hint", "memory_budget", "mutable",
     "merge_async", "snapshot_keep", "wal_fsync",
 )
+
+
+def _compile_cache_entries(path: str) -> int:
+    """Serialized executables currently in a persistent compile cache dir."""
+    try:
+        return sum(1 for f in os.listdir(path) if f.endswith("-cache"))
+    except OSError:
+        return 0
+
+
+def _enable_compile_cache(path: str) -> str:
+    """Point jax's persistent compilation cache at ``path`` and return the
+    auditable reason string (entry count decides warm vs cold).
+
+    The threshold knobs are zeroed because this repo's executables are
+    many SMALL kernels (fused rounds, ladder gathers, scan tiles) — the
+    default min-compile-time / min-entry-size filters would skip exactly
+    the population whose compile count we are trying to amortize.  The
+    cache dir is process-global in jax; the last index to enable it wins,
+    which is fine for the intended one-serving-process-per-dir layout.
+    """
+    import jax
+
+    path = os.path.abspath(path)
+    os.makedirs(path, exist_ok=True)
+    n = _compile_cache_entries(path)
+    jax.config.update("jax_compilation_cache_dir", path)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    return (
+        f"compile cache at {path}: {n} executable(s) on disk "
+        f"({'warm' if n else 'cold'} start)"
+    )
 
 
 class KNNIndex:
@@ -116,6 +155,12 @@ class KNNIndex:
             mutable=spec.mutable,
             merge_async=spec.merge_async,
         )
+        if spec.compile_cache_dir:
+            # enable BEFORE the engine builds: build-phase compiles (warm-
+            # at-build precompilation, initial scans) populate the cache
+            pl = pl.replace(reasons=pl.reasons + (
+                _enable_compile_cache(spec.compile_cache_dir),
+            ))
         engine = get_engine(pl.engine)
         state = engine.build(points, spec, pl)
         idx = cls(spec=spec, plan=pl, engine=engine, state=state, n=n, d=d)
@@ -205,7 +250,10 @@ class KNNIndex:
         return version
 
     @classmethod
-    def load(cls, path: str, *, devices=None) -> "KNNIndex":
+    def load(
+        cls, path: str, *, devices=None,
+        compile_cache_dir: Optional[str] = None,
+    ) -> "KNNIndex":
         """Restore an index from a persist dir: latest complete snapshot
         + replay of the WAL tail (every mutation acknowledged after that
         snapshot).  The loaded index continues the same lifecycle — later
@@ -214,7 +262,10 @@ class KNNIndex:
 
         ``devices`` re-targets the restored state at the CURRENT topology
         (default: ``jax.devices()``); the snapshot itself is host-side
-        and topology-free.
+        and topology-free.  ``compile_cache_dir`` re-attaches the host-
+        local persistent compilation cache (it is deliberately NOT in the
+        manifest — cache paths belong to the host, like ``path`` itself),
+        so a warm restart skips both the tree build AND the XLA compiles.
         """
         import jax
 
@@ -228,6 +279,7 @@ class KNNIndex:
             engine=manifest["engine"],
             devices=devs,
             persist_dir=str(path),
+            compile_cache_dir=compile_cache_dir,
             height=pins["height"],
             n_chunks=pins["n_chunks"],
             n_shards=pins["n_shards"],
@@ -250,6 +302,10 @@ class KNNIndex:
             mutable=spec.mutable,
             merge_async=spec.merge_async,
         )
+        if spec.compile_cache_dir:
+            pl = pl.replace(reasons=pl.reasons + (
+                _enable_compile_cache(spec.compile_cache_dir),
+            ))
         engine = get_engine(pl.engine)
         state = engine.restore_state(
             {k: v for k, v in arrays.items() if not k.startswith("extra/")},
@@ -310,6 +366,44 @@ class KNNIndex:
             self.plan = self.plan.replace(
                 reasons=self.plan.reasons + tuple(stats.events)
             )
+        return QueryResult(
+            dists=dists, idx=idx, stats=stats, engine=self.plan.engine, k=k
+        )
+
+    def query_stream(
+        self, queries: np.ndarray, k: Optional[int] = None, *, on_complete
+    ) -> QueryResult:
+        """k nearest neighbors with per-row streaming delivery.
+
+        ``on_complete(rows, dists, idx)`` is called from inside the engine's
+        round loop as query rows retire — each original row exactly once,
+        with finalized values identical to ``query``'s — and the assembled
+        batch ``QueryResult`` is returned after the last delivery.  The
+        callback runs on the calling thread; keep it cheap (resolve
+        futures, push to queues) or the rounds stall behind it.
+
+        Engines declaring ``caps.streaming=False`` raise the typed
+        ``StreamingUnsupported`` — pin ``engine="streaming"`` for an index
+        that accepts this call (``KNNServer`` does exactly that).
+        """
+        if not self._engine.caps.streaming:
+            raise StreamingUnsupported(
+                f"engine {self.engine_name!r} cannot stream per-row "
+                "completions (caps.streaming=False); build with "
+                "IndexSpec(engine='streaming')"
+            )
+        k = int(k) if k is not None else self.spec.k_hint
+        queries = np.asarray(queries, dtype=np.float32)
+        if queries.ndim != 2 or queries.shape[1] != self.d:
+            raise ValueError(
+                f"queries must be [m, {self.d}], got {queries.shape}"
+            )
+        if k > self.n:
+            raise ValueError(f"k={k} > n={self.n}")
+        dists, idx, stats = self._serialized(
+            self._engine.query_stream, self._state, queries, k, on_complete
+        )
+        self._last_stats = stats
         return QueryResult(
             dists=dists, idx=idx, stats=stats, engine=self.plan.engine, k=k
         )
@@ -398,9 +492,23 @@ class KNNIndex:
         warm = getattr(self._state, "warm", None)
         if warm is None:
             return
+        ccd = self.spec.compile_cache_dir
+        before = _compile_cache_entries(ccd) if ccd else 0
         # warming streams chunk slabs through the same store a query uses:
         # stateful engines must not see both at once
         self._serialized(warm, int(m), k)
+        if ccd:
+            # hit/miss accounting: a warm cache deserializes executables
+            # (entry count unchanged); a cold one compiles and adds them
+            delta = _compile_cache_entries(ccd) - before
+            tag = (
+                f"miss: compiled {delta} new executable(s)"
+                if delta else "hit: served from disk"
+            )
+            self.plan = self.plan.replace(reasons=self.plan.reasons + (
+                f"compile cache {tag} for warm(m={m}, k={k}) "
+                f"({before + max(delta, 0)} total)",
+            ))
 
     @property
     def engine_name(self) -> str:

@@ -102,6 +102,35 @@ def estimate_slab_bytes(
     return n_leaves * leaf_pad * d_pad * _F32
 
 
+def _probe_h2d(
+    sizes_mb: Tuple[float, float] = (1.0, 8.0), repeats: int = 3
+) -> Tuple[float, float]:
+    """Two-point host->device copy fit: (bandwidth GB/s, fixed latency s).
+
+    The inline miniature of ``benchmarks/copy_cost.py``'s H2D sweep —
+    median of ``repeats`` timed ``device_put``s at two sizes, solved for
+    slope (bandwidth) and intercept (per-transfer latency)."""
+    import jax
+    import numpy as np
+
+    dev = jax.devices()[0]
+    points = []
+    for mb in sizes_mb:
+        nbytes = int(mb * (1 << 20))
+        host = np.zeros(nbytes // 4, np.float32)
+        jax.block_until_ready(jax.device_put(host, dev))  # warm the path
+        ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(jax.device_put(host, dev))
+            ts.append(time.perf_counter() - t0)
+        points.append((float(nbytes), sorted(ts)[len(ts) // 2]))
+    (b0, t0), (b1, t1) = points
+    slope = max((t1 - t0) / max(b1 - b0, 1.0), 1e-15)
+    intercept = max(t0 - slope * b0, 0.0)
+    return 1.0 / (slope * 1e9), intercept
+
+
 def _clamp_height(n: int, k: int, height: Optional[int]) -> Tuple[int, Tuple[str, ...]]:
     reasons = ()
     if height is not None:
@@ -155,6 +184,26 @@ class Calibration:
         if self.h2d_gbps is None or self.h2d_gbps <= 0:
             return None
         return self.h2d_latency_s + chunk_bytes / (self.h2d_gbps * 1e9)
+
+    @classmethod
+    def refresh(cls, base: Optional["Calibration"] = None) -> "Calibration":
+        """Re-run the cheap copy-cost probe INLINE and fold the fresh H2D
+        numbers over ``base`` (keeping its engine q/s etc.).
+
+        This is the ``calibration="refresh"`` escape from the staleness
+        warning: instead of trusting week-old BENCH files forever, plan()
+        re-measures the two-point H2D fit (~tens of milliseconds) and
+        plans from that.  Slower fields (round cost, engine q/s) still
+        need their real benches; they are carried over unmodified."""
+        gbps, latency_s = _probe_h2d()
+        base = base if base is not None else cls()
+        src = "inline-refresh" if not base.source else (
+            base.source + "+inline-refresh"
+        )
+        return dataclasses.replace(
+            base, h2d_gbps=gbps, h2d_latency_s=latency_s, age_s=0.0,
+            source=src,
+        )
 
     @classmethod
     def load(cls, root: Optional[str] = None) -> Optional["Calibration"]:
@@ -286,7 +335,9 @@ def plan(
     bytes available for the leaf structure; ``None`` means unconstrained.
     ``calibration`` substitutes measured numbers (H2D bandwidth, round cost,
     per-engine q/s) for the static rules where it has them — see
-    ``Calibration``.  ``mutable=True`` requires an engine with incremental
+    ``Calibration``; the string ``"refresh"`` loads the bench files and,
+    when they are missing or stale, re-runs the cheap inline H2D probe
+    (``Calibration.refresh``) instead of warning about staleness.  ``mutable=True`` requires an engine with incremental
     ``insert``/``delete`` (the ``dynamic`` logarithmic-method forest); the
     rebuild-vs-merge crossover is costed here and pinned into the plan,
     and with >1 device the forest's shard rungs are PLACED across devices
@@ -304,6 +355,27 @@ def plan(
         devices = jax.devices()
     p = max(1, len(devices))
     reasons: list = []
+
+    if isinstance(calibration, str):
+        if calibration != "refresh":
+            raise ValueError(
+                f"calibration={calibration!r}: pass a Calibration, None, "
+                "or the string 'refresh'"
+            )
+        loaded = Calibration.load()
+        if loaded is None or loaded.stale:
+            calibration = Calibration.refresh(loaded)
+            reasons.append(
+                "calibration auto-refresh: "
+                + ("no bench files found"
+                   if loaded is None
+                   else f"sources {loaded.age_s / 86400.0:.1f}d old")
+                + f"; inline H2D probe measured {calibration.h2d_gbps:.2f}"
+                f"GB/s + {calibration.h2d_latency_s * 1e6:.0f}us/transfer "
+                f"({calibration.source})"
+            )
+        else:
+            calibration = loaded
 
     if calibration is not None and calibration.stale:
         age_d = calibration.age_s / 86400.0
@@ -549,15 +621,24 @@ def plan(
             engine = "chunked"
             reasons.append("1 device: chunk-streamed buffer k-d tree")
 
-    # the BufferKDTree tiers (host/chunked) and sharded hold the (full,
-    # replicated) leaf structure per device, so all honor the budget
+    # the BufferKDTree tiers (host/chunked/streaming) and sharded hold the
+    # (full, replicated) leaf structure per device, so all honor the budget
     # through chunk streaming — ONE place decides the chunk count
-    if engine in ("chunked", "host", "sharded"):
+    if engine in ("chunked", "host", "sharded", "streaming"):
         if n_chunks is None:
             n_chunks, note = chunks_for_budget()
             reasons.append(note)
         else:
             reasons.append(f"N={n_chunks} chunks pinned by caller")
+
+    if engine == "streaming":
+        # never auto-picked: streaming is the chunked tier plus per-row
+        # delivery, pinned by online-serving callers (KNNServer)
+        reasons.append(
+            "streaming engine pinned: chunked round loop with per-row "
+            "early retirement; compaction-ladder rungs double as serving "
+            "micro-batch buckets (docs/SERVING.md)"
+        )
 
     crossover = None
     do_merge_async = False
@@ -627,7 +708,7 @@ def plan(
         p if engine in ("forest", "sharded", "ring", "dynamic") else 1
     )
     deadline, dl_note = calibrated_deadline()
-    if dl_note is not None and engine in ("chunked", "host", "sharded"):
+    if dl_note is not None and engine in ("chunked", "host", "sharded", "streaming"):
         reasons.append(dl_note)
     return Plan(
         engine=engine, n_chunks=nc, n_shards=ns,

@@ -48,7 +48,17 @@ class IndexSpec:
     devices: Optional[Tuple[Any, ...]] = None   # None => jax.devices()
     memory_budget: Optional[int] = None   # device bytes for the leaf structure
     calibration: Optional[Any] = None     # planner.Calibration (measured costs);
-                                          # None => plan by rule
+                                          # None => plan by rule; the string
+                                          # "refresh" re-runs the cheap H2D
+                                          # probe inline when the bench files
+                                          # are missing or stale
+    compile_cache_dir: Optional[str] = None  # persistent XLA compilation
+                                          # cache (jax.experimental.
+                                          # compilation_cache): warm restarts
+                                          # deserialize executables instead
+                                          # of recompiling; hit/miss lands in
+                                          # Plan.reasons.  Host-local (not
+                                          # part of the persisted manifest)
     mutable: Optional[bool] = None        # True: index must support
                                           # insert/delete (planner picks a
                                           # mutable engine, e.g. 'dynamic')

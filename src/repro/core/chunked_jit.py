@@ -377,9 +377,23 @@ class ChunkResidentEngine:
         k: int,
         tq: int,
         buffer_size: int,
+        on_retire=None,
     ) -> Tuple[np.ndarray, np.ndarray, Dict[str, float]]:
         """Returns (sq-dists f32[m, k], reordered-global idx i32[m, k],
-        info counters).  Distances are pre-rescoring (caller refines)."""
+        info counters).  Distances are pre-rescoring (caller refines).
+
+        ``on_retire(rows, d2, gi)`` is the EARLY-RETIREMENT hook (the
+        streaming engine's seam): called zero or more times during the
+        round loop with original query rows whose traversal just finished,
+        their raw squared distances f32[r, k] and reordered-global indices
+        i32[r, k] — the same pre-rescoring values the batch return carries.
+        Every row is reported exactly once (rows not seen retiring
+        mid-loop are reported in one final call before ``run`` returns).
+        Detection rides the double-buffered schedule readback, and the
+        knn-row materialization is itself double-buffered (async D2H
+        started at detection, completed just before the next dispatch), so
+        the hook adds no extra device synchronization to the round loop.
+        """
         m = qpad.shape[0]
         store = self.store
         first_leaf = self.first_leaf_heap
@@ -413,8 +427,53 @@ class ChunkResidentEngine:
         unit_counts = []
         starve = np.zeros(store.n_chunks, np.int32)
 
+        # ---- early-retirement reporting (the streaming engine's seam) ----
+        # `reported` tracks original rows already delivered; `pending_emit`
+        # holds one detected-but-unmaterialized batch (rows + refs to the knn
+        # buffers whose async D2H was started at detection).  The flush MUST
+        # happen before those buffers are donated to the next round.
+        reported = np.zeros(m, bool) if on_retire is not None else None
+        pending_emit = None
+        if reported is not None:
+            info["early_retired"] = 0
+            info["retire_emits"] = 0
+
+        def flush_emit() -> None:
+            nonlocal pending_emit
+            if pending_emit is None:
+                return
+            rows, rc, d_ref, i_ref = pending_emit
+            pending_emit = None
+            t0 = time.perf_counter()
+            d_rows = np.asarray(d_ref)[rc]
+            i_rows = np.asarray(i_ref)[rc]
+            info["sync_wait_s"] += time.perf_counter() - t0
+            on_retire(rows, d_rows, i_rows)
+
+        def note_retired() -> None:
+            """Detect rows newly retired in the current ``sched`` view and
+            stage them for delivery (delivering any prior batch first, so
+            emissions stay ordered and refs stay one-deep)."""
+            nonlocal pending_emit
+            if reported is None:
+                return
+            flush_emit()
+            rc = np.nonzero(sched[: orig.size] < 0)[0]
+            rc = rc[~reported[orig[rc]]]
+            if rc.size == 0:
+                return
+            rows = orig[rc].copy()
+            reported[rows] = True
+            for ref in (knn_d, knn_i):
+                if hasattr(ref, "copy_to_host_async"):
+                    ref.copy_to_host_async()
+            pending_emit = (rows, rc, knn_d, knn_i)
+            info["early_retired"] += int(rc.size)
+            info["retire_emits"] += 1
+
         def dispatch_round(visit: np.ndarray) -> None:
             nonlocal node, fromc, leaf, knn_d, knn_i
+            flush_emit()   # the round donates knn_d/knn_i: deliver first
             for _cid, dev_slab, lo in store.stream(visit.tolist()):
                 with warnings.catch_warnings():
                     # donation is a no-op on CPU; the warning fires at the
@@ -456,6 +515,7 @@ class ChunkResidentEngine:
         # in-chunk mask at visit time.
         sched = harvest(leaf)       # round 0: nothing to overlap yet
         inflight = None
+        note_retired()
 
         while True:
             live_rows = np.nonzero(sched >= 0)[0]
@@ -464,6 +524,7 @@ class ChunkResidentEngine:
                     # stale map says done — drain the pipeline and re-check
                     # against the freshest map before concluding
                     sched, inflight = harvest(inflight), None
+                    note_retired()
                     continue
                 break
 
@@ -472,6 +533,7 @@ class ChunkResidentEngine:
                     # compaction re-indexes rows: barrier the pipeline so
                     # the gather uses the freshest (smallest) live set
                     sched, inflight = harvest(inflight), None
+                    note_retired()
                     continue
                 rung = ladder.pop(0)
                 while ladder and live_rows.size <= ladder[0]:
@@ -511,6 +573,7 @@ class ChunkResidentEngine:
             # round computes, then start this round's readback
             if inflight is not None:
                 sched = harvest(inflight)
+                note_retired()
             inflight = leaf
             if hasattr(inflight, "copy_to_host_async"):
                 inflight.copy_to_host_async()
@@ -522,6 +585,12 @@ class ChunkResidentEngine:
 
         out_d[orig] = np.asarray(knn_d)[: orig.size]
         out_i[orig] = np.asarray(knn_i)[: orig.size]
+        if reported is not None:
+            flush_emit()
+            rest = np.nonzero(~reported)[0]
+            if rest.size:
+                on_retire(rest, out_d[rest], out_i[rest])
+                reported[rest] = True
         info["units"] = int(sum(int(u) for u in unit_counts))
         info["chunk_copies"] = store.copies - copies_before
         return out_d, out_i, info

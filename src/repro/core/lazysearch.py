@@ -58,7 +58,35 @@ from repro.core.toptree import (
 )
 from repro.kernels import ops as kops
 
-__all__ = ["BufferKDTree", "SearchStats", "PLAN_LADDER"]
+__all__ = ["BufferKDTree", "SearchStats", "PLAN_LADDER", "finalize_candidates"]
+
+
+def finalize_candidates(
+    tree: TopTree, queries: np.ndarray, gi: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact rescoring of engine candidates for a (sub)set of query rows.
+
+    The MXU decomposition ||q||^2 - 2qx + ||x||^2 carries O(eps * |q||x|)
+    absolute error — at near-zero distances the relative error explodes
+    (duplicate/self queries).  Recompute the k selected candidates directly
+    ((q-x)^2, error O(eps * d^2)) and re-sort; FAISS-style refinement, cost
+    O(r k d).  ``queries`` is f32[r, d] (original feature dim), ``gi`` is
+    i32[r, k] reordered-global indices; returns (dists f32[r, k] ascending
+    Euclidean, idx i64[r, k] in the caller's original point ordering).
+    Shared by the batch return path and the streaming engine's per-row
+    early-retirement emissions.
+    """
+    safe = np.clip(gi, 0, None)
+    diff = tree.points[safe] - queries[:, None, :]
+    d2 = np.einsum("mkd,mkd->mk", diff, diff)
+    d2[gi < 0] = np.inf
+    order = np.argsort(d2, axis=1, kind="stable")
+    d2 = np.take_along_axis(d2, order, axis=1)
+    gi = np.take_along_axis(gi, order, axis=1)
+    dists = np.sqrt(np.maximum(d2, 0.0))
+    idx_out = tree.orig_idx[np.clip(gi, 0, None)].astype(np.int64)
+    idx_out[gi < 0] = -1
+    return dists, idx_out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,6 +114,8 @@ class SearchStats:
     tail_s: float = 0.0      # wall seconds in tail (compacted) rounds
     sync_wait_s: float = 0.0  # wall seconds blocked on schedule readbacks
                               # and compaction barriers
+    early_retired: int = 0   # rows delivered by the streaming hook BEFORE
+                             # the round loop finished (0 on batch queries)
     # operational events absorbed during the call (e.g. a device loss the
     # dynamic engine degraded around); also appended to Plan.reasons by
     # the api facade so post-hoc `describe()` shows them
@@ -109,6 +139,7 @@ class _StatsBuilder:
         self.steady_s = 0.0
         self.tail_s = 0.0
         self.sync_wait_s = 0.0
+        self.early_retired = 0
 
     def freeze(self) -> SearchStats:
         return SearchStats(
@@ -125,6 +156,7 @@ class _StatsBuilder:
             steady_s=self.steady_s,
             tail_s=self.tail_s,
             sync_wait_s=self.sync_wait_s,
+            early_retired=self.early_retired,
         )
 
 
@@ -516,19 +548,6 @@ class BufferKDTree:
     def _finalize(
         self, gi: np.ndarray, queries: np.ndarray
     ) -> Tuple[np.ndarray, np.ndarray]:
-        """Exact rescoring pass: the MXU decomposition ||q||^2 - 2qx + ||x||^2
-        carries O(eps * |q||x|) absolute error — at near-zero distances the
-        relative error explodes (duplicate/self queries).  Recompute the k
-        selected candidates directly ((q-x)^2, error O(eps * d^2)) and
-        re-sort; FAISS-style refinement, cost O(m k d)."""
-        safe = np.clip(gi, 0, None)
-        diff = self.tree.points[safe] - queries[:, None, :]
-        d2 = np.einsum("mkd,mkd->mk", diff, diff)
-        d2[gi < 0] = np.inf
-        order = np.argsort(d2, axis=1, kind="stable")
-        d2 = np.take_along_axis(d2, order, axis=1)
-        gi = np.take_along_axis(gi, order, axis=1)
-        dists = np.sqrt(np.maximum(d2, 0.0))
-        idx_out = self.tree.orig_idx[np.clip(gi, 0, None)].astype(np.int64)
-        idx_out[gi < 0] = -1
-        return dists, idx_out
+        """Exact rescoring pass over the full batch (``finalize_candidates``
+        for the whole m rows)."""
+        return finalize_candidates(self.tree, queries, gi)

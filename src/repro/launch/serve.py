@@ -1,8 +1,12 @@
-"""Serving launcher: batched requests through the continuous-batching engine.
+"""Serving launcher: batched requests through the continuous-batching engine,
+or (``--knn``) synthetic online kNN traffic through the ``KNNServer`` front
+door (admission queue + rung-bucket micro-batching — docs/SERVING.md).
 
-Example:
+Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen15_0_5b --smoke \\
       --requests 8 --slots 4 --max-new 16
+  PYTHONPATH=src python -m repro.launch.serve --knn --requests 200 \\
+      --rate 500 --deadline-ms 50
 """
 
 from __future__ import annotations
@@ -18,16 +22,72 @@ from repro.models.model import LanguageModel
 from repro.serving.engine import Request, ServeEngine
 
 
+def _knn_main(args) -> None:
+    """Open-loop Poisson kNN traffic against a KNNServer over a synthetic
+    streaming-engine index; prints latency percentiles, the close-reason
+    tally, and the plan the server rode in on."""
+    from repro.api import IndexSpec, KNNIndex
+    from repro.serving.knn_server import KNNServer
+
+    rng = np.random.default_rng(args.seed)
+    points = rng.normal(size=(args.n, args.d)).astype(np.float32)
+    index = KNNIndex.build(
+        points, spec=IndexSpec(engine="streaming", k_hint=args.k)
+    )
+    queries = rng.normal(size=(args.requests, args.d)).astype(np.float32)
+    gaps = rng.exponential(1.0 / args.rate, size=args.requests)
+
+    with KNNServer(
+        index, k=args.k, max_batch=args.max_batch,
+        default_deadline_ms=args.deadline_ms,
+    ) as server:
+        t0 = time.perf_counter()
+        tickets = []
+        for i in range(args.requests):
+            time.sleep(gaps[i])
+            tickets.append(server.submit(queries[i]))
+        for t in tickets:
+            t.result(timeout=120.0)
+        dt = time.perf_counter() - t0
+        stats = server.stats()
+        lat = np.array([t.info["latency_s"] for t in tickets]) * 1e3
+
+    print(f"[serve --knn] {args.requests} requests in {dt:.2f}s "
+          f"({args.requests / dt:.1f} q/s, offered rate {args.rate:.0f}/s)")
+    print(f"  latency ms: p50={np.percentile(lat, 50):.2f} "
+          f"p99={np.percentile(lat, 99):.2f} max={lat.max():.2f}")
+    print(f"  batches={stats['batches']} close reasons: "
+          f"{stats['batches_by_close']} buckets={stats['buckets']}")
+    print(index.describe())
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--knn", action="store_true",
+                    help="serve synthetic kNN traffic through KNNServer "
+                         "instead of LM decode")
+    ap.add_argument("--arch")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    # --knn traffic knobs
+    ap.add_argument("--n", type=int, default=20_000, help="datastore size")
+    ap.add_argument("--d", type=int, default=8)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--rate", type=float, default=500.0,
+                    help="Poisson arrival rate (req/s)")
+    ap.add_argument("--max-batch", type=int, default=256)
+    ap.add_argument("--deadline-ms", type=float, default=50.0)
     args = ap.parse_args(argv)
+
+    if args.knn:
+        _knn_main(args)
+        return
+    if args.arch is None:
+        ap.error("--arch is required unless --knn is given")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     lm = LanguageModel(cfg)

@@ -1,6 +1,9 @@
-"""Serving substrate: batched decode engine + kNN-LM retrieval."""
+"""Serving substrate: batched decode engine, kNN-LM retrieval, and the
+online kNN request front door (admission queue + rung-bucket
+micro-batching + SLA-aware scheduling — docs/SERVING.md)."""
 
 from repro.serving.engine import ServeEngine
+from repro.serving.knn_server import KNNServer, Ticket
 from repro.serving.knnlm import KNNLM
 
-__all__ = ["ServeEngine", "KNNLM"]
+__all__ = ["ServeEngine", "KNNLM", "KNNServer", "Ticket"]

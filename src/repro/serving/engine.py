@@ -88,22 +88,35 @@ class ServeEngine:
         return logits
 
     def _admit(self):
-        """Fill free slots by replaying prompts through the decode path with
-        only the admitted slot's `active` bit set (other slots' caches and
-        recurrent states are untouched)."""
+        """Fill every free slot, then replay all admitted prompts through
+        the decode path IN LOCKSTEP: one jitted call per prompt position
+        with every still-replaying slot's `active` bit set (slots that were
+        not admitted — or whose shorter prompt already finished — stay
+        masked, so their caches and recurrent states are untouched).  Cost
+        is max(prompt_len) dispatches per admission round instead of
+        sum(prompt_len) — admitting R requests together no longer costs R
+        sequential replays."""
+        admitted: List[Tuple[int, Request]] = []
         for s in range(self.slots):
             if self.slot_req[s] is None and self.queue:
                 req = self.queue.pop(0)
                 self.slot_req[s] = req
-                active = np.zeros((self.slots,), bool)
-                active[s] = True
-                toks = np.zeros((self.slots,), np.int32)
-                pos = self.slot_pos.astype(np.int64).copy()
-                for t, tok in enumerate(req.prompt[:-1].tolist()):
-                    toks[s] = tok
+                admitted.append((s, req))
+        if not admitted:
+            return
+        max_replay = max(len(req.prompt) - 1 for _, req in admitted)
+        for t in range(max_replay):
+            active = np.zeros((self.slots,), bool)
+            toks = np.zeros((self.slots,), np.int32)
+            pos = self.slot_pos.astype(np.int64).copy()
+            for s, req in admitted:
+                if t < len(req.prompt) - 1:
+                    active[s] = True
+                    toks[s] = int(req.prompt[t])
                     pos[s] = t
-                    self._run_tokens(toks, pos, active)
-                self.slot_pos[s] = max(len(req.prompt) - 1, 0)
+            self._run_tokens(toks, pos, active)
+        for s, req in admitted:
+            self.slot_pos[s] = max(len(req.prompt) - 1, 0)
 
     # ------------------------------------------------------------------
     def _sample(self, logits_row: np.ndarray, temp: float) -> int:

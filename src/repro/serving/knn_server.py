@@ -1,0 +1,442 @@
+"""KNNServer: the online serving front door (admission queue + rung-shaped
+micro-batching + SLA-aware batch close).
+
+The paper's buffer k-d tree exists to delay queries until a batch is worth
+launching; everything below ``repro.api`` assumes the caller already HAS
+that batch.  A production kNN service receives single queries over time, so
+this module rebuilds the paper's batching advantage online — the
+continuous-batching shape LLM serving tiers use, with the paper's own
+machinery as the batch geometry:
+
+  * ADMISSION QUEUE — ``submit()`` enqueues a request and returns a
+    ``Ticket`` (event-backed future).  Requests are served FIFO.
+  * RUNG-SHAPED MICRO-BATCHING — pending requests are coalesced into the
+    smallest precompiled batch bucket that holds them.  The buckets are
+    exactly ``{max_batch} ∪ compaction_ladder(max_batch)`` — the rung
+    shapes ``KNNIndex.warm(max_batch)`` already compiles for the tail of a
+    big batch double as the serving batch sizes, so serving stays
+    RECOMPILE-FREE forever: no traffic pattern can present a shape the
+    warm step did not compile.
+  * SLA-AWARE BATCH CLOSE — a batch launches when the top rung fills
+    (``close=rung_full``) or when the oldest request's slack runs out
+    (``close=deadline``): slack = deadline - now - estimated service time,
+    the estimate seeded from the planner ``Calibration``'s measured round
+    cost and EWMA-corrected by observed batch service times.  Every close
+    decision is recorded as a testable reason string (``server.reasons``),
+    the same auditability contract as ``Plan.reasons``.
+  * STREAMING COMPLETION — batches are served through
+    ``KNNIndex.query_stream`` (the ``streaming`` engine), so a request
+    whose query row retires in round 3 of a 12-round batch is answered
+    after round 3; tickets resolve out of order within a batch.
+
+Scheduling runs on a background thread by default (``start=True``); tests
+drive the same policy deterministically with ``start=False`` +
+``pump_once()`` and an injected ``clock``.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.api.engine import StreamingUnsupported, get_engine
+from repro.core.chunked_jit import compaction_ladder
+
+__all__ = ["KNNServer", "Ticket", "DEFAULT_DEADLINE_MS"]
+
+DEFAULT_DEADLINE_MS = 50.0
+
+# Service-time seed when no calibration is supplied: a conservative CPU-ish
+# guess, immediately corrected by the first observed batch.
+_DEFAULT_EST_SERVICE_S = 0.02
+
+# Rounds a serving-sized batch typically runs — multiplies the calibration's
+# measured per-round cost into a service-time seed.
+_EST_ROUNDS_GUESS = 8
+
+# EWMA weight of the newest observed batch service time.
+_EST_ALPHA = 0.4
+
+
+class Ticket:
+    """Handle for one submitted request (an event-backed future).
+
+    ``result()`` blocks until the request's row retires from a served
+    batch; ``info`` carries serving metadata (batch id, bucket shape,
+    close reason, queue wait and total latency in seconds).
+    """
+
+    __slots__ = ("rid", "info", "_event", "_dists", "_idx")
+
+    def __init__(self, rid: int):
+        self.rid = rid
+        self.info: dict = {}
+        self._event = threading.Event()
+        self._dists: Optional[np.ndarray] = None
+        self._idx: Optional[np.ndarray] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(
+        self, timeout: Optional[float] = None
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(dists f32[k], idx i64[k]) — blocks until served."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"request {self.rid} not served within {timeout}s"
+            )
+        return self._dists, self._idx
+
+    def _complete(self, dists: np.ndarray, idx: np.ndarray) -> None:
+        self._dists = dists
+        self._idx = idx
+        self._event.set()
+
+
+class _Pending:
+    __slots__ = ("ticket", "query", "k", "arrival_s", "deadline_s")
+
+    def __init__(self, ticket, query, k, arrival_s, deadline_s):
+        self.ticket = ticket
+        self.query = query
+        self.k = k
+        self.arrival_s = arrival_s
+        self.deadline_s = deadline_s
+
+
+class KNNServer:
+    """Admission queue + rung-bucket micro-batching over a streaming index.
+
+    ``index`` must be built with the ``streaming`` engine (typed
+    ``StreamingUnsupported`` otherwise).  ``max_batch`` fixes the top
+    bucket; the full bucket set is its compaction ladder, all precompiled
+    at construction.  ``clock`` is injectable for deterministic tests;
+    ``start=False`` disables the scheduler thread (drive with
+    ``pump_once``).
+    """
+
+    def __init__(
+        self,
+        index,
+        *,
+        k: Optional[int] = None,
+        max_batch: int = 256,
+        default_deadline_ms: float = DEFAULT_DEADLINE_MS,
+        calibration=None,
+        clock: Callable[[], float] = time.monotonic,
+        start: bool = True,
+    ):
+        caps = get_engine(index.engine_name).caps
+        if not caps.streaming:
+            raise StreamingUnsupported(
+                f"KNNServer needs a streaming engine, got "
+                f"{index.engine_name!r} (caps.streaming=False); build the "
+                "index with IndexSpec(engine='streaming')"
+            )
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self._index = index
+        self.k = int(k) if k is not None else index.spec.k_hint
+        self.max_batch = int(max_batch)
+        self.default_deadline_s = float(default_deadline_ms) / 1e3
+        self._clock = clock
+        # rungs double as batch buckets: the EXACT shape set warm() compiles
+        self.buckets: Tuple[int, ...] = tuple(sorted(
+            set(compaction_ladder(self.max_batch)) | {self.max_batch}
+        ))
+        self._cv = threading.Condition()
+        self._queue: collections.deque = collections.deque()
+        self._reasons: collections.deque = collections.deque(maxlen=512)
+        self._next_rid = 0
+        self._batches = 0
+        self._completed = 0
+        self._outstanding = 0
+        self._stop = False
+        self._draining = False
+
+        # service-time estimate per bucket, seeded from measured round cost
+        # when a calibration has one (PR 3's copy-cost bench), EWMA-updated
+        # from observed batches either way
+        if calibration is not None and getattr(calibration, "round_s", None):
+            seed = float(calibration.round_s) * _EST_ROUNDS_GUESS
+            src = f"calibrated round ~{calibration.round_s * 1e3:.2f}ms " \
+                  f"x {_EST_ROUNDS_GUESS} rounds ({calibration.source})"
+        else:
+            seed = _DEFAULT_EST_SERVICE_S
+            src = "uncalibrated default"
+        self._est_s = {b: seed for b in self.buckets}
+        self._reasons.append(
+            f"serving buckets {list(self.buckets)} = compaction ladder of "
+            f"m={self.max_batch}; service estimate seeded "
+            f"{seed * 1e3:.2f}ms ({src})"
+        )
+
+        # the recompile-free guarantee: every bucket shape (the top rung
+        # plus its whole ladder) is compiled before the first request
+        index.warm(self.max_batch, self.k)
+
+        self._thread: Optional[threading.Thread] = None
+        if start:
+            self._thread = threading.Thread(
+                target=self._loop, name="knn-server", daemon=True
+            )
+            self._thread.start()
+
+    # -- client side ----------------------------------------------------
+    def submit(
+        self,
+        query: np.ndarray,
+        k: Optional[int] = None,
+        deadline_ms: Optional[float] = None,
+    ) -> Ticket:
+        """Enqueue one query (f32[d]); returns its ``Ticket``.
+
+        ``deadline_ms`` is the request's SLA budget from now (default: the
+        server's); the batch-close policy guarantees the request's batch
+        LAUNCHES no later than deadline minus the current service estimate,
+        even if its rung never fills.
+        """
+        q = np.asarray(query, np.float32).reshape(-1)
+        if q.shape[0] != self._index.d:
+            raise ValueError(
+                f"query must have dim {self._index.d}, got {q.shape[0]}"
+            )
+        kk = int(k) if k is not None else self.k
+        if kk > self.k:
+            raise ValueError(
+                f"per-request k={kk} exceeds the server's batch k={self.k}"
+            )
+        dl = (
+            float(deadline_ms) / 1e3
+            if deadline_ms is not None else self.default_deadline_s
+        )
+        with self._cv:
+            if self._stop:
+                raise RuntimeError("KNNServer is closed")
+            now = self._clock()
+            t = Ticket(self._next_rid)
+            self._next_rid += 1
+            self._queue.append(_Pending(t, q, kk, now, now + dl))
+            self._outstanding += 1
+            self._cv.notify_all()
+        return t
+
+    def submit_many(
+        self,
+        queries: np.ndarray,
+        k: Optional[int] = None,
+        deadline_ms: Optional[float] = None,
+    ) -> List[Ticket]:
+        """Enqueue each row of ``queries`` as its own request."""
+        qs = np.asarray(queries, np.float32)
+        if qs.ndim != 2:
+            raise ValueError(f"queries must be [m, d], got {qs.shape}")
+        return [self.submit(row, k=k, deadline_ms=deadline_ms) for row in qs]
+
+    # -- batching policy ------------------------------------------------
+    def _bucket_for(self, size: int) -> int:
+        for b in self.buckets:
+            if size <= b:
+                return b
+        return self.max_batch
+
+    def _close_decision_locked(
+        self, now: float
+    ) -> Tuple[Optional[str], str, Optional[float]]:
+        """(close kind, detail, seconds until re-check) under ``_cv``.
+
+        kind None = keep waiting (wait the returned slack); "rung_full" =
+        the top bucket is full; "deadline" = the oldest request's slack
+        (deadline - now - service estimate for the CURRENT bucket) ran out.
+        """
+        qlen = len(self._queue)
+        if qlen == 0:
+            return None, "", None
+        if qlen >= self.max_batch:
+            return "rung_full", f"queued={qlen}", None
+        shape = self._bucket_for(qlen)
+        est = self._est_s[shape]
+        head = min(self._queue, key=lambda p: p.deadline_s)
+        slack = head.deadline_s - now - est
+        if slack <= 0.0:
+            return "deadline", (
+                f"rid={head.ticket.rid} slack_ms={slack * 1e3:.2f} "
+                f"est_service_ms={est * 1e3:.2f}"
+            ), None
+        return None, "", slack
+
+    def _take_locked(self, kind: str, detail: str) -> Tuple[list, str, int]:
+        batch = [
+            self._queue.popleft()
+            for _ in range(min(len(self._queue), self.max_batch))
+        ]
+        bid = self._batches
+        self._batches += 1
+        shape = self._bucket_for(len(batch))
+        reason = (
+            f"batch {bid}: close={kind} size={len(batch)}/{shape}"
+            + (f" {detail}" if detail else "")
+        )
+        self._reasons.append(reason)
+        return batch, reason, bid
+
+    # -- serving side ---------------------------------------------------
+    def _serve_batch(self, batch: list, reason: str, bid: int) -> None:
+        s = len(batch)
+        shape = self._bucket_for(s)
+        qs = np.zeros((shape, self._index.d), np.float32)
+        for r, p in enumerate(batch):
+            qs[r] = p.query
+        t0 = self._clock()
+
+        def on_complete(rows, dists, idx):
+            tnow = self._clock()
+            resolved = 0
+            for j, row in enumerate(rows):
+                row = int(row)
+                if row >= s:        # zero-padding rows up to the bucket
+                    continue
+                p = batch[row]
+                p.ticket.info.update(
+                    batch=bid, shape=shape, reason=reason,
+                    wait_s=t0 - p.arrival_s,
+                    latency_s=tnow - p.arrival_s,
+                )
+                p.ticket._complete(
+                    dists[j, : p.k].copy(), idx[j, : p.k].copy()
+                )
+                resolved += 1
+            if resolved:
+                with self._cv:
+                    self._completed += resolved
+                    self._outstanding -= resolved
+                    self._cv.notify_all()
+
+        self._index.query_stream(qs, self.k, on_complete=on_complete)
+        dt = max(self._clock() - t0, 0.0)
+        # observed service time corrects the estimate for this bucket
+        self._est_s[shape] = (
+            (1 - _EST_ALPHA) * self._est_s[shape] + _EST_ALPHA * dt
+        )
+
+    def _loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._stop and not self._draining and not self._queue:
+                    self._cv.wait()
+                if not self._queue:
+                    if self._stop:
+                        return
+                    if self._draining:
+                        # queue drained; drain() observes outstanding == 0
+                        self._cv.wait(timeout=0.01)
+                        continue
+                kind, detail, slack = self._close_decision_locked(
+                    self._clock()
+                )
+                if kind is None and self._draining and self._queue:
+                    kind, detail = "drain", ""
+                if kind is None:
+                    # sleep until the oldest request's slack would expire
+                    # (capped so estimate drift re-evaluates promptly);
+                    # submits notify and wake this immediately
+                    self._cv.wait(
+                        timeout=min(slack, 0.05) if slack else 0.05
+                    )
+                    continue
+                batch, reason, bid = self._take_locked(kind, detail)
+            self._serve_batch(batch, reason, bid)
+
+    def pump_once(self, force: bool = False) -> int:
+        """Manual scheduler step (tests / ``start=False`` servers): apply
+        the batch-close policy once and serve the batch it closes, if any.
+        Returns the number of requests served.  ``force=True`` closes a
+        non-empty queue regardless of policy (drain semantics)."""
+        with self._cv:
+            if not self._queue:
+                return 0
+            kind, detail, _slack = self._close_decision_locked(self._clock())
+            if kind is None:
+                if not force:
+                    return 0
+                kind, detail = "drain", ""
+            batch, reason, bid = self._take_locked(kind, detail)
+        self._serve_batch(batch, reason, bid)
+        return len(batch)
+
+    # -- lifecycle ------------------------------------------------------
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until every accepted request has been served.
+
+        With a scheduler thread, pending batches are force-closed
+        (``close=drain``); without one, pumps inline."""
+        if self._thread is None:
+            while self.pump_once(force=True):
+                pass
+            return
+        deadline = (time.monotonic() + timeout) if timeout else None
+        with self._cv:
+            self._draining = True
+            self._cv.notify_all()
+            while self._outstanding > 0:
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        self._draining = False
+                        raise TimeoutError(
+                            f"{self._outstanding} request(s) still pending "
+                            f"after {timeout}s"
+                        )
+                self._cv.wait(timeout=remaining if remaining else 0.05)
+            self._draining = False
+
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Drain, then stop the scheduler thread.  Idempotent."""
+        if self._stop and self._thread is None:
+            return
+        self.drain(timeout)
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+    def __enter__(self) -> "KNNServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- introspection --------------------------------------------------
+    @property
+    def reasons(self) -> Tuple[str, ...]:
+        """Recent scheduling decisions as testable strings (newest last;
+        bounded window, same auditability contract as ``Plan.reasons``)."""
+        with self._cv:
+            return tuple(self._reasons)
+
+    def stats(self) -> dict:
+        with self._cv:
+            by_close: dict = {}
+            for r in self._reasons:
+                if " close=" in r:
+                    kind = r.split(" close=")[1].split(" ")[0].split("/")[0]
+                    by_close[kind] = by_close.get(kind, 0) + 1
+            return {
+                "queued": len(self._queue),
+                "outstanding": self._outstanding,
+                "completed": self._completed,
+                "batches": self._batches,
+                "batches_by_close": by_close,
+                "buckets": list(self.buckets),
+                "est_service_ms": {
+                    b: round(self._est_s[b] * 1e3, 3) for b in self.buckets
+                },
+            }

@@ -19,6 +19,15 @@ serving path states its constraints in an ``IndexSpec`` and the planner
 picks the engine — chunked leaf streaming, multi-device forests and future
 engines all arrive here without touching this file.
 
+ONLINE SERVING: ``serve()`` puts the datastore's index behind a
+``KNNServer`` (admission queue + rung-bucket micro-batching +
+SLA deadlines — docs/SERVING.md).  Retrieval in ``next_token_probs`` then
+routes each query row through the server's queue, where it coalesces with
+every other in-flight request (other sequences, other KNNLM callers on the
+same server) into precompiled rung-shaped batches — the paper's buffering
+advantage rebuilt at the request level.  Requires the index to be built
+with the ``streaming`` engine (``IndexSpec(engine="streaming")``).
+
 STREAMING DATASTORES: kNN-LM stores grow per request (every served context
 is a new (key -> next-token) pair).  Construct with ``mutable=True`` and the
 planner picks the batch-dynamic engine; ``extend_datastore`` then APPENDS
@@ -85,6 +94,7 @@ class KNNLM:
         self.proj = q.astype(np.float32)
         self.index: Optional[KNNIndex] = None
         self.values: Optional[np.ndarray] = None
+        self._server = None          # KNNServer when serve() is active
         self._hidden = jax.jit(self._hidden_fn)
 
     # ------------------------------------------------------------------
@@ -137,6 +147,55 @@ class KNNLM:
             [self.values, nxt.reshape(-1).astype(np.int64)]
         )
         return ids
+
+    def serve(
+        self,
+        *,
+        max_batch: int = 64,
+        default_deadline_ms: float = 50.0,
+        calibration=None,
+        **server_kw,
+    ):
+        """Put retrieval behind an online ``KNNServer`` and return it.
+
+        After this, ``next_token_probs`` submits each query row as its own
+        request — micro-batched by the server with every other in-flight
+        request instead of queried as a private batch.  The index must be
+        built with the ``streaming`` engine (``IndexSpec(
+        engine="streaming")``); anything else raises the typed
+        ``StreamingUnsupported``.  Call ``unserve()`` (or close the
+        returned server) to go back to direct batch queries.
+        """
+        from repro.serving.knn_server import KNNServer
+
+        if self.index is None:
+            raise RuntimeError("no datastore to serve: call build_datastore")
+        self._server = KNNServer(
+            self.index, k=self.k, max_batch=max_batch,
+            default_deadline_ms=default_deadline_ms,
+            calibration=calibration, **server_kw,
+        )
+        return self._server
+
+    def unserve(self) -> None:
+        """Detach (and close) the serving front door; retrieval reverts to
+        direct ``index.query`` batches."""
+        if self._server is not None:
+            self._server.close()
+            self._server = None
+
+    def _retrieve(self, q: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """kNN for the query rows — through the serving front door when one
+        is attached (each row rides the admission queue and coalesces with
+        other in-flight traffic), directly otherwise."""
+        if self._server is None:
+            return self.index.query(q, k=self.k)
+        tickets = self._server.submit_many(q)
+        pairs = [t.result(timeout=60.0) for t in tickets]
+        return (
+            np.stack([d for d, _ in pairs]),
+            np.stack([i for _, i in pairs]),
+        )
 
     def drain_index(self, timeout=None) -> None:
         """Wait for background index maintenance (the dynamic engine's
@@ -206,7 +265,7 @@ class KNNLM:
 
         h = np.asarray(self._hidden(self.params, jnp.asarray(tokens)), np.float32)
         q = (h[:, -1, :] @ self.proj).astype(np.float32)
-        dists, idx = self.index.query(q, k=self.k)
+        dists, idx = self._retrieve(q)
 
         p_knn = np.zeros_like(p_lm)
         w = np.exp(-dists / self.temp)                     # [B, k]

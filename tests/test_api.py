@@ -521,6 +521,72 @@ class TestCalibration:
         np.testing.assert_allclose(dists, bd, rtol=1e-4, atol=1e-4)
 
 
+class TestCalibrationRefresh:
+    """``calibration="refresh"``: instead of warning about week-old bench
+    numbers, plan() re-runs the cheap inline H2D probe and plans from the
+    fresh fit — the measurement lands in reasons like any other."""
+
+    def test_refresh_remeasures_h2d_over_base(self):
+        from repro.api import Calibration
+
+        base = Calibration(h2d_gbps=0.001, round_s=5e-3,
+                           engine_qps={"chunked": 2500.0},
+                           age_s=30 * 86400.0, source="old-bench")
+        cal = Calibration.refresh(base)
+        assert cal.h2d_gbps > 0.001 and cal.h2d_latency_s >= 0.0
+        assert not cal.stale and cal.age_s == 0.0
+        # slower fields carry over unmodified; provenance is appended
+        assert cal.round_s == 5e-3
+        assert cal.engine_qps == {"chunked": 2500.0}
+        assert cal.source == "old-bench+inline-refresh"
+
+    def test_refresh_from_nothing(self):
+        from repro.api import Calibration
+
+        cal = Calibration.refresh()
+        assert cal.h2d_gbps and cal.h2d_gbps > 0
+        assert cal.source == "inline-refresh"
+
+    def test_plan_accepts_refresh_string(self):
+        import warnings as _warnings
+
+        # must not raise, must not warn about staleness (the point of the
+        # escape hatch) — whether the repo's committed bench files are
+        # fresh or stale, "refresh" always yields a usable calibration
+        with _warnings.catch_warnings():
+            _warnings.simplefilter("error", UserWarning)
+            p = plan(50_000, 8, m=50_000, devices=[object()],
+                     calibration="refresh")
+        assert p.calibrated
+
+    def test_other_strings_rejected(self):
+        with pytest.raises(ValueError, match="refresh"):
+            plan(50_000, 8, devices=[object()], calibration="reload")
+
+    def test_stale_load_triggers_inline_probe(self, tmp_path, monkeypatch):
+        import json
+        import os as _os
+        import time as _time
+
+        from repro.api import CALIBRATION_STALE_S
+        from repro.api import planner as planner_mod
+
+        cc = tmp_path / "BENCH_copy_cost.json"
+        cc.write_text(json.dumps({"h2d_gbps": 10.0, "round_s": 1e-3}))
+        old = _time.time() - (CALIBRATION_STALE_S + 86400)
+        _os.utime(cc, (old, old))
+        # point plan()'s internal Calibration.load at the stale tmp root
+        orig_load = planner_mod.Calibration.load.__func__
+        monkeypatch.setattr(
+            planner_mod.Calibration, "load",
+            classmethod(lambda cls, root=None: orig_load(cls, str(tmp_path))),
+        )
+        p = plan(50_000, 8, m=50_000, devices=[object()],
+                 calibration="refresh")
+        assert any("calibration auto-refresh" in r for r in p.reasons)
+        assert not any("calibration stale" in r for r in p.reasons)
+
+
 class TestKNNIndexFacade:
     def test_auto_plan_small_is_brute_and_exact(self):
         pts, q = _data(1500, 40, 6, seed=5)

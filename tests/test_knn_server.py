@@ -1,0 +1,211 @@
+"""KNNServer: admission queue, rung-bucket batching, SLA-aware close.
+
+The scheduling policy is tested DETERMINISTICALLY: ``start=False`` servers
+driven by ``pump_once()`` with an injected fake clock, so deadline math is
+exact and no test sleeps to coax the scheduler.  A threaded server covers
+the end-to-end path (out-of-order ticket resolution, parity vs brute, the
+queue-starvation regression).
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import IndexSpec, KNNIndex, StreamingUnsupported, knn_brute
+from repro.serving.knn_server import KNNServer
+
+N, D, K = 4000, 8, 10
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+@pytest.fixture(scope="module")
+def index():
+    rng = np.random.default_rng(0)
+    pts = rng.normal(size=(N, D)).astype(np.float32)
+    idx = KNNIndex.build(
+        pts, spec=IndexSpec(engine="streaming", height=4, k_hint=K)
+    )
+    return pts, idx
+
+
+def _queries(m, seed=1):
+    return np.random.default_rng(seed).normal(size=(m, D)).astype(np.float32)
+
+
+class TestBatchClosePolicy:
+    def test_rung_full_close(self, index):
+        pts, idx = index
+        clock = FakeClock()
+        srv = KNNServer(idx, k=K, max_batch=32, clock=clock, start=False)
+        q = _queries(32)
+        tickets = srv.submit_many(q, deadline_ms=10_000.0)
+        served = srv.pump_once()
+        assert served == 32
+        assert " close=rung_full " in srv.reasons[-1]
+        bd, _ = knn_brute(q, pts, K)
+        for r, t in enumerate(tickets):
+            assert t.done()
+            d, i = t.result(timeout=0)
+            np.testing.assert_allclose(d, bd[r], rtol=1e-4, atol=1e-4)
+        srv.close()
+
+    def test_deadline_forces_short_batch(self, index):
+        _, idx = index
+        clock = FakeClock()
+        srv = KNNServer(idx, k=K, max_batch=32, clock=clock, start=False)
+        t = srv.submit(_queries(1)[0], deadline_ms=30.0)
+        # slack = 30ms deadline - 20ms default estimate = 10ms: policy must
+        # HOLD the batch open while slack remains...
+        assert srv.pump_once() == 0
+        clock.advance(0.005)
+        assert srv.pump_once() == 0
+        # ...and close the moment it runs out, well before the rung fills
+        clock.advance(0.006)
+        assert srv.pump_once() == 1
+        assert t.done()
+        reason = srv.reasons[-1]
+        assert " close=deadline " in reason and "size=1/32" in reason
+        assert "slack_ms=" in reason and "est_service_ms=" in reason
+        srv.close()
+
+    def test_bucket_is_smallest_rung_that_fits(self, index):
+        _, idx = index
+        clock = FakeClock()
+        srv = KNNServer(idx, k=K, max_batch=64, clock=clock, start=False)
+        assert srv.buckets == (32, 64)      # compaction ladder of 64
+        srv.submit_many(_queries(40), deadline_ms=1.0)
+        clock.advance(1.0)
+        assert srv.pump_once() == 40
+        assert "size=40/64" in srv.reasons[-1]
+        stats = srv.stats()
+        assert stats["batches_by_close"] == {"deadline": 1}
+        srv.close()
+
+    def test_seeded_trace_replay_is_deterministic(self, index):
+        pts, idx = index
+        # same arrival trace + same pump ticks => identical close decisions
+        rng = np.random.default_rng(42)
+        arrivals = np.cumsum(rng.exponential(0.004, size=24))
+        queries = _queries(24, seed=42)
+        deadlines = rng.choice([25.0, 60.0], size=24)
+
+        def replay():
+            clock = FakeClock()
+            srv = KNNServer(idx, k=K, max_batch=32, clock=clock, start=False)
+            results, log = {}, []
+            next_req = 0
+            for tick in np.arange(0.0, 0.25, 0.002):
+                clock.t = float(tick)
+                while next_req < 24 and arrivals[next_req] <= tick:
+                    results[next_req] = srv.submit(
+                        queries[next_req], deadline_ms=float(deadlines[next_req])
+                    )
+                    next_req += 1
+                if srv.pump_once():
+                    log.append(srv.reasons[-1])
+            while srv.pump_once(force=True):
+                log.append(srv.reasons[-1])
+            srv.close()
+            return log, {r: t.result(timeout=0) for r, t in results.items()}
+
+        log_a, res_a = replay()
+        log_b, res_b = replay()
+        assert log_a == log_b and len(log_a) > 1
+        bd, _ = knn_brute(queries, pts, K)
+        for r in range(24):
+            np.testing.assert_array_equal(res_a[r][1], res_b[r][1])
+            np.testing.assert_allclose(res_a[r][0], bd[r], rtol=1e-4, atol=1e-4)
+
+
+class TestThreadedServer:
+    def test_out_of_order_completion_parity(self, index):
+        pts, idx = index
+        q = _queries(100, seed=9)
+        with KNNServer(idx, k=K, max_batch=32,
+                       default_deadline_ms=20.0) as srv:
+            tickets = srv.submit_many(q)
+            pairs = [t.result(timeout=60.0) for t in tickets]
+            stats = srv.stats()
+        bd, bi = knn_brute(q, pts, K)
+        d = np.stack([p[0] for p in pairs])
+        i = np.stack([p[1] for p in pairs])
+        np.testing.assert_allclose(d, bd, rtol=1e-4, atol=1e-4)
+        assert (i == bi).mean() > 0.99
+        assert stats["completed"] == 100 and stats["outstanding"] == 0
+        # 100 requests through a 32-rung server cannot fit one batch
+        assert stats["batches"] >= 4
+
+    def test_single_request_never_starves(self, index):
+        # regression: one request and NO follow-up traffic must still be
+        # served once its slack expires — the scheduler may not wait for
+        # the rung to fill
+        _, idx = index
+        with KNNServer(idx, k=K, max_batch=256,
+                       default_deadline_ms=40.0) as srv:
+            t = srv.submit(_queries(1, seed=13)[0])
+            d, i = t.result(timeout=30.0)
+        assert d.shape == (K,) and i.shape == (K,)
+        assert t.info["shape"] == 32       # smallest rung, not 256
+        assert " close=" in t.info["reason"]
+
+    def test_ticket_info_records_serving_metadata(self, index):
+        _, idx = index
+        with KNNServer(idx, k=K, max_batch=32,
+                       default_deadline_ms=25.0) as srv:
+            t = srv.submit(_queries(1, seed=17)[0])
+            t.result(timeout=30.0)
+        assert t.info["latency_s"] >= t.info["wait_s"] >= 0.0
+        assert t.info["batch"] == 0
+
+
+class TestValidationAndLifecycle:
+    def test_non_streaming_index_rejected(self, index):
+        pts, _ = index
+        chunked = KNNIndex.build(pts, spec=IndexSpec(engine="chunked",
+                                                     height=4, k_hint=K))
+        with pytest.raises(StreamingUnsupported, match="streaming"):
+            KNNServer(chunked, k=K)
+
+    def test_submit_validation(self, index):
+        _, idx = index
+        srv = KNNServer(idx, k=K, max_batch=32, start=False)
+        with pytest.raises(ValueError, match="dim"):
+            srv.submit(np.zeros(D + 1, np.float32))
+        with pytest.raises(ValueError, match="exceeds"):
+            srv.submit(np.zeros(D, np.float32), k=K + 1)
+        srv.close()
+        with pytest.raises(RuntimeError, match="closed"):
+            srv.submit(np.zeros(D, np.float32))
+
+    def test_drain_serves_everything_queued(self, index):
+        _, idx = index
+        clock = FakeClock()
+        srv = KNNServer(idx, k=K, max_batch=32, clock=clock, start=False)
+        tickets = srv.submit_many(_queries(5, seed=23), deadline_ms=10_000.0)
+        srv.drain()
+        assert all(t.done() for t in tickets)
+        assert " close=drain " in srv.reasons[-1]
+        srv.close()
+
+    def test_estimate_seeded_from_calibration(self, index):
+        _, idx = index
+
+        class Cal:
+            round_s = 0.004
+            source = "test-cal"
+
+        srv = KNNServer(idx, k=K, max_batch=32, calibration=Cal(),
+                        start=False)
+        # 4ms round x 8 round guess = 32ms seed
+        assert srv.stats()["est_service_ms"][32] == pytest.approx(32.0)
+        assert any("test-cal" in r for r in srv.reasons)
+        srv.close()

@@ -1,0 +1,104 @@
+"""Streaming engine: per-row completion delivery vs the batch contract.
+
+The ``streaming`` engine must deliver every query row exactly once through
+the ``query_stream`` emit callback, with row payloads identical to what the
+batch path returns and brute force confirms — including when retirement is
+out of order (buffer rounds retire rows whenever their leaf walks finish,
+not in submission order).  Engines that do not declare ``caps.streaming``
+must refuse with the TYPED ``StreamingUnsupported``, never silently fall
+back to batch.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    IndexSpec,
+    KNNIndex,
+    StreamingUnsupported,
+    available_engines,
+    knn_brute,
+)
+
+
+def _data(n, m, d, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(n, d)).astype(np.float32),
+            rng.normal(size=(m, d)).astype(np.float32))
+
+
+def _collect(index, q, k):
+    """Drive query_stream, recording every emission."""
+    emitted = {}
+    order = []
+
+    def on_complete(rows, dists, idx):
+        assert rows.ndim == 1 and dists.shape == (rows.size, k)
+        for j, r in enumerate(rows):
+            assert int(r) not in emitted, f"row {r} emitted twice"
+            emitted[int(r)] = (dists[j].copy(), idx[j].copy())
+        order.append(rows.copy())
+
+    res = index.query_stream(q, k, on_complete=on_complete)
+    return res, emitted, order
+
+
+class TestQueryStream:
+    def test_each_row_emitted_exactly_once_and_exact(self):
+        pts, q = _data(4000, 300, 8, seed=7)
+        index = KNNIndex.build(
+            pts, spec=IndexSpec(engine="streaming", height=4, k_hint=10)
+        )
+        res, emitted, order = _collect(index, q, k=10)
+        # union of emissions == every row, once (duplicates assert inline)
+        assert sorted(emitted) == list(range(q.shape[0]))
+        bd, bi = knn_brute(q, pts, 10)
+        for r, (d, i) in emitted.items():
+            np.testing.assert_allclose(d, bd[r], rtol=1e-4, atol=1e-4)
+            assert (i == bi[r]).mean() > 0.99   # ties may permute
+        # the returned QueryResult carries the SAME rows as the emissions
+        np.testing.assert_allclose(res.dists, bd, rtol=1e-4, atol=1e-4)
+        assert res.engine == "streaming"
+
+    def test_multi_emission_out_of_order(self):
+        # tall tree + many rows => rows retire across MANY rounds; the
+        # stream must deliver several distinct emissions, and at least one
+        # out of submission order (early retirement, not one final dump)
+        pts, q = _data(20_000, 512, 8, seed=11)
+        index = KNNIndex.build(
+            pts, spec=IndexSpec(engine="streaming", height=7, n_chunks=2,
+                                k_hint=10)
+        )
+        res, emitted, order = _collect(index, q, k=10)
+        assert sorted(emitted) == list(range(q.shape[0]))
+        assert len(order) > 1, "stream degenerated into one final dump"
+        assert res.stats.early_retired > 0
+        flat = np.concatenate(order)
+        assert not np.array_equal(flat, np.sort(flat)), (
+            "rows arrived strictly in submission order — retirement "
+            "detection is not streaming"
+        )
+
+    def test_streaming_caps_declared(self):
+        caps = available_engines()
+        assert caps["streaming"].streaming and caps["streaming"].exact
+        streaming = [n for n, c in caps.items() if c.streaming]
+        assert streaming == ["streaming"]
+
+    def test_non_streaming_engine_raises_typed_error(self):
+        pts, q = _data(600, 8, 6, seed=3)
+        index = KNNIndex.build(pts, spec=IndexSpec(engine="chunked", height=2))
+        with pytest.raises(StreamingUnsupported, match="streaming"):
+            index.query_stream(q, 3, on_complete=lambda *a: None)
+        # typed: callers filter on the class, not message text
+        assert issubclass(StreamingUnsupported, TypeError)
+
+    def test_stream_stats_match_batch_contract(self):
+        pts, q = _data(3000, 100, 5, seed=5)
+        index = KNNIndex.build(
+            pts, spec=IndexSpec(engine="streaming", height=3, k_hint=7)
+        )
+        res, _, _ = _collect(index, q, k=7)
+        st = res.stats
+        assert st.iterations > 0 and st.units_scanned > 0
+        assert index.stats is st  # facade exposes the last stream's stats
