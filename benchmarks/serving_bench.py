@@ -27,9 +27,26 @@ root (full-scale runs only):
   batches_by_close          close-reason tally per run (rung_full /
                             deadline / drain), proving the SLA policy ran
 
-Run via ``python -m benchmarks.serving_bench --scale 0.25`` (the CI
-serving smoke — exits non-zero on any recompile or parity/completion
-failure) or at full scale to update the trajectory file.
+``--overload`` adds a fourth measurement: open-loop Poisson at ~2x the
+measured sustainable (high-rate) throughput against a server with a
+BOUNDED admission queue and deadline purging left ON — the overload-safety
+acceptance run.  The queue bound is sized below the purge-bounded backlog
+(``offered x deadline``) so the bench must observe typed ``Overloaded``
+sheds, not just purges.  Recorded per run: ``shed_rate``, ``purge_rate``,
+``goodput_qps`` (completed OK / wall) and ``p99_ok_ms`` over the requests
+that completed normally.  Hard failures: any accepted ticket failing to
+resolve (a hang), zero sheds, or accepted-OK p99 beyond the documented
+bound of ``2 x deadline + 10 x`` the no-overload high-rate p99 — under
+admission control + purging, overload must cost REJECTIONS, not latency.
+
+The measurement servers (serial + poisson) run ``purge_expired=False``:
+they measure how late late requests finish, so purging them as
+``DeadlineExceeded`` would erase the very tail the bench reports.
+
+Run via ``python -m benchmarks.serving_bench --scale 0.25 --overload``
+(the CI serving smoke — exits non-zero on any recompile or
+parity/completion/overload failure) or at full scale to update the
+trajectory file.
 """
 
 from __future__ import annotations
@@ -91,7 +108,83 @@ def _open_loop(server, queries, rate: float, rng) -> dict:
     return out
 
 
-def run(scale: float = 1.0) -> None:
+def _overload_run(index, *, qps_sustainable: float, p99_ref_ms: float,
+                  rng) -> dict:
+    """Poisson arrivals at ~2x the sustainable rate against a BOUNDED
+    queue with purging on: admission control must shed (typed
+    ``Overloaded``), purging must keep accepted latency bounded, and every
+    accepted ticket must resolve."""
+    from repro.serving.knn_server import (
+        DeadlineExceeded, KNNServer, Overloaded,
+    )
+
+    deadline_ms = 50.0
+    offered = 2.0 * qps_sustainable
+    # below the purge-bounded steady-state backlog (offered x deadline),
+    # so the queue FILLS and sheds instead of purging its way out
+    max_queue = max(16, min(2 * MAX_BATCH,
+                            int(0.5 * offered * deadline_ms / 1e3)))
+    nreq = max(256, 4 * max_queue)
+    gaps = rng.exponential(1.0 / offered, size=nreq)
+    shed = 0
+    tickets = []
+    with KNNServer(index, k=K, max_batch=MAX_BATCH,
+                   default_deadline_ms=deadline_ms,
+                   max_queue=max_queue) as server:
+        queries = rng.normal(size=(nreq, D)).astype(np.float32)
+        t0 = time.perf_counter()
+        for i in range(nreq):
+            time.sleep(gaps[i])
+            try:
+                tickets.append(server.submit(queries[i]))
+            except Overloaded:
+                shed += 1
+        ok_lat = []
+        purged = 0
+        for t in tickets:
+            try:
+                t.result(timeout=300.0)   # TimeoutError here IS a hang
+                ok_lat.append(t.info["latency_s"] * 1e3)
+            except DeadlineExceeded:
+                purged += 1
+        wall = time.perf_counter() - t0
+        stats = server.stats()
+    assert stats["outstanding"] == 0, (
+        f"accepted requests left unresolved under overload: {stats}"
+    )
+    assert shed > 0, (
+        f"no Overloaded sheds at {offered:.0f}/s offered with "
+        f"max_queue={max_queue}: admission control never engaged"
+    )
+    assert ok_lat, "overload run completed zero requests"
+    p99_ok = float(np.percentile(np.array(ok_lat), 99))
+    bound_ms = 2.0 * deadline_ms + 10.0 * p99_ref_ms
+    assert p99_ok <= bound_ms, (
+        f"accepted-OK p99 {p99_ok:.1f}ms exceeds the overload bound "
+        f"{bound_ms:.1f}ms (2x deadline + 10x no-overload p99 "
+        f"{p99_ref_ms:.1f}ms): overload is costing latency, not rejections"
+    )
+    out = {
+        "rate_offered": offered,
+        "deadline_ms": deadline_ms,
+        "max_queue": max_queue,
+        "requests": nreq,
+        "shed": shed,
+        "shed_rate": shed / nreq,
+        "purged": purged,
+        "purge_rate": purged / nreq,
+        "ok": len(ok_lat),
+        "goodput_qps": len(ok_lat) / wall,
+        "p99_ok_ms": p99_ok,
+        "p99_bound_ms": bound_ms,
+    }
+    common.row("serving/overload", wall / nreq,
+               f"offered={offered:.0f}/s;shed={shed};"
+               f"p99_ok={p99_ok:.1f}ms")
+    return out
+
+
+def run(scale: float = 1.0, overload: bool = False) -> None:
     from repro.api import IndexSpec, KNNIndex, chunk_round_cache_size, knn_brute
     from repro.serving.knn_server import KNNServer
 
@@ -108,9 +201,11 @@ def run(scale: float = 1.0) -> None:
     # --- serial baseline: same server, deadline 0 => size-1 batches ------
     # (KNNServer.__init__ runs index.warm(MAX_BATCH, K): every rung bucket
     # is compiled HERE, before anything is timed)
+    # purge_expired=False: deadline 0 means "already expired" — this run
+    # WANTS every request served anyway (it measures service, not SLA)
     qs = rng.normal(size=(M_SERIAL, D)).astype(np.float32)
     with KNNServer(index, k=K, max_batch=MAX_BATCH,
-                   default_deadline_ms=0.0) as server:
+                   default_deadline_ms=0.0, purge_expired=False) as server:
         # one untimed round trip to absorb thread/dispatch cold start
         server.submit(qs[0]).result(timeout=300.0)
         compiles_warm = chunk_round_cache_size()
@@ -126,8 +221,10 @@ def run(scale: float = 1.0) -> None:
     queries = rng.normal(size=(nreq, D)).astype(np.float32)
     rates = {"low": 4.0 * qps_serial, "high": 16.0 * qps_serial}
     runs = {}
+    # purge_expired=False: the latency percentiles must include requests
+    # that finished PAST their deadline — purging would erase the tail
     with KNNServer(index, k=K, max_batch=MAX_BATCH,
-                   default_deadline_ms=50.0) as server:
+                   default_deadline_ms=50.0, purge_expired=False) as server:
         # parity spot check rides the serving path before the timed runs
         t = server.submit(queries[0])
         d_srv, i_srv = t.result(timeout=300.0)
@@ -140,6 +237,15 @@ def run(scale: float = 1.0) -> None:
                        runs[name]["wall_s"] / nreq,
                        f"rate={rate:.0f}/s;p99={runs[name]['p99_ms']:.1f}ms")
         completed = server.stats()["completed"]
+
+    overload_run = None
+    if overload:
+        overload_run = _overload_run(
+            index,
+            qps_sustainable=runs["high"]["qps"],
+            p99_ref_ms=runs["high"]["p99_ms"],
+            rng=rng,
+        )
     compiles_after = chunk_round_cache_size()
 
     speedup = runs["high"]["qps"] / qps_serial
@@ -155,6 +261,8 @@ def run(scale: float = 1.0) -> None:
         "round_compiles_after_load": compiles_after,
         "recompile_free": compiles_warm == compiles_after,
     }
+    if overload_run is not None:
+        result["overload"] = overload_run
 
     assert completed == nreq * 2 + 1, (
         f"server lost requests: completed={completed}"
@@ -176,13 +284,18 @@ def run(scale: float = 1.0) -> None:
             json.dump(result, f, indent=2)
             f.write("\n")
 
+    extra = ""
+    if overload_run is not None:
+        extra = (f" shed_rate={overload_run['shed_rate']:.2f} "
+                 f"goodput={overload_run['goodput_qps']:.1f}q/s "
+                 f"p99_ok={overload_run['p99_ok_ms']:.1f}ms")
     print(f"# serving bench (scale {scale}): "
           f"serial={qps_serial:.1f}q/s "
           f"low={runs['low']['qps']:.1f}q/s "
           f"high={runs['high']['qps']:.1f}q/s "
           f"speedup={speedup:.2f}x "
           f"p99_high={runs['high']['p99_ms']:.1f}ms "
-          f"recompile_free={result['recompile_free']}", flush=True)
+          f"recompile_free={result['recompile_free']}" + extra, flush=True)
 
 
 def main() -> None:
@@ -190,9 +303,13 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=1.0,
                     help="size multiplier; < 1.0 skips the >=3x assertion "
                          "and does not write BENCH_serving.json")
+    ap.add_argument("--overload", action="store_true",
+                    help="add the bounded-queue overload run at ~2x the "
+                         "measured sustainable rate (sheds must occur and "
+                         "accepted-OK p99 must stay within bound)")
     args = ap.parse_args()
     common.emit_header()
-    run(scale=args.scale)
+    run(scale=args.scale, overload=args.overload)
 
 
 if __name__ == "__main__":

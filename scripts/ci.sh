@@ -71,31 +71,37 @@ echo "== dynamic bench smoke (scale 0.25) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.dynamic_bench --scale 0.25
 
 # Chaos leg: a FRESH process with 4 forced host devices runs the fault-
-# injection suite (device-loss degradation drill + merge-retry/drain-
-# timeout faults, including the @multi_device in-process cases tier-1
-# skips) and re-runs the crash-restore parity harness under a sweep of
-# REPRO_FAULT_SEED values.  Each seed shifts the generative scripts to a
-# disjoint block (seed*1000 .. +N), so every CI run proves kill-at-any-
-# boundary recovery on interleavings tier-1 never saw.  A smaller script
-# count per seed keeps the sweep's wall time near one tier-1 harness run.
-echo "== chaos leg (fault injection + crash-restore sweep, 4 virtual devices) =="
+# injection suites — the index lifecycle drills (device-loss degradation +
+# merge-retry/drain-timeout faults) AND the serving-path drills
+# (serve.launch / serve.stream / serve.stall through a live KNNServer: the
+# no-hung-ticket invariant, crash-isolated retries, watchdog fail-fast and
+# degraded serving under device loss, including the @multi_device
+# in-process cases tier-1 skips) — then re-runs the crash-restore parity
+# harness AND the serving chaos sweep under a sweep of REPRO_FAULT_SEED
+# values.  Each seed shifts the generative scripts / fault fire-counts to
+# interleavings tier-1 never saw, and a failing seed replays exactly.
+echo "== chaos leg (fault injection + serving drills, 4 virtual devices) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=4" \
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m pytest -x -q tests/test_faults.py
+    python -m pytest -x -q tests/test_faults.py tests/test_serving_faults.py
 for seed in 1 2 3; do
-    echo "== chaos leg: crash-restore harness @ REPRO_FAULT_SEED=$seed =="
+    echo "== chaos leg: crash-restore harness + serving sweep @ REPRO_FAULT_SEED=$seed =="
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} REPRO_FAULT_SEED=$seed \
         REPRO_PERSIST_SCRIPTS=40 python -m pytest -x -q \
-        tests/test_persist.py -k "CrashRestoreHarness"
+        tests/test_persist.py tests/test_serving_faults.py \
+        -k "CrashRestoreHarness or ChaosSweep"
 done
 
-# Serving smoke: quarter-scale KNNServer under open-loop Poisson load
-# (never writes BENCH_serving.json).  The bench itself asserts the serving
-# guarantees at every scale: zero fused-round recompiles across the whole
-# load run (rung-bucket micro-batching stays inside the warmed shape set),
-# every accepted request completed, and streamed rows exact vs knn_brute.
-echo "== serving smoke (serving bench @ scale 0.25) =="
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serving_bench --scale 0.25
+# Serving smoke: quarter-scale KNNServer under open-loop Poisson load plus
+# the --overload run (never writes BENCH_serving.json).  The bench itself
+# asserts the serving guarantees at every scale: zero fused-round
+# recompiles across the whole load run (rung-bucket micro-batching stays
+# inside the warmed shape set), every accepted request completed, streamed
+# rows exact vs knn_brute — and under ~2x-sustainable offered load with a
+# bounded queue, typed Overloaded sheds occur, no accepted ticket hangs,
+# and accepted-OK p99 stays within the documented bound.
+echo "== serving smoke (serving bench @ scale 0.25, with overload run) =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serving_bench --scale 0.25 --overload
 
 # Persistence bench smoke: quarter scale (never writes BENCH_persist.json).
 # The bench proves save -> mutate -> load equivalence end-to-end at every

@@ -79,6 +79,11 @@ class EngineCaps:
                                 # be spread over devices, not just one)
     streaming: bool = False     # query_stream: per-row completions emitted
                                 # as queries retire from the round loop
+    batch_stream: bool = False  # query_stream with whole-batch delivery:
+                                # one emit for every row when the batch
+                                # finishes (coarser latency than streaming;
+                                # lets KNNServer front non-retiring engines
+                                # such as the dynamic forest)
     description: str = ""
 
 

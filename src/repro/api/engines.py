@@ -565,6 +565,7 @@ class DynamicEngine(EngineBase):
     caps = EngineCaps(
         exact=True, out_of_core=True, multi_device=True,
         stateful_query=True, mutable=True, device_parallel_mutable=True,
+        batch_stream=True,
         description="batch-dynamic logarithmic-method forest "
                     "(incremental insert/delete, device-placed shards)",
     )
@@ -597,6 +598,16 @@ class DynamicEngine(EngineBase):
 
     def query(self, state, queries, k):
         return state.query(queries, k)
+
+    def query_stream(self, state, queries, k, emit):
+        # batch_stream: the forest has no per-row retirement map, so the
+        # whole batch is delivered in ONE emit when the fan-out returns —
+        # coarser latency than the streaming engine, but it lets KNNServer
+        # front a live mutable index (and inherit its device-loss
+        # degradation: stats.events ride back to the server).
+        d, i, stats = state.query(queries, k)
+        emit(np.arange(queries.shape[0], dtype=np.int64), d, i)
+        return d, i, stats
 
     def insert(self, state, points):
         return state.insert(points)

@@ -382,11 +382,15 @@ class KNNIndex:
         callback runs on the calling thread; keep it cheap (resolve
         futures, push to queues) or the rounds stall behind it.
 
-        Engines declaring ``caps.streaming=False`` raise the typed
-        ``StreamingUnsupported`` — pin ``engine="streaming"`` for an index
-        that accepts this call (``KNNServer`` does exactly that).
+        Engines declaring ``caps.batch_stream`` (the dynamic forest)
+        deliver the WHOLE batch in one ``on_complete`` call instead of
+        per-row retirement — coarser latency, same contract otherwise.
+        Engines declaring neither raise the typed ``StreamingUnsupported``
+        — pin ``engine="streaming"`` for an index that accepts this call
+        (``KNNServer`` does exactly that).
         """
-        if not self._engine.caps.streaming:
+        caps = self._engine.caps
+        if not (caps.streaming or caps.batch_stream):
             raise StreamingUnsupported(
                 f"engine {self.engine_name!r} cannot stream per-row "
                 "completions (caps.streaming=False); build with "
@@ -404,6 +408,12 @@ class KNNIndex:
             self._engine.query_stream, self._state, queries, k, on_complete
         )
         self._last_stats = stats
+        if getattr(stats, "events", ()):
+            # same contract as query(): degradation events (device-loss
+            # re-placement) surface where describe()/reasons readers look
+            self.plan = self.plan.replace(
+                reasons=self.plan.reasons + tuple(stats.events)
+            )
         return QueryResult(
             dists=dists, idx=idx, stats=stats, engine=self.plan.engine, k=k
         )

@@ -56,6 +56,15 @@ def stream_query(
     ``emit`` runs on the calling thread, interleaved with the round loop:
     keep it cheap (hand off to queues/events) or the rounds stall behind it.
     Requires the chunked engine tier (the host loop has no retirement map).
+
+    ABORT CONTRACT: an exception raised by ``emit`` propagates out of this
+    call, abandoning the remaining rounds — rows already emitted stay
+    delivered, rows not yet retired are simply never emitted.  The abort
+    leaves NO residual state: the tree, the engine and its jit caches are
+    untouched, so the next ``stream_query``/``query`` on the same index is
+    exact (``tests/test_serving_faults.py`` proves it, and ``KNNServer``'s
+    transient-fault retry depends on it: the retry re-enters the engine
+    with only the still-unresolved rows).
     """
     if bkd.engine != "chunked":
         raise ValueError(

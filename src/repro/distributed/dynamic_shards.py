@@ -41,6 +41,8 @@ import threading
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro import faults
+
 __all__ = [
     "ShardPlacer",
     "MergeWorker",
@@ -286,5 +288,20 @@ class DeviceFanout:
                 max_workers=self._workers, thread_name_prefix="dyn-fanout"
             )
         futures = [self._ex.submit(t) for t in thunks]
+        # Wait for EVERY group before raising: re-raising on the first
+        # failed future in submission order would leave later groups still
+        # scanning while the caller tears down / re-places shards, racing
+        # the device-loss recovery.  DeviceLost wins over other errors so
+        # the degradation machinery (shrink fan-out to survivors, retry)
+        # gets first shot; anything else propagates as-is.
+        errors: list = []
         for f in futures:
-            f.result()
+            try:
+                f.result()
+            except BaseException as e:  # noqa: BLE001 - collected, re-raised
+                errors.append(e)
+        if errors:
+            for e in errors:
+                if isinstance(e, faults.DeviceLost):
+                    raise e
+            raise errors[0]

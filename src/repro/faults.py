@@ -4,7 +4,8 @@ The crash-safety story (persist/ snapshots + WAL, background merges,
 multi-device placement) is only as good as its failure testing.  This
 module provides *injection points*: named call sites threaded through
 ``core/dynamic.py``, ``distributed/dynamic_shards.py``,
-``training/checkpoint.py`` and ``persist/`` that normally cost one global
+``training/checkpoint.py``, ``persist/`` and ``serving/knn_server.py``
+(the ``serve.*`` points) that normally cost one global
 boolean check, and that a chaos test (or an operator drill, via env vars)
 can arm to raise a typed fault at a precise boundary:
 
@@ -88,6 +89,9 @@ INJECTION_POINTS = (
     "merge.build",      # background carry merge, during the staging build
     "merge.swap",       # background carry merge, just before the atomic swap
     "device.scan",      # per-device query fan-out -> DeviceLost for that device
+    "serve.launch",     # KNNServer batch launch crashes before the query runs
+    "serve.stream",     # mid-stream failure: some rows delivered, then DeviceLost
+    "serve.stall",      # the scheduler's policy step dies (watchdog fail-fast)
 )
 
 
@@ -109,7 +113,7 @@ _active = False
 
 
 def _default_exc(point: str, ctx: Dict[str, Any]) -> BaseException:
-    if point == "device.scan":
+    if point in ("device.scan", "serve.stream"):
         return DeviceLost(
             f"injected device loss at {point!r}",
             device=ctx.get("device"),

@@ -25,9 +25,12 @@ from repro.serving.engine import Request, ServeEngine
 def _knn_main(args) -> None:
     """Open-loop Poisson kNN traffic against a KNNServer over a synthetic
     streaming-engine index; prints latency percentiles, the close-reason
-    tally, and the plan the server rode in on."""
+    tally, the typed-error tallies (shed / purged / failed) and the plan
+    the server rode in on.  ``--max-queue`` bounds admission so an offered
+    rate past capacity is answered with typed ``Overloaded`` rejections
+    instead of an unbounded backlog (docs/OPERATIONS.md runbook)."""
     from repro.api import IndexSpec, KNNIndex
-    from repro.serving.knn_server import KNNServer
+    from repro.serving.knn_server import KNNServer, Overloaded, ServingError
 
     rng = np.random.default_rng(args.seed)
     points = rng.normal(size=(args.n, args.d)).astype(np.float32)
@@ -37,24 +40,39 @@ def _knn_main(args) -> None:
     queries = rng.normal(size=(args.requests, args.d)).astype(np.float32)
     gaps = rng.exponential(1.0 / args.rate, size=args.requests)
 
+    shed = 0
+    errors: dict = {}
+    lat_ok = []
     with KNNServer(
         index, k=args.k, max_batch=args.max_batch,
         default_deadline_ms=args.deadline_ms,
+        max_queue=args.max_queue,
     ) as server:
         t0 = time.perf_counter()
         tickets = []
         for i in range(args.requests):
             time.sleep(gaps[i])
-            tickets.append(server.submit(queries[i]))
+            try:
+                tickets.append(server.submit(queries[i]))
+            except Overloaded:
+                shed += 1
         for t in tickets:
-            t.result(timeout=120.0)
+            try:
+                t.result(timeout=120.0)
+                lat_ok.append(t.info["latency_s"] * 1e3)
+            except ServingError as e:     # DeadlineExceeded, batch errors
+                name = type(e).__name__
+                errors[name] = errors.get(name, 0) + 1
         dt = time.perf_counter() - t0
         stats = server.stats()
-        lat = np.array([t.info["latency_s"] for t in tickets]) * 1e3
 
+    lat = np.array(lat_ok) if lat_ok else np.zeros(1)
     print(f"[serve --knn] {args.requests} requests in {dt:.2f}s "
-          f"({args.requests / dt:.1f} q/s, offered rate {args.rate:.0f}/s)")
-    print(f"  latency ms: p50={np.percentile(lat, 50):.2f} "
+          f"({len(lat_ok) / dt:.1f} q/s goodput, offered rate "
+          f"{args.rate:.0f}/s)")
+    print(f"  ok={len(lat_ok)} shed={shed} errors={errors or '{}'} "
+          f"(server: purged={stats['purged']} failed={stats['failed']})")
+    print(f"  latency ms (ok): p50={np.percentile(lat, 50):.2f} "
           f"p99={np.percentile(lat, 99):.2f} max={lat.max():.2f}")
     print(f"  batches={stats['batches']} close reasons: "
           f"{stats['batches_by_close']} buckets={stats['buckets']}")
@@ -81,6 +99,10 @@ def main(argv=None):
                     help="Poisson arrival rate (req/s)")
     ap.add_argument("--max-batch", type=int, default=256)
     ap.add_argument("--deadline-ms", type=float, default=50.0)
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the admission queue: submits past this "
+                         "depth are shed with the typed Overloaded "
+                         "(default: unbounded)")
     args = ap.parse_args(argv)
 
     if args.knn:

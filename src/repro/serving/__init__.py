@@ -1,9 +1,28 @@
 """Serving substrate: batched decode engine, kNN-LM retrieval, and the
 online kNN request front door (admission queue + rung-bucket
-micro-batching + SLA-aware scheduling — docs/SERVING.md)."""
+micro-batching + SLA-aware scheduling + overload/fault hardening —
+docs/SERVING.md)."""
 
 from repro.serving.engine import ServeEngine
-from repro.serving.knn_server import KNNServer, Ticket
+from repro.serving.knn_server import (
+    Cancelled,
+    DeadlineExceeded,
+    KNNServer,
+    Overloaded,
+    SchedulerDied,
+    ServingError,
+    Ticket,
+)
 from repro.serving.knnlm import KNNLM
 
-__all__ = ["ServeEngine", "KNNLM", "KNNServer", "Ticket"]
+__all__ = [
+    "ServeEngine",
+    "KNNLM",
+    "KNNServer",
+    "Ticket",
+    "ServingError",
+    "Overloaded",
+    "DeadlineExceeded",
+    "SchedulerDied",
+    "Cancelled",
+]

@@ -187,10 +187,32 @@ class KNNLM:
     def _retrieve(self, q: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         """kNN for the query rows — through the serving front door when one
         is attached (each row rides the admission queue and coalesces with
-        other in-flight traffic), directly otherwise."""
+        other in-flight traffic), directly otherwise.
+
+        A bounded ``max_queue`` server may shed under overload: honor the
+        backpressure by backing off for the server's own wait estimate and
+        retrying a few times before giving up — an LM decode step is a
+        closed-loop caller, so waiting IS the correct load response.
+        """
         if self._server is None:
             return self.index.query(q, k=self.k)
-        tickets = self._server.submit_many(q)
+        from repro.serving.knn_server import Overloaded
+
+        tickets = []
+        for row in q:
+            for _attempt in range(20):
+                try:
+                    tickets.append(self._server.submit(row))
+                    break
+                except Overloaded as e:
+                    import time as _time
+
+                    _time.sleep(min(max(e.est_wait_s, 0.001), 0.25))
+            else:
+                raise Overloaded(
+                    "kNN server stayed overloaded through 20 backoff "
+                    "retries; shed this decode step"
+                )
         pairs = [t.result(timeout=60.0) for t in tickets]
         return (
             np.stack([d for d, _ in pairs]),

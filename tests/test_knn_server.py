@@ -7,11 +7,18 @@ the end-to-end path (out-of-order ticket resolution, parity vs brute, the
 queue-starvation regression).
 """
 
+import types
+
 import numpy as np
 import pytest
 
 from repro.api import IndexSpec, KNNIndex, StreamingUnsupported, knn_brute
-from repro.serving.knn_server import KNNServer
+from repro.serving.knn_server import (
+    Cancelled,
+    DeadlineExceeded,
+    KNNServer,
+    Overloaded,
+)
 
 N, D, K = 4000, 8, 10
 
@@ -82,8 +89,10 @@ class TestBatchClosePolicy:
         clock = FakeClock()
         srv = KNNServer(idx, k=K, max_batch=64, clock=clock, start=False)
         assert srv.buckets == (32, 64)      # compaction ladder of 64
-        srv.submit_many(_queries(40), deadline_ms=1.0)
-        clock.advance(1.0)
+        # deadline-close fires once slack (deadline - now - est) runs out,
+        # BEFORE the deadline itself — no request gets purged here
+        srv.submit_many(_queries(40), deadline_ms=1000.0)
+        clock.advance(0.99)
         assert srv.pump_once() == 40
         assert "size=40/64" in srv.reasons[-1]
         stats = srv.stats()
@@ -126,12 +135,194 @@ class TestBatchClosePolicy:
             np.testing.assert_allclose(res_a[r][0], bd[r], rtol=1e-4, atol=1e-4)
 
 
+class _StubIndex:
+    """Minimal index standing in for engine behavior tests: registered
+    engine name (so the caps gate passes), injectable ``query_stream``."""
+
+    engine_name = "streaming"
+    d = D
+    spec = types.SimpleNamespace(k_hint=K)
+
+    def __init__(self, behavior):
+        self._behavior = behavior
+
+    def warm(self, m, k):
+        pass
+
+    def query_stream(self, qs, k, *, on_complete):
+        return self._behavior(qs, k, on_complete)
+
+
+def _stub_serve_all(qs, k, emit):
+    m = qs.shape[0]
+    emit(np.arange(m), np.zeros((m, k), np.float32),
+         np.zeros((m, k), np.int64))
+    return types.SimpleNamespace(stats=types.SimpleNamespace(events=()))
+
+
+class TestAdmissionControl:
+    def test_queue_full_sheds_at_exact_max_queue(self, index):
+        _, idx = index
+        clock = FakeClock()
+        srv = KNNServer(idx, k=K, max_batch=32, max_queue=4, clock=clock,
+                        start=False)
+        tickets = [srv.submit(q, deadline_ms=10_000.0)
+                   for q in _queries(4)]
+        with pytest.raises(Overloaded) as ei:
+            srv.submit(_queries(1)[0], deadline_ms=10_000.0)
+        assert ei.value.queue_depth == 4
+        assert ei.value.est_wait_s > 0.0
+        assert srv.reasons[-1] == (
+            "shed: queue full (4/4); est_wait_ms=20.00"
+        )
+        assert srv.stats()["shed"] == 1
+        # serving the backlog reopens admission
+        assert srv.pump_once(force=True) == 4
+        assert all(t.done() for t in tickets)
+        t = srv.submit(_queries(1)[0], deadline_ms=10_000.0)
+        assert not t.done()
+        srv.close()
+
+    def test_purge_expired_oldest_first(self, index):
+        _, idx = index
+        clock = FakeClock()
+        srv = KNNServer(idx, k=K, max_batch=32, clock=clock, start=False)
+        ta = srv.submit(_queries(1)[0], deadline_ms=10.0)    # rid 0
+        tb = srv.submit(_queries(1)[0], deadline_ms=5.0)     # rid 1
+        tc = srv.submit(_queries(1)[0], deadline_ms=10_000.0)
+        clock.advance(0.02)
+        srv.pump_once()
+        # both expired requests fail typed, most-late (tb) purged first
+        purges = [r for r in srv.reasons if r.startswith("purge ")]
+        assert purges == [
+            "purge rid=1: deadline exceeded 15.00ms before launch",
+            "purge rid=0: deadline exceeded 10.00ms before launch",
+        ]
+        for t, late in ((ta, 0.010), (tb, 0.015)):
+            exc = t.exception(timeout=0)
+            assert isinstance(exc, DeadlineExceeded)
+            assert exc.rid == t.rid
+            assert exc.late_s == pytest.approx(late)
+            with pytest.raises(DeadlineExceeded):
+                t.result(timeout=0)
+        assert not tc.done()            # unexpired request still queued
+        assert srv.stats()["purged"] == 2
+        assert srv.stats()["outstanding"] == 1
+        srv.drain()
+        assert tc.done() and tc.exception(timeout=0) is None
+        srv.close()
+
+    def test_purge_can_be_disabled(self, index):
+        _, idx = index
+        clock = FakeClock()
+        srv = KNNServer(idx, k=K, max_batch=32, clock=clock, start=False,
+                        purge_expired=False)
+        t = srv.submit(_queries(1)[0], deadline_ms=1.0)
+        clock.advance(5.0)
+        assert srv.pump_once() == 1     # served late instead of purged
+        d, _ = t.result(timeout=0)
+        assert d.shape == (K,)
+        assert srv.stats()["purged"] == 0
+        srv.close()
+
+    def test_trace_replay_pins_reason_strings(self, index):
+        _, idx = index
+
+        def replay():
+            clock = FakeClock()
+            srv = KNNServer(idx, k=K, max_batch=32, max_queue=2,
+                            clock=clock, start=False)
+            srv.submit(_queries(1)[0], deadline_ms=10.0)         # rid 0
+            srv.submit(_queries(1)[0], deadline_ms=5.0)          # rid 1
+            with pytest.raises(Overloaded):
+                srv.submit(_queries(1)[0], deadline_ms=5.0)      # shed
+            clock.advance(0.02)
+            assert srv.pump_once() == 0                          # purges
+            srv.submit(_queries(1)[0], deadline_ms=10_000.0)     # rid 2
+            t3 = srv.submit(_queries(1)[0], deadline_ms=10_000.0)
+            assert t3.cancel()
+            assert srv.pump_once(force=True) == 1
+            reasons = srv.reasons
+            srv.close()
+            return reasons
+
+        expected_tail = [
+            "shed: queue full (2/2); est_wait_ms=20.00",
+            "purge rid=1: deadline exceeded 15.00ms before launch",
+            "purge rid=0: deadline exceeded 10.00ms before launch",
+            "cancel rid=3: before launch",
+            "batch 0: close=drain size=1/32",
+        ]
+        a, b = replay(), replay()
+        assert a == b
+        assert list(a[-5:]) == expected_tail
+
+
+class TestTicketLifecycle:
+    def test_cancel_before_launch(self, index):
+        _, idx = index
+        clock = FakeClock()
+        srv = KNNServer(idx, k=K, max_batch=32, clock=clock, start=False)
+        t0 = srv.submit(_queries(1)[0], deadline_ms=10_000.0)
+        t1 = srv.submit(_queries(1)[0], deadline_ms=10_000.0)
+        assert t0.cancel() is True
+        assert t0.cancel() is False             # already resolved
+        assert t0.cancelled() and t0.done()
+        assert isinstance(t0.exception(timeout=0), Cancelled)
+        with pytest.raises(Cancelled):
+            t0.result(timeout=0)
+        # the cancelled request never occupies a batch slot
+        assert srv.pump_once(force=True) == 1
+        assert t1.done() and t1.exception(timeout=0) is None
+        stats = srv.stats()
+        assert stats["cancelled"] == 1 and stats["completed"] == 1
+        assert stats["outstanding"] == 0
+        assert "cancel rid=0: before launch" in srv.reasons
+        srv.close()
+
+    def test_cancel_mid_batch_discards_result(self):
+        holder = {}
+
+        def behavior(qs, k, emit):
+            holder["t0"].cancel()       # races the in-flight batch
+            return _stub_serve_all(qs, k, emit)
+
+        srv = KNNServer(_StubIndex(behavior), k=K, max_batch=32,
+                        clock=FakeClock(), start=False)
+        holder["t0"] = srv.submit(np.zeros(D), deadline_ms=10_000.0)
+        t1 = srv.submit(np.ones(D), deadline_ms=10_000.0)
+        assert srv.pump_once(force=True) == 2   # both taken into the batch
+        assert holder["t0"].cancelled()
+        with pytest.raises(Cancelled):
+            holder["t0"].result(timeout=0)
+        assert t1.exception(timeout=0) is None
+        stats = srv.stats()
+        assert stats["cancelled"] == 1 and stats["completed"] == 1
+        assert stats["outstanding"] == 0
+        assert ("cancel rid=0: mid-batch; in-flight result will be "
+                "discarded") in srv.reasons
+        srv.close()
+
+    def test_exception_returns_none_for_success(self, index):
+        _, idx = index
+        srv = KNNServer(idx, k=K, max_batch=32, clock=FakeClock(),
+                        start=False)
+        t = srv.submit(_queries(1)[0], deadline_ms=10_000.0)
+        with pytest.raises(TimeoutError):
+            t.exception(timeout=0)      # unresolved: blocks, then raises
+        srv.pump_once(force=True)
+        assert t.exception(timeout=0) is None
+        srv.close()
+
+
 class TestThreadedServer:
     def test_out_of_order_completion_parity(self, index):
         pts, idx = index
         q = _queries(100, seed=9)
-        with KNNServer(idx, k=K, max_batch=32,
-                       default_deadline_ms=20.0) as srv:
+        # purge_expired=False: this test measures parity of LATE
+        # completions under a deliberately tight deadline
+        with KNNServer(idx, k=K, max_batch=32, default_deadline_ms=20.0,
+                       purge_expired=False) as srv:
             tickets = srv.submit_many(q)
             pairs = [t.result(timeout=60.0) for t in tickets]
             stats = srv.stats()
@@ -150,7 +341,7 @@ class TestThreadedServer:
         # the rung to fill
         _, idx = index
         with KNNServer(idx, k=K, max_batch=256,
-                       default_deadline_ms=40.0) as srv:
+                       default_deadline_ms=250.0) as srv:
             t = srv.submit(_queries(1, seed=13)[0])
             d, i = t.result(timeout=30.0)
         assert d.shape == (K,) and i.shape == (K,)
@@ -160,7 +351,7 @@ class TestThreadedServer:
     def test_ticket_info_records_serving_metadata(self, index):
         _, idx = index
         with KNNServer(idx, k=K, max_batch=32,
-                       default_deadline_ms=25.0) as srv:
+                       default_deadline_ms=150.0) as srv:
             t = srv.submit(_queries(1, seed=17)[0])
             t.result(timeout=30.0)
         assert t.info["latency_s"] >= t.info["wait_s"] >= 0.0

@@ -1,0 +1,475 @@
+"""Serving-path chaos: the no-hung-ticket invariant under injected faults.
+
+Four layers:
+
+  * CRASH ISOLATION drills: the ``serve.launch`` / ``serve.stream`` /
+    ``serve.stall`` injection points (``repro.faults``) kill the batch
+    launch, the mid-stream delivery, and the scheduler's policy step —
+    transient faults retry (only the still-unresolved rows), poisoned
+    batches fail their own tickets with the typed error, a dead scheduler
+    fail-fasts everything via the watchdog;
+  * ESTIMATOR guards: faulted/retried/degraded batches must not poison the
+    EWMA service-time estimate, and a clean outlier sample is clamped;
+  * the SEEDED CHAOS SWEEP: every ``serve.*`` point armed in turn (once
+    and sticky, fire count derived from ``REPRO_FAULT_SEED``) under live
+    threaded traffic with shedding and cancellation mixed in — 100% of
+    submitted tickets must resolve with a result, a typed error, or a
+    cancellation;
+  * DEVICE-LOSS degraded serving: a device dies mid-traffic under a
+    ``KNNServer`` fronting the mutable dynamic forest — answers stay
+    exact from the survivors, degradation lands in ``Ticket.info`` and
+    ``server.reasons`` (subprocess drill forcing 4 host devices, plus an
+    in-process variant behind the ``multi_device`` skip for the ci.sh
+    chaos leg).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+import types
+
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.api import IndexSpec, KNNIndex, knn_brute
+from repro.serving.knn_server import (
+    KNNServer,
+    Overloaded,
+    SchedulerDied,
+)
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+SEED = int(os.environ.get("REPRO_FAULT_SEED", "0"))
+
+N, D, K = 4000, 8, 10
+
+
+def _device_count() -> int:
+    import jax
+
+    return jax.device_count()
+
+
+multi_device = pytest.mark.skipif(
+    _device_count() < 4,
+    reason="needs >= 4 devices (ci.sh chaos gate forces 4 host devices)",
+)
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    faults.reset()
+    yield
+    faults.reset()
+
+
+@pytest.fixture(scope="module")
+def index():
+    rng = np.random.default_rng(0)
+    pts = rng.normal(size=(N, D)).astype(np.float32)
+    idx = KNNIndex.build(
+        pts, spec=IndexSpec(engine="streaming", height=4, k_hint=K)
+    )
+    return pts, idx
+
+
+def _queries(m, seed=1):
+    return np.random.default_rng(seed).normal(size=(m, D)).astype(np.float32)
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+class _StubIndex:
+    engine_name = "streaming"
+    d = D
+    spec = types.SimpleNamespace(k_hint=K)
+
+    def __init__(self, behavior):
+        self._behavior = behavior
+
+    def warm(self, m, k):
+        pass
+
+    def query_stream(self, qs, k, *, on_complete):
+        return self._behavior(qs, k, on_complete)
+
+
+def _stub_serve_all(qs, k, emit):
+    m = qs.shape[0]
+    emit(np.arange(m), np.zeros((m, k), np.float32),
+         np.zeros((m, k), np.int64))
+    return types.SimpleNamespace(stats=types.SimpleNamespace(events=()))
+
+
+def _policy_server(idx, **kw):
+    kw.setdefault("clock", FakeClock())
+    kw.setdefault("start", False)
+    kw.setdefault("retry_backoff_s", 0.0)
+    kw.setdefault("sleep", lambda s: None)
+    return KNNServer(idx, k=K, max_batch=32, **kw)
+
+
+class TestCrashIsolation:
+    def test_transient_launch_fault_retries_and_serves(self, index):
+        pts, idx = index
+        srv = _policy_server(idx)
+        q = _queries(4, seed=3)
+        tickets = srv.submit_many(q, deadline_ms=10_000.0)
+        faults.arm("serve.launch", after=1)          # one transient blip
+        assert srv.pump_once(force=True) == 4
+        bd, _ = knn_brute(q, pts, K)
+        for r, t in enumerate(tickets):
+            d, _i = t.result(timeout=0)
+            np.testing.assert_allclose(d, bd[r], rtol=1e-4, atol=1e-4)
+        stats = srv.stats()
+        assert stats["retries"] == 1 and stats["failed"] == 0
+        assert any("attempt 1 failed" in r and "retrying 4 request(s)" in r
+                   for r in srv.reasons)
+        srv.close()
+
+    def test_sticky_launch_fault_fails_batch_not_server(self, index):
+        pts, idx = index
+        srv = _policy_server(idx)
+        tickets = srv.submit_many(_queries(3, seed=4), deadline_ms=10_000.0)
+        faults.arm("serve.launch", sticky=True)
+        assert srv.pump_once(force=True) == 3
+        for t in tickets:
+            exc = t.exception(timeout=0)
+            assert isinstance(exc, faults.FaultError)
+            assert t.info["error"] == "FaultError"
+            with pytest.raises(faults.FaultError):
+                t.result(timeout=0)
+        stats = srv.stats()
+        assert stats["failed"] == 3 and stats["outstanding"] == 0
+        assert stats["retries"] == srv.batch_retries
+        assert any("FAILED after 3 attempt(s)" in r for r in srv.reasons)
+        # the scheduler survived: disarm and the next batch serves
+        faults.reset()
+        t = srv.submit(_queries(1, seed=5)[0], deadline_ms=10_000.0)
+        assert srv.pump_once(force=True) == 1
+        assert t.exception(timeout=0) is None
+        srv.close()
+
+    def test_mid_stream_fault_retries_unresolved_rows(self, index):
+        # a real streaming batch dies at its FIRST delivery: nothing is
+        # resolved, the retry re-runs the engine (proving an aborted
+        # stream leaves it usable) and parity holds end-to-end
+        pts, idx = index
+        srv = _policy_server(idx)
+        q = _queries(8, seed=6)
+        tickets = srv.submit_many(q, deadline_ms=10_000.0)
+        faults.arm("serve.stream", after=1)
+        assert srv.pump_once(force=True) == 8
+        bd, _ = knn_brute(q, pts, K)
+        for r, t in enumerate(tickets):
+            d, _i = t.result(timeout=0)
+            np.testing.assert_allclose(d, bd[r], rtol=1e-4, atol=1e-4)
+        assert srv.stats()["retries"] >= 1
+        srv.close()
+
+    def test_partial_delivery_retries_only_remainder(self):
+        # two-chunk stub stream: chunk 1 resolves rows 0-3, the second
+        # delivery faults — the retry must re-serve ONLY the 4 unresolved
+        # rows (the stub always sees the zero-padded 32-bucket; what
+        # matters is which tickets were already done at re-entry)
+        tickets: list = []
+        done_at_entry: list = []
+
+        def behavior(qs, k, emit):
+            done_at_entry.append([t.done() for t in tickets])
+            emit(np.arange(4), np.full((4, k), 1.0, np.float32),
+                 np.zeros((4, k), np.int64))
+            m = qs.shape[0]
+            emit(np.arange(4, m), np.full((m - 4, k), 2.0, np.float32),
+                 np.zeros((m - 4, k), np.int64))
+            return types.SimpleNamespace(
+                stats=types.SimpleNamespace(events=())
+            )
+
+        srv = _policy_server(_StubIndex(behavior))
+        tickets.extend(
+            srv.submit(np.zeros(D), deadline_ms=10_000.0) for _ in range(8)
+        )
+        faults.arm("serve.stream", after=2)   # second delivery dies
+        assert srv.pump_once(force=True) == 8
+        assert all(t.done() for t in tickets)
+        assert all(t.exception(timeout=0) is None for t in tickets)
+        # attempt 1 entered with nothing resolved; the retry entered with
+        # exactly rows 0-3 already resolved and only served the remainder
+        assert done_at_entry[0] == [False] * 8
+        assert done_at_entry[1] == [True] * 4 + [False] * 4
+        # the retry's chunk-1 rows map to tickets 4-7: value 1.0, not 2.0
+        assert all(
+            float(t.result(timeout=0)[0][0]) == 1.0 for t in tickets[4:]
+        )
+        stats = srv.stats()
+        assert stats["completed"] == 8 and stats["retries"] == 1
+        srv.close()
+
+    def test_raising_engine_resolves_tickets_not_hangs(self):
+        # regression (satellite): an engine exception used to kill the
+        # scheduler thread silently, stranding every Ticket forever
+        broken = {"on": True}
+
+        def behavior(qs, k, emit):
+            if broken["on"]:
+                raise ValueError("engine exploded")
+            return _stub_serve_all(qs, k, emit)
+
+        with KNNServer(_StubIndex(behavior), k=K, max_batch=32,
+                       default_deadline_ms=30.0,
+                       retry_backoff_s=0.001) as srv:
+            t = srv.submit(np.zeros(D))
+            exc = t.exception(timeout=30.0)      # must NOT hang
+            assert isinstance(exc, ValueError)   # non-transient: no retry
+            assert srv.stats()["retries"] == 0
+            # one poisoned batch does not kill the loop
+            broken["on"] = False
+            t2 = srv.submit(np.ones(D))
+            assert t2.exception(timeout=30.0) is None
+            stats = srv.stats()
+            assert stats["failed"] == 1 and stats["completed"] == 1
+            assert not stats["dead"]
+
+    def test_scheduler_stall_watchdog_fail_fasts(self, index):
+        _, idx = index
+        srv = _policy_server(idx)
+        tickets = srv.submit_many(_queries(3, seed=7), deadline_ms=10_000.0)
+        faults.arm("serve.stall")
+        with pytest.raises(faults.FaultError):
+            srv.pump_once(force=True)
+        for t in tickets:
+            assert isinstance(t.exception(timeout=0), SchedulerDied)
+        stats = srv.stats()
+        assert stats["dead"] and stats["outstanding"] == 0
+        assert any(r.startswith("watchdog: scheduler died")
+                   for r in srv.reasons)
+        with pytest.raises(SchedulerDied):
+            srv.submit(_queries(1)[0])
+        with pytest.raises(SchedulerDied):
+            srv.pump_once()
+        srv.close()                              # must not hang
+
+    def test_scheduler_stall_threaded_watchdog(self, index):
+        _, idx = index
+        faults.arm("serve.stall", sticky=True)
+        with KNNServer(idx, k=K, max_batch=32,
+                       default_deadline_ms=30.0) as srv:
+            t = srv.submit(_queries(1, seed=8)[0])
+            exc = t.exception(timeout=30.0)      # watchdog, not a hang
+            assert isinstance(exc, SchedulerDied)
+            assert srv.stats()["dead"]
+            with pytest.raises(SchedulerDied):
+                srv.submit(_queries(1)[0])
+
+
+class TestEstimatorGuards:
+    def test_faulted_batch_never_feeds_estimate(self):
+        clock = FakeClock()
+        calls = {"n": 0}
+
+        def behavior(qs, k, emit):
+            calls["n"] += 1
+            clock.advance(10.0)          # an incident-sized wall time
+            if calls["n"] == 1:
+                raise faults.FaultError("transient blip")
+            return _stub_serve_all(qs, k, emit)
+
+        srv = _policy_server(_StubIndex(behavior), clock=clock)
+        srv.submit(np.zeros(D), deadline_ms=1e9)
+        assert srv.pump_once(force=True) == 1
+        # seeded 20ms estimate survives the 10s faulted/retried batch
+        assert srv.stats()["est_service_ms"][32] == pytest.approx(20.0)
+        assert any("SKIPPED" in r for r in srv.reasons)
+        srv.close()
+
+    def test_clean_outlier_sample_is_clamped(self):
+        clock = FakeClock()
+
+        def behavior(qs, k, emit):
+            clock.advance(10.0)          # 500x the 20ms estimate
+            return _stub_serve_all(qs, k, emit)
+
+        srv = _policy_server(_StubIndex(behavior), clock=clock)
+        srv.submit(np.zeros(D), deadline_ms=1e9)
+        assert srv.pump_once(force=True) == 1
+        # EWMA absorbs at most 8x the prior estimate:
+        # 0.6*20ms + 0.4*160ms = 76ms, not 0.6*20ms + 0.4*10000ms
+        assert srv.stats()["est_service_ms"][32] == pytest.approx(76.0)
+        assert any("clamped" in r for r in srv.reasons)
+        srv.close()
+
+    def test_aborted_stream_leaves_index_usable(self, index):
+        # emit raising aborts the round loop mid-stream; the engine must
+        # come back exact on the next query (the retry path depends on it)
+        pts, idx = index
+        q = _queries(8, seed=9)
+
+        def bad_emit(rows, dists, ix):
+            raise RuntimeError("consumer exploded")
+
+        with pytest.raises(RuntimeError, match="consumer exploded"):
+            idx.query_stream(q, K, on_complete=bad_emit)
+        d, _i = idx.query(q, k=K)
+        bd, _ = knn_brute(q, pts, K)
+        np.testing.assert_allclose(d, bd, rtol=1e-4, atol=1e-4)
+
+
+class TestServeChaosSweep:
+    """Every serve.* point armed in turn under live threaded traffic.
+
+    The invariant being proven: 100% of submitted tickets RESOLVE — a
+    result, a typed error, or a cancellation; zero hangs.  Fire counts
+    and deadlines derive from REPRO_FAULT_SEED (ci.sh sweeps it), so CI
+    keeps exploring new interleavings deterministically.
+    """
+
+    @pytest.mark.parametrize("sticky", [False, True])
+    @pytest.mark.parametrize(
+        "point", ["serve.launch", "serve.stream", "serve.stall"]
+    )
+    def test_no_ticket_ever_hangs(self, index, point, sticky):
+        _, idx = index
+        case = faults.INJECTION_POINTS.index(point) * 2 + int(sticky)
+        rng = np.random.default_rng([SEED, case])
+        nreq = 40
+        queries = rng.normal(size=(nreq, D)).astype(np.float32)
+        faults.arm(point, after=int(rng.integers(1, 6)), sticky=sticky)
+        srv = KNNServer(
+            idx, k=K, max_batch=32, max_queue=16,
+            default_deadline_ms=float(rng.choice([15.0, 60.0])),
+            retry_backoff_s=0.001,
+        )
+        submitted, shed = [], 0
+        for i in range(nreq):
+            try:
+                t = srv.submit(queries[i])
+            except Overloaded:
+                shed += 1
+                continue
+            except SchedulerDied:
+                break
+            submitted.append(t)
+            if rng.random() < 0.1:
+                t.cancel()
+        for t in submitted:
+            # TimeoutError here IS the invariant violation (a hung ticket)
+            t.exception(timeout=60.0)
+        assert all(t.done() for t in submitted)
+        stats = srv.stats()
+        assert stats["outstanding"] == 0
+        resolved = (stats["completed"] + stats["failed"] + stats["purged"]
+                    + stats["cancelled"])
+        assert resolved == len(submitted)
+        assert shed + len(submitted) <= nreq
+        srv.close()
+
+
+def _degraded_serving_script(threaded: bool) -> str:
+    return textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import numpy as np
+        import jax
+        jax.config.update("jax_cpu_enable_async_dispatch", False)
+        from repro import faults
+        from repro.api import IndexSpec, KNNIndex, knn_brute
+        from repro.serving.knn_server import KNNServer
+
+        rng = np.random.default_rng(0)
+        d, k = 5, 5
+        pts = rng.normal(size=(12288, d)).astype(np.float32)
+        idx = KNNIndex.build(
+            pts[:8192],
+            spec=IndexSpec(mutable=True, buffer_size=1024, k_hint=k),
+        )
+        for lo in range(8192, 12288, 1024):
+            idx.insert(pts[lo:lo + 1024])
+        idx.drain(timeout=120)
+        st = idx._state
+        devs = jax.devices()
+        victims = [
+            i for i, dev in enumerate(devs)
+            if any(s.device is dev for s in st._shards)
+        ]
+        assert len({{str(s.device) for s in st._shards}}) >= 2
+        victim = victims[-1]
+
+        srv = KNNServer(
+            idx, k=k, max_batch=32,
+            default_deadline_ms={250.0 if threaded else 10_000.0},
+            start={threaded},
+        )
+        q = rng.normal(size=(16, d)).astype(np.float32)
+
+        # warm serving round trip BEFORE the loss
+        t0 = srv.submit(q[0]);
+        if not {threaded}: srv.pump_once(force=True)
+        t0.result(timeout=120.0)
+
+        faults.arm("device.scan", device_index=victim, sticky=True)
+        tickets = [srv.submit(row) for row in q]
+        if not {threaded}:
+            srv.pump_once(force=True)
+        srv.drain(timeout=120.0)
+        faults.reset()
+
+        bd, _ = knn_brute(q, pts, k)
+        for r, t in enumerate(tickets):
+            dd, di = t.result(timeout=0.1)
+            assert np.allclose(dd, bd[r], rtol=1e-4, atol=1e-4), (
+                "degraded serving != exact"
+            )
+            ev = t.info.get("degraded")
+            assert ev and any("device loss" in e for e in ev), t.info
+        assert any("degraded" in r and "device loss" in r
+                   for r in srv.reasons)
+        assert srv.stats()["degraded_batches"] >= 1
+        assert not any(s.device is devs[victim] for s in st._shards)
+
+        # the shrunken fan-out keeps serving
+        t2 = srv.submit(q[0])
+        if not {threaded}: srv.pump_once(force=True)
+        dd, _ = t2.result(timeout=120.0)
+        assert np.allclose(dd, bd[0], rtol=1e-4, atol=1e-4)
+        assert "degraded" not in t2.info
+        srv.close()
+        print("DEGRADED_SERVING_OK")
+    """)
+
+
+def test_device_loss_degraded_serving_subprocess():
+    """Tier-1 acceptance drill: a shard-bearing device dies mid-traffic
+    under a KNNServer fronting the mutable forest — tickets keep resolving
+    with exact survivor-side answers, degradation lands in Ticket.info and
+    server.reasons, and the server keeps serving afterwards."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _degraded_serving_script(threaded=False)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, f"subprocess failed:\n{out.stderr[-3000:]}"
+    assert "DEGRADED_SERVING_OK" in out.stdout
+
+
+@multi_device
+def test_device_loss_degraded_serving_threaded_inprocess():
+    """In-process threaded variant for the ci.sh chaos leg (4 forced host
+    devices): the live scheduler thread, not pump_once, rides through the
+    device loss.  The script's env/config lines are no-ops in-process
+    (devices are already forced by the leg's XLA_FLAGS)."""
+    exec(compile(_degraded_serving_script(threaded=True),
+                 "<degraded-serving>", "exec"), {})
