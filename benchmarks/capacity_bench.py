@@ -1,0 +1,173 @@
+"""Quantized-slab capacity benchmark (points per fixed device budget).
+
+The capacity claim of the quantized leaf store: at the same tree geometry,
+int8 slabs (per-leaf affine codes + bit-packed dead mask) hold >= 3x the
+points per resident device byte of fp32 slabs, and fp16 (plain cast, dead
+mask only) holds >= 1.9x — while the exact fp32 re-rank keeps neighbor
+INDICES bit-identical to the fp32 brute-force oracle.  Residency is
+MEASURED (``KNNIndex.resident_bytes`` — slabs + dequantize metadata), never
+estimated, so the ratios are what a device would actually see.
+
+Two proofs per run:
+
+  ratio    resident_fp32 / resident_prec at identical (n, d, height) —
+           the points-per-byte multiplier;
+  budget   with the fp32 index's measured residency as the budget, build
+           an int8 index over ``ratio``-floor x as many points and show it
+           still fits the budget device-resident, answering bit-exactly.
+
+Also asserted: the recompile-free guarantee per precision — after
+``warm()``, varied query batches must add zero fused-round compiles
+(``chunk_round_cache_size``), for fp32, fp16 AND int8 stores.
+
+Emits ``BENCH_capacity.json`` at the repo root (canonical full-scale runs
+only; smoke runs never clobber the trajectory).  Run via
+``python -m benchmarks.run --only capacity`` or directly:
+``python -m benchmarks.capacity_bench --scale 0.25`` (the CI smoke —
+exits non-zero when a capacity bar or the recompile-free guarantee fails).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from benchmarks import common
+
+N, D, M, HEIGHT, K = 20_000, 8, 2_000, 7, 10
+BARS = {"fp16": 1.9, "int8": 3.0}
+
+
+def run(scale: float = 1.0) -> None:
+    from repro.api import (
+        IndexSpec, KNNIndex, chunk_round_cache_size, knn_brute,
+    )
+
+    n, m = max(4096, int(N * scale)), max(512, int(M * scale))
+    rng = np.random.default_rng(0)
+    pts = rng.normal(size=(n, D)).astype(np.float32)
+    q = rng.normal(size=(m, D)).astype(np.float32)
+    q2 = rng.normal(size=(m, D)).astype(np.float32)
+    bd, bi = knn_brute(q, pts, K)
+
+    tiers = {}
+    for prec in ("fp32", "fp16", "int8"):
+        idx = KNNIndex.build(pts, spec=IndexSpec(
+            engine="chunked", height=HEIGHT, precision=prec, k_hint=K))
+        idx.warm(m, k=K)
+        idx.query(q, k=K)
+        compiles_warm = chunk_round_cache_size()
+        t = common.timeit(lambda: idx.query(q, k=K), repeat=3, warmup=0)
+        res2 = idx.query(q2, k=K)
+        compiles_after = chunk_round_cache_size()
+        res = idx.query(q, k=K)
+        exact = bool(
+            np.array_equal(res.idx, bi)
+            and np.allclose(res.dists, bd, rtol=1e-4, atol=1e-4)
+        )
+        rb = idx.resident_bytes()
+        tiers[prec] = {
+            "resident_bytes": rb,
+            "points_per_mb": n / (rb / (1 << 20)),
+            "exact": exact,
+            "query_s": t,
+            "qps": m / t,
+            "round_compiles_after_warmup": compiles_warm,
+            "round_compiles_after_varied_flushes": compiles_after,
+            "recompile_free": compiles_warm == compiles_after,
+        }
+        del res2
+        common.row(f"capacity/{prec}_query", t,
+                   f"n={n};d={D};h={HEIGHT};k={K};resident={rb}B")
+
+    fp32_rb = tiers["fp32"]["resident_bytes"]
+    for prec in ("fp16", "int8"):
+        tiers[prec]["capacity_x"] = fp32_rb / tiers[prec]["resident_bytes"]
+    tiers["fp32"]["capacity_x"] = 1.0
+
+    # budget proof: the fp32 residency becomes the budget; an int8 index
+    # over floor(capacity_x) x the points must fit it device-resident and
+    # stay bit-exact against its own brute oracle
+    mult = int(tiers["int8"]["capacity_x"])
+    n_big = n * mult
+    pts_big = rng.normal(size=(n_big, D)).astype(np.float32)
+    big = KNNIndex.build(pts_big, spec=IndexSpec(
+        engine="chunked", height=HEIGHT, precision="int8", k_hint=K))
+    big_rb = big.resident_bytes()
+    res_big = big.query(q, k=K)
+    bd_big, bi_big = knn_brute(q, pts_big, K)
+    budget_proof = {
+        "budget_bytes": fp32_rb,
+        "fp32_points": n,
+        "int8_points": n_big,
+        "int8_resident_bytes": big_rb,
+        "fits": bool(big_rb <= fp32_rb),
+        "exact": bool(np.array_equal(res_big.idx, bi_big)),
+    }
+
+    result = {
+        "shape": {"n": n, "d": D, "m": m, "height": HEIGHT, "k": K},
+        "bars": BARS,
+        "tiers": tiers,
+        "budget_proof": budget_proof,
+    }
+
+    failures = []
+    for prec, bar in BARS.items():
+        if tiers[prec]["capacity_x"] < bar:
+            failures.append(
+                f"{prec} capacity {tiers[prec]['capacity_x']:.2f}x < "
+                f"bar {bar}x"
+            )
+    for prec, t in tiers.items():
+        if not t["exact"]:
+            failures.append(f"{prec} neighbor indices diverged from brute")
+        if not t["recompile_free"]:
+            failures.append(
+                f"{prec} fused round recompiled across flushes: "
+                f"{t['round_compiles_after_warmup']} -> "
+                f"{t['round_compiles_after_varied_flushes']}"
+            )
+    if not budget_proof["fits"]:
+        failures.append(
+            f"int8 budget proof failed: {big_rb}B > budget {fp32_rb}B"
+        )
+    if not budget_proof["exact"]:
+        failures.append("int8 budget-proof index diverged from brute")
+    result["failures"] = failures
+
+    if scale >= 1.0 and not failures:
+        out = os.path.join(
+            os.path.dirname(__file__), "..", "BENCH_capacity.json"
+        )
+        with open(os.path.abspath(out), "w") as f:
+            json.dump(result, f, indent=2)
+            f.write("\n")
+
+    print(
+        f"# capacity bench (scale {scale}): "
+        f"fp16={tiers['fp16']['capacity_x']:.2f}x "
+        f"int8={tiers['int8']['capacity_x']:.2f}x "
+        f"budget_proof={mult}x_points_fit={budget_proof['fits']} "
+        f"all_exact={all(t['exact'] for t in tiers.values())}",
+        flush=True,
+    )
+    if failures:
+        raise SystemExit("capacity bench FAILED: " + "; ".join(failures))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="size multiplier; < 1.0 does not write "
+                         "BENCH_capacity.json")
+    args = ap.parse_args()
+    common.emit_header()
+    run(scale=args.scale)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,16 +13,18 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=0.2,
                     help="size multiplier (1.0 ~ small-GPU scale; CPU default 0.2)")
     ap.add_argument("--only", default="",
-                    help="comma list: engine,copy,serving,fig3,fig4,fig5,"
-                         "fig6,kernel,roofline")
+                    help="comma list: engine,copy,capacity,serving,fig3,"
+                         "fig4,fig5,fig6,kernel,roofline")
     args = ap.parse_args()
 
-    from benchmarks import (common, copy_cost, engine_bench, fig3_chunks,
+    from benchmarks import (capacity_bench, common, copy_cost,
+                            engine_bench, fig3_chunks,
                             fig4_multidevice, fig5_scaling, fig6_outliers,
                             kernel_bench, roofline_table, serving_bench)
 
     mods = {
         "engine": engine_bench, "copy": copy_cost,
+        "capacity": capacity_bench,
         "serving": serving_bench,
         "fig3": fig3_chunks, "fig4": fig4_multidevice, "fig5": fig5_scaling,
         "fig6": fig6_outliers, "kernel": kernel_bench,

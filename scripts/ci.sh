@@ -41,6 +41,16 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} REPRO_DYNAMIC_SEED=0 \
 echo "== perf smoke (engine bench @ scale 0.25) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.engine_bench --scale 0.25
 
+# Capacity smoke: quarter-scale quantized-slab bench (never writes
+# BENCH_capacity.json).  The bench itself asserts the capacity bars on
+# MEASURED residency (int8 >= 3x, fp16 >= 1.9x points per resident byte vs
+# fp32), bit-exact neighbor indices vs knn_brute at every precision, the
+# int8 budget proof (3x the points fit the fp32 residency budget), and
+# zero fused-round recompiles across varied flushes per precision — any
+# miss exits non-zero and fails CI here.
+echo "== capacity smoke (capacity bench @ scale 0.25) =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.capacity_bench --scale 0.25
+
 # Dynamic-index gate: tier-1 above already ran the full 200-script parity
 # harness under the pinned seed; this step re-asserts only the pieces that
 # gate a merge by name — the hypothesis-driven interleavings (derandomized

@@ -38,8 +38,10 @@ from repro.api.engine import (
 )
 from repro.api.planner import (
     CALIBRATION_STALE_S,
+    BudgetError,
     Calibration,
     Plan,
+    estimate_meta_bytes,
     estimate_slab_bytes,
     plan,
 )
@@ -62,6 +64,8 @@ __all__ = [
     "Plan",
     "plan",
     "estimate_slab_bytes",
+    "estimate_meta_bytes",
+    "BudgetError",
     "Calibration",
     "CALIBRATION_STALE_S",
     "Engine",

@@ -57,12 +57,18 @@ def _resolve_tq(tile_q: int, backend: str) -> int:
 def _chunked_resident(plan) -> int:
     """Device bytes of a chunk-streamed leaf structure: a chunk holds
     ceil(n_leaves/N) leaf slabs (``ChunkedLeafStore``), two chunks stay
-    resident."""
+    resident.  Quantized stores keep their dequantize metadata (per-leaf
+    scale/offset/dead mask) resident for every leaf, not per chunk."""
+    from repro.api.planner import estimate_meta_bytes
+
+    meta = estimate_meta_bytes(
+        plan.n, plan.d, plan.height, precision=plan.precision
+    )
     if plan.n_chunks <= 1:
-        return plan.slab_bytes
+        return plan.slab_bytes + meta
     n_leaves = 1 << plan.height
     leaf_bytes = plan.slab_bytes // n_leaves
-    return 2 * (-(-n_leaves // plan.n_chunks)) * leaf_bytes
+    return 2 * (-(-n_leaves // plan.n_chunks)) * leaf_bytes + meta
 
 
 # ---------------------------------------------------------------------------
@@ -161,6 +167,7 @@ class _BufferTreeEngine(EngineBase):
             engine=self._tier,
             starvation_deadline=plan.starvation_deadline,
             device=spec.devices[0] if spec.devices else None,
+            precision=plan.precision,
         )
 
     def query(self, state: BufferKDTree, queries, k):
@@ -172,9 +179,17 @@ class _BufferTreeEngine(EngineBase):
 
         tree = state.tree
         arrays = dict(tree_to_arrays(tree, include_derived=True))
-        return arrays, {"height": tree.height, "leaf_pad": tree.leaf_pad}
+        meta = {"height": tree.height, "leaf_pad": tree.leaf_pad,
+                "precision": state.precision}
+        if state.store.quantized:
+            # persist the codes as stored (plus scales/offsets/dead mask):
+            # the fp32 ``points`` stay in the snapshot for the exact
+            # re-rank, but the slabs round-trip at the quantized dtype
+            arrays.update(state.store.quantized_state().to_arrays())
+        return arrays, meta
 
     def restore_state(self, arrays, meta, spec, plan):
+        from repro.core.quantize import QuantizedSlabs
         from repro.core.toptree import tree_from_arrays
 
         tree = tree_from_arrays(
@@ -183,6 +198,11 @@ class _BufferTreeEngine(EngineBase):
             height=int(meta["height"]),
             leaf_pad=int(meta["leaf_pad"]),
         )
+        # format-1 snapshots predate the precision field: absent => fp32
+        precision = str(meta.get("precision", "fp32"))
+        store_state = None
+        if precision != "fp32":
+            store_state = QuantizedSlabs.from_arrays(arrays, precision)
         # tree= skips the O(h*n) median build; only the chunk slabs and
         # the jitted scans are (re)materialized, lazily
         return BufferKDTree(
@@ -196,6 +216,8 @@ class _BufferTreeEngine(EngineBase):
             engine=self._tier,
             starvation_deadline=plan.starvation_deadline,
             device=spec.devices[0] if spec.devices else None,
+            precision=precision,
+            store_state=store_state,
         )
 
     def resident_bytes(self, plan, state=None) -> int:
@@ -376,6 +398,7 @@ class ShardedEngine(EngineBase):
             tile_q=plan.tile_q,
             buffer_size=plan.buffer_size,
             starvation_deadline=plan.starvation_deadline,
+            precision=plan.precision,
         )
 
     def query(self, state, queries, k):
@@ -586,6 +609,8 @@ class DynamicEngine(EngineBase):
             backend=plan.backend,
             devices=list(spec.devices) if spec.devices else None,
             merge_async=plan.merge_async,
+            precision=plan.precision,
+            memory_budget=spec.memory_budget,
         )
         # WARM-AT-BUILD: register the expected batch shape BEFORE the
         # first insert so the initial shard — and every later shard,

@@ -41,8 +41,8 @@ __all__ = ["KNNIndex"]
 # compile_cache_dir is a host-local path, like persist_dir).
 _SPEC_MANIFEST_FIELDS = (
     "engine", "height", "n_chunks", "n_shards", "buffer_size", "tile_q",
-    "backend", "k_hint", "m_hint", "memory_budget", "mutable",
-    "merge_async", "snapshot_keep", "wal_fsync",
+    "backend", "k_hint", "m_hint", "memory_budget", "precision",
+    "strict_budget", "mutable", "merge_async", "snapshot_keep", "wal_fsync",
 )
 
 
@@ -154,6 +154,8 @@ class KNNIndex:
             calibration=spec.calibration,
             mutable=spec.mutable,
             merge_async=spec.merge_async,
+            precision=spec.precision,
+            strict_budget=spec.strict_budget,
         )
         if spec.compile_cache_dir:
             # enable BEFORE the engine builds: build-phase compiles (warm-
@@ -301,6 +303,8 @@ class KNNIndex:
             backend=spec.backend,
             mutable=spec.mutable,
             merge_async=spec.merge_async,
+            precision=spec.precision,
+            strict_budget=spec.strict_budget,
         )
         if spec.compile_cache_dir:
             pl = pl.replace(reasons=pl.reasons + (

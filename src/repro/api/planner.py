@@ -52,17 +52,27 @@ import warnings
 from typing import Any, Mapping, Optional, Sequence, Tuple
 
 from repro.core.chunked_jit import DEFAULT_STARVATION_DEADLINE
+from repro.core.quantize import BYTES_PER_ELEM, PRECISIONS
 from repro.core.toptree import default_buffer_size, suggest_height
 
 __all__ = [
     "Plan",
     "plan",
+    "BudgetError",
     "estimate_slab_bytes",
+    "estimate_meta_bytes",
     "Calibration",
     "BRUTE_N_MAX",
     "BRUTE_WORK_MAX",
     "CALIBRATION_STALE_S",
+    "PRECISION_ENGINES",
 ]
+
+
+class BudgetError(ValueError):
+    """Raised under ``IndexSpec(strict_budget=True)`` when no plan fits the
+    ``memory_budget`` — the structured form of the ``Plan.over_budget`` flag
+    (a budget below even two streamed chunk buffers cannot be honored)."""
 
 # Below this reference-set size the tree cannot pay for itself on any
 # backend we target (one brute tile covers the whole set).
@@ -79,27 +89,63 @@ CALIBRATION_STALE_S = 7 * 24 * 3600.0
 
 _F32 = 4
 
+# Engines whose leaf slabs live in a ChunkedLeafStore (directly or through
+# the dynamic forest's tree shards) and therefore honor a precision choice;
+# everything else (brute/jit/forest/ring) keeps fp32 reference arrays.
+PRECISION_ENGINES = ("chunked", "host", "streaming", "sharded", "dynamic")
+
 
 def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
 
 
-def estimate_slab_bytes(
-    n: int, d: int, height: int, *, leaf_pad_multiple: int = 8,
-    d_pad_multiple: int = 8,
-) -> int:
-    """Device bytes of the padded leaf structure at tree height ``height``.
-
-    Mirrors ``build_top_tree``'s padding: 2**h equal (±1) leaves of
-    ceil(n / 2**h) points, slab length rounded up to ``leaf_pad_multiple``,
-    feature dim rounded up to ``d_pad_multiple``.
-    """
+def _pad_dims(
+    n: int, d: int, height: int, leaf_pad_multiple: int, d_pad_multiple: int
+) -> Tuple[int, int, int]:
     n_leaves = 1 << height
     leaf_pad = max(
         _round_up(-(-n // n_leaves), leaf_pad_multiple), leaf_pad_multiple
     )
     d_pad = max(_round_up(d, d_pad_multiple), d_pad_multiple)
-    return n_leaves * leaf_pad * d_pad * _F32
+    return n_leaves, leaf_pad, d_pad
+
+
+def estimate_slab_bytes(
+    n: int, d: int, height: int, *, leaf_pad_multiple: int = 8,
+    d_pad_multiple: int = 8, precision: str = "fp32",
+) -> int:
+    """Device bytes of the padded leaf structure at tree height ``height``.
+
+    Mirrors ``build_top_tree``'s padding: 2**h equal (±1) leaves of
+    ceil(n / 2**h) points, slab length rounded up to ``leaf_pad_multiple``,
+    feature dim rounded up to ``d_pad_multiple``.  ``precision`` scales the
+    per-element cost (fp32 4B, fp16 2B, int8 1B — ``core.quantize``).
+    """
+    n_leaves, leaf_pad, d_pad = _pad_dims(
+        n, d, height, leaf_pad_multiple, d_pad_multiple
+    )
+    return n_leaves * leaf_pad * d_pad * BYTES_PER_ELEM[precision]
+
+
+def estimate_meta_bytes(
+    n: int, d: int, height: int, *, leaf_pad_multiple: int = 8,
+    d_pad_multiple: int = 8, precision: str = "fp32",
+) -> int:
+    """Device bytes of the dequantize metadata a quantized store keeps
+    resident next to its slabs: the bit-packed dead-row mask
+    (u8[n_leaves, ceil(leaf_pad/8)]) plus, for int8 only, the per-leaf
+    affine scale + offset (f32[n_leaves, d_pad] each — fp16 is a plain
+    cast and carries none).  0 for fp32 (mirrors
+    ``ChunkedLeafStore.meta_bytes``)."""
+    if precision == "fp32":
+        return 0
+    n_leaves, leaf_pad, d_pad = _pad_dims(
+        n, d, height, leaf_pad_multiple, d_pad_multiple
+    )
+    dead = -(-leaf_pad // 8)
+    if precision == "fp16":
+        return n_leaves * dead
+    return n_leaves * (2 * d_pad * _F32 + dead)
 
 
 def _probe_h2d(
@@ -170,6 +216,12 @@ class Calibration:
                                            # from "never measured"
     age_s: Optional[float] = None          # seconds since the OLDEST source
                                            # file was measured; None = unknown
+    slow_age_s: Optional[float] = None     # seconds since the oldest SLOW
+                                           # field (round cost, engine q/s)
+                                           # was measured — the inline H2D
+                                           # probe cannot refresh these, so
+                                           # their staleness survives a
+                                           # Calibration.refresh
     source: str = ""
 
     @property
@@ -178,6 +230,18 @@ class Calibration:
         ``CALIBRATION_STALE_S`` — plan() warns and records it in reasons
         instead of silently trusting old numbers."""
         return self.age_s is not None and self.age_s > CALIBRATION_STALE_S
+
+    @property
+    def slow_stale(self) -> bool:
+        """True when the slow fields (round cost, engine q/s — the ones only
+        their real benches can re-measure) have outlived the staleness
+        window.  ``refresh()`` zeroes ``age_s`` but deliberately carries
+        this, so a refreshed calibration still discloses that the
+        starvation-deadline / engine-choice inputs are old."""
+        return (
+            self.slow_age_s is not None
+            and self.slow_age_s > CALIBRATION_STALE_S
+        )
 
     def chunk_copy_s(self, chunk_bytes: int) -> Optional[float]:
         """Predicted seconds to stream one chunk slab host->device."""
@@ -194,7 +258,10 @@ class Calibration:
         warning: instead of trusting week-old BENCH files forever, plan()
         re-measures the two-point H2D fit (~tens of milliseconds) and
         plans from that.  Slower fields (round cost, engine q/s) still
-        need their real benches; they are carried over unmodified."""
+        need their real benches; they are carried over unmodified — and so
+        is ``slow_age_s``, so consumers (and ``Plan.reasons``) keep seeing
+        how old those numbers really are instead of a refreshed-looking
+        calibration built on dead measurements."""
         gbps, latency_s = _probe_h2d()
         base = base if base is not None else cls()
         src = "inline-refresh" if not base.source else (
@@ -202,7 +269,7 @@ class Calibration:
         )
         return dataclasses.replace(
             base, h2d_gbps=gbps, h2d_latency_s=latency_s, age_s=0.0,
-            source=src,
+            slow_age_s=base.slow_age_s, source=src,
         )
 
     @classmethod
@@ -228,6 +295,7 @@ class Calibration:
         engine_qps: dict = {}
         sources = []
         mtimes = []
+        slow_mtimes = []   # files feeding the SLOW fields (round_s, qps)
         cc = os.path.join(root, "BENCH_copy_cost.json")
         if os.path.exists(cc):
             with open(cc) as f:
@@ -237,6 +305,8 @@ class Calibration:
             round_s = data.get("round_s")
             sources.append("BENCH_copy_cost.json")
             mtimes.append(os.path.getmtime(cc))
+            if round_s is not None:
+                slow_mtimes.append(os.path.getmtime(cc))
         eb = os.path.join(root, "BENCH_engine.json")
         if os.path.exists(eb):
             with open(eb) as f:
@@ -250,6 +320,8 @@ class Calibration:
                     engine_qps[eng] = float(qps)
             sources.append("BENCH_engine.json")
             mtimes.append(os.path.getmtime(eb))
+            if engine_qps:
+                slow_mtimes.append(os.path.getmtime(eb))
         db = os.path.join(root, "BENCH_dynamic.json")
         dynamic_measured = False
         if os.path.exists(db):
@@ -272,6 +344,10 @@ class Calibration:
             dynamic_crossover=dynamic_crossover,
             dynamic_measured=dynamic_measured,
             age_s=max(0.0, time.time() - min(mtimes)),
+            slow_age_s=(
+                max(0.0, time.time() - min(slow_mtimes))
+                if slow_mtimes else None
+            ),
             source="+".join(sources),
         )
 
@@ -291,9 +367,19 @@ class Plan:
     fetch_m: int = 40960
     tile_q: int = 128
     backend: str = "auto"
-    slab_bytes: int = 0         # full leaf structure, one device
+    slab_bytes: int = 0         # full leaf structure, one device, at the
+                                # planned precision (dequantize metadata is
+                                # counted in resident_bytes, not here)
     resident_bytes: int = 0     # per-device bytes actually held under plan
     memory_budget: Optional[int] = None
+    precision: str = "fp32"     # leaf-slab storage precision ("fp32" |
+                                # "fp16" | "int8"); quantized slabs stay
+                                # exact via the fp32 candidate re-rank
+    over_budget: bool = False   # True when even the best plan (maximum
+                                # chunking at the chosen precision) exceeds
+                                # memory_budget — the structured form of the
+                                # old "best effort" prose note; strict_budget
+                                # turns this into a BudgetError at plan time
     visit_policy: str = "pending_desc"   # chunk-visit ordering policy
     starvation_deadline: int = DEFAULT_STARVATION_DEADLINE
     calibrated: bool = False    # True when a Calibration informed decisions
@@ -326,6 +412,8 @@ def plan(
     calibration: Optional[Calibration] = None,
     mutable: Optional[bool] = None,
     merge_async: Optional[bool] = None,
+    precision: Optional[str] = None,
+    strict_budget: bool = False,
 ) -> Plan:
     """Pick an engine + parameters for (n, d) references and (m, k) queries.
 
@@ -396,35 +484,100 @@ def plan(
     b = (
         int(buffer_size) if buffer_size is not None else default_buffer_size(h)
     )
-    slab = estimate_slab_bytes(n, d, h)
+    slab32 = estimate_slab_bytes(n, d, h)
+
+    def footprint(p: str) -> int:
+        """Per-device resident bytes at precision ``p`` when fully resident:
+        slabs plus the dequantize metadata quantized stores keep."""
+        return estimate_slab_bytes(n, d, h, precision=p) + estimate_meta_bytes(
+            n, d, h, precision=p
+        )
+
+    # -- precision: cost capacity-per-byte against the budget -------------
+    if precision is not None:
+        if precision not in PRECISIONS:
+            raise ValueError(
+                f"precision={precision!r} not in {PRECISIONS}"
+            )
+        prec = precision
+        reasons.append(
+            f"precision {prec} pinned by caller: leaf slabs "
+            f"{footprint(prec)}B ({slab32}B at fp32)"
+        )
+    elif memory_budget is None:
+        prec = "fp32"
+        reasons.append(
+            "precision fp32: no memory_budget given, nothing to trade "
+            "capacity against"
+        )
+    else:
+        for cand in PRECISIONS:
+            if footprint(cand) <= memory_budget:
+                prec = cand
+                if cand == "fp32":
+                    reasons.append(
+                        f"precision fp32: slab {slab32}B fits budget "
+                        f"{memory_budget}B at full precision"
+                    )
+                else:
+                    reasons.append(
+                        f"precision {cand}: fp32 slab {slab32}B exceeds "
+                        f"budget {memory_budget}B but {cand} "
+                        f"({footprint(cand)}B incl. dequantize meta) fits "
+                        "device-resident; candidates re-ranked exactly in "
+                        "fp32"
+                    )
+                break
+        else:
+            prec = "int8"
+            reasons.append(
+                f"precision int8: no precision fits budget {memory_budget}B "
+                f"resident (int8 needs {footprint('int8')}B); int8 "
+                "maximizes points per streamed byte, chunk-streaming covers "
+                "the rest"
+            )
+
+    slab = estimate_slab_bytes(n, d, h, precision=prec)
+    meta = estimate_meta_bytes(n, d, h, precision=prec)
     base = dict(
         height=h, n=n, d=d, n_devices=p, buffer_size=b, fetch_m=10 * b,
         tile_q=tile_q, backend=backend, slab_bytes=slab,
         memory_budget=memory_budget,
     )
+    over_budget = False
+    over_detail = ""
 
-    def chunks_for_budget() -> Tuple[int, str]:
-        if memory_budget is None or slab <= memory_budget:
-            return 1, "leaf structure fits device memory: device-resident (N=1)"
+    def chunks_for_budget() -> Tuple[int, str, bool]:
+        if memory_budget is None or slab + meta <= memory_budget:
+            return (
+                1, "leaf structure fits device memory: device-resident (N=1)",
+                False,
+            )
         n_leaves = 1 << h
-        # two streamed chunk buffers must fit, at LEAF granularity: a
-        # chunk holds ceil(n_leaves/N) leaf slabs (ChunkedLeafStore), so
-        # floor-dividing bytes here would understate real residency
+        # two streamed chunk buffers (plus any dequantize metadata) must
+        # fit, at LEAF granularity: a chunk holds ceil(n_leaves/N) leaf
+        # slabs (ChunkedLeafStore), so floor-dividing bytes here would
+        # understate real residency
         leaf_bytes = slab // n_leaves
-        c_max = memory_budget // max(1, 2 * leaf_bytes)  # leaves per chunk
+        budget_slab = memory_budget - meta   # what is left for the buffers
+        c_max = budget_slab // max(1, 2 * leaf_bytes)  # leaves per chunk
         if c_max >= 1:
             nc = min(max(2, -(-n_leaves // c_max)), n_leaves)
         else:
             nc = n_leaves
-        resident = 2 * (-(-n_leaves // nc)) * leaf_bytes
+        resident = 2 * (-(-n_leaves // nc)) * leaf_bytes + meta
         note = (
-            f"slab {slab}B > budget {memory_budget}B: stream in N={nc} "
-            f"chunks (2 buffers resident = {resident}B)"
+            f"slab {slab}B > budget {memory_budget}B at precision {prec}: "
+            f"stream in N={nc} chunks (2 buffers resident = {resident}B)"
         )
-        if resident > memory_budget:
-            note += " [budget below the 2-chunk floor; best effort]"
+        over = resident > memory_budget
+        if over:
+            note += (
+                f" [over budget: even N={nc} (one leaf per chunk) holds "
+                f"{resident}B resident — budget is below the 2-chunk floor]"
+            )
         if calibration is not None:
-            copy_s = calibration.chunk_copy_s(resident // 2)
+            copy_s = calibration.chunk_copy_s((resident - meta) // 2)
             if copy_s is not None:
                 note += (
                     f"; calibrated chunk copy ~{copy_s * 1e3:.2f}ms at "
@@ -432,7 +585,7 @@ def plan(
                 )
                 if calibration.round_s:
                     note += f" vs fused round ~{calibration.round_s * 1e3:.2f}ms"
-        return nc, note
+        return nc, note, over
 
     def calibrated_deadline() -> Tuple[int, Optional[str]]:
         """Starvation deadline (rounds a pending chunk may be skipped) from
@@ -621,13 +774,27 @@ def plan(
             engine = "chunked"
             reasons.append("1 device: chunk-streamed buffer k-d tree")
 
+    # engines without a ChunkedLeafStore keep fp32 reference arrays — a
+    # quantized precision choice cannot apply there; say so and fall back
+    if engine not in PRECISION_ENGINES and prec != "fp32":
+        reasons.append(
+            f"precision request {prec} not applicable: engine {engine} "
+            "stores fp32 reference arrays (no leaf slabs to quantize)"
+        )
+        prec = "fp32"
+        slab = estimate_slab_bytes(n, d, h)
+        meta = 0
+        base["slab_bytes"] = slab
+
     # the BufferKDTree tiers (host/chunked/streaming) and sharded hold the
     # (full, replicated) leaf structure per device, so all honor the budget
     # through chunk streaming — ONE place decides the chunk count
     if engine in ("chunked", "host", "sharded", "streaming"):
         if n_chunks is None:
-            n_chunks, note = chunks_for_budget()
+            n_chunks, note, over_budget = chunks_for_budget()
             reasons.append(note)
+            if over_budget:
+                over_detail = note
         else:
             reasons.append(f"N={n_chunks} chunks pinned by caller")
 
@@ -693,15 +860,47 @@ def plan(
         if memory_budget is not None:
             est = resident_for("dynamic", ns=p)
             if est > memory_budget:
-                # unlike chunked/sharded, the dynamic forest cannot chunk-
-                # stream its shards yet — say so instead of silently
-                # ignoring the §3 constraint every other branch honors
-                reasons.append(
-                    f"memory_budget {memory_budget}B below the dynamic "
-                    f"forest's per-device resident estimate {est}B: best "
-                    "effort (mutable shard chunk-streaming is a roadmap "
-                    "item)"
-                )
+                # the forest honors the budget by chunk-streaming tree-shard
+                # leaf slabs (core.dynamic passes the remaining envelope into
+                # each shard's ChunkedLeafStore); the only unhonorable case
+                # is a budget below even two leaf slabs of the largest shard
+                n_leaves = 1 << h
+                floor = 2 * max(1, slab // n_leaves) + meta
+                if floor > memory_budget:
+                    over_budget = True
+                    over_detail = (
+                        f"memory_budget {memory_budget}B is below the "
+                        f"dynamic forest's 2-leaf streaming floor {floor}B "
+                        f"at precision {prec}"
+                    )
+                    reasons.append(over_detail + " [over budget]")
+                else:
+                    reasons.append(
+                        f"memory_budget {memory_budget}B below the dynamic "
+                        f"forest's resident estimate {est}B: tree shards "
+                        "chunk-stream their leaf slabs to stay inside the "
+                        f"envelope (precision {prec})"
+                    )
+
+    if (
+        calibration is not None
+        and calibration.slow_stale
+        and engine in ("chunked", "host", "sharded", "streaming", "dynamic")
+    ):
+        # the inline H2D refresh cannot re-measure these; disclose that the
+        # deadline / engine-choice inputs are seeded from dead numbers
+        reasons.append(
+            "calibration stale: slow fields (round cost, engine q/s) "
+            f"measured {calibration.slow_age_s / 86400.0:.1f}d ago and the "
+            "inline H2D probe cannot refresh them; re-run benchmarks/"
+            "copy_cost.py and benchmarks/engine_bench.py"
+        )
+
+    if over_budget and strict_budget:
+        raise BudgetError(
+            f"strict_budget: no {engine} plan fits memory_budget="
+            f"{memory_budget}B — {over_detail or 'residency exceeds budget'}"
+        )
 
     nc = int(n_chunks) if n_chunks is not None else 1
     ns = int(n_shards) if n_shards is not None else (
@@ -717,5 +916,7 @@ def plan(
         calibrated=calibration is not None,
         crossover_batch=crossover,
         merge_async=do_merge_async,
+        precision=prec,
+        over_budget=over_budget,
         reasons=tuple(reasons), **base
     )

@@ -47,6 +47,18 @@ class IndexSpec:
     m_hint: Optional[int] = None          # expected queries per batch
     devices: Optional[Tuple[Any, ...]] = None   # None => jax.devices()
     memory_budget: Optional[int] = None   # device bytes for the leaf structure
+    precision: Optional[str] = None       # leaf-slab storage precision:
+                                          # "fp32" | "fp16" | "int8"; None =>
+                                          # the planner costs precision vs
+                                          # capacity against memory_budget
+                                          # (quantized scans stay exact via
+                                          # the fp32 candidate re-rank)
+    strict_budget: bool = False           # True: a plan whose residency
+                                          # exceeds memory_budget raises
+                                          # planner.BudgetError instead of
+                                          # shipping a best-effort plan
+                                          # (Plan.over_budget carries the
+                                          # structured flag either way)
     calibration: Optional[Any] = None     # planner.Calibration (measured costs);
                                           # None => plan by rule; the string
                                           # "refresh" re-runs the cheap H2D

@@ -32,6 +32,8 @@ from typing import Iterator, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from repro.core.quantize import QuantizedSlabs, quantize_slabs
+
 __all__ = ["ChunkedLeafStore", "chunks_for_bounds"]
 
 
@@ -65,17 +67,36 @@ class ChunkedLeafStore:
 
     def __init__(
         self,
-        leaf_slabs: np.ndarray,
+        leaf_slabs,
         n_chunks: int = 1,
         *,
         device: Optional[jax.Device] = None,
         uniform: bool = False,
         pad_coord: float = 1.0e18,
+        precision: str = "fp32",
+        leaf_sizes: Optional[np.ndarray] = None,
     ):
-        if leaf_slabs.ndim != 3:
-            raise ValueError(f"leaf_slabs must be [n_leaves, leaf_pad, d], got {leaf_slabs.shape}")
-        self.host = np.ascontiguousarray(leaf_slabs)
-        self.n_leaves = leaf_slabs.shape[0]
+        """``leaf_slabs`` is either the fp32 ``[n_leaves, leaf_pad, d(_pad)]``
+        numpy slab array (quantized here per ``precision``) or an
+        already-built ``QuantizedSlabs`` (the snapshot-restore path, which
+        must not re-fit scales against tombstone-mutated coordinates)."""
+        if isinstance(leaf_slabs, QuantizedSlabs):
+            qs = leaf_slabs
+        else:
+            if leaf_slabs.ndim != 3:
+                raise ValueError(
+                    f"leaf_slabs must be [n_leaves, leaf_pad, d], got {leaf_slabs.shape}"
+                )
+            qs = quantize_slabs(leaf_slabs, precision, leaf_sizes)
+        self.precision = qs.precision
+        self.quantized = qs.precision != "fp32"
+        self.quant_eps = float(qs.eps)
+        self.pad_coord = float(pad_coord)
+        self.host = np.ascontiguousarray(qs.codes)
+        self.q_scale = qs.scale
+        self.q_offset = qs.offset
+        self.dead = qs.dead
+        self.n_leaves = self.host.shape[0]
         self.device = device or jax.devices()[0]
         n_chunks = int(n_chunks)
         if not 1 <= n_chunks <= self.n_leaves:
@@ -88,15 +109,26 @@ class ChunkedLeafStore:
             # slab has the SAME [C, leaf_pad, d] shape -> one jit compile
             # serves every chunk (the chunk-resident engine relies on this).
             # Pad leaves sit beyond the real leaf range and can never be a
-            # traversal target; their coordinates lose every distance contest.
+            # traversal target; their coordinates lose every distance contest
+            # (quantized stores mask dead rows back to PAD_COORD at scan).
             c = -(-self.n_leaves // n_chunks)
             total = c * n_chunks
             if total != self.n_leaves:
+                extra = total - self.n_leaves
+                fill = 0 if self.quantized else np.float32(pad_coord)
                 pad = np.full(
-                    (total - self.n_leaves,) + self.host.shape[1:],
-                    np.float32(pad_coord), dtype=self.host.dtype,
+                    (extra,) + self.host.shape[1:], fill, dtype=self.host.dtype
                 )
                 self.host = np.concatenate([self.host, pad], axis=0)
+                self.q_scale = np.concatenate(
+                    [self.q_scale, np.ones((extra, self.q_scale.shape[1]), np.float32)]
+                )
+                self.q_offset = np.concatenate(
+                    [self.q_offset, np.zeros((extra, self.q_offset.shape[1]), np.float32)]
+                )
+                self.dead = np.concatenate(
+                    [self.dead, np.ones((extra, self.dead.shape[1]), bool)]
+                )
             self.chunk_leaves = c
             lo = np.arange(n_chunks, dtype=np.int64) * c
             self.chunk_lo = lo
@@ -110,6 +142,7 @@ class ChunkedLeafStore:
             self.chunk_leaves = int((self.chunk_hi - self.chunk_lo).max())
         self._slots = (_Slot(), _Slot())
         self._resident: Optional[jax.Array] = None
+        self._meta_dev: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = None
         self.copies = 0   # host->device chunk transfers issued (lifetime)
         if n_chunks == 1:
             self._resident = jax.device_put(self.host, self.device)
@@ -135,6 +168,78 @@ class ChunkedLeafStore:
     def chunk_bytes(self) -> int:
         lo, hi = self._slab_range(0)
         return int((hi - lo) * self.host.shape[1] * self.host.shape[2] * self.host.itemsize)
+
+    # -- quantization metadata ---------------------------------------------
+    @property
+    def affine(self) -> bool:
+        """True when dequantize needs the per-leaf scale/offset (int8);
+        fp16 is a plain cast and keeps only the dead mask resident."""
+        return self.precision == "int8"
+
+    def device_meta(self) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """Device-resident dequantize metadata ``(scale, offset, dead)``,
+        uploaded once and cached.  The dead mask is BIT-PACKED on device
+        (u8[n_leaves, ceil(L_pad/8)], ``np.packbits`` big-endian — scan
+        kernels unpack with shifts) so the per-row residency tax is 1 bit,
+        not 1 byte; fp16 stores get (1,1) scale/offset placeholders (dead
+        code under ``affine=False``).  ``kill_rows`` invalidates the
+        cache."""
+        if self._meta_dev is None:
+            if self.affine:
+                sc, of = self.q_scale, self.q_offset
+            else:
+                sc = np.ones((1, 1), np.float32)
+                of = np.zeros((1, 1), np.float32)
+            self._meta_dev = (
+                jax.device_put(sc, self.device),
+                jax.device_put(of, self.device),
+                jax.device_put(np.packbits(self.dead, axis=1), self.device),
+            )
+        return self._meta_dev
+
+    def meta_bytes(self) -> int:
+        """Device bytes of the dequantize metadata (0 for fp32 stores):
+        the packed dead mask, plus scale/offset for affine (int8) stores."""
+        if not self.quantized:
+            return 0
+        packed = self.dead.shape[0] * (-(-self.dead.shape[1] // 8))
+        if not self.affine:
+            return packed
+        return int(self.q_scale.nbytes + self.q_offset.nbytes) + packed
+
+    def kill_rows(self, leaf_ids: np.ndarray, rows: np.ndarray) -> None:
+        """Permanently disable slab rows ``(leaf_ids[i], rows[i])`` so they
+        can never again win a distance contest (tombstone reclaim for tree
+        shards — ``dynamic._tombstone_rows``).  fp32 stores overwrite the
+        coordinates with PAD_COORD in place; quantized stores flip the dead
+        mask (the scan-time dequantize masks dead rows to PAD_COORD), which
+        re-uploads only the tiny mask — never the slabs."""
+        leaf_ids = np.asarray(leaf_ids, np.int64)
+        rows = np.asarray(rows, np.int64)
+        if leaf_ids.size == 0:
+            return
+        self.dead[leaf_ids, rows] = True
+        if self.quantized:
+            self._meta_dev = None
+            return
+        self.host[leaf_ids, rows, :] = np.float32(self.pad_coord)
+        self._slots = (_Slot(), _Slot())
+        if self.n_chunks == 1:
+            self._resident = jax.device_put(self.host, self.device)
+
+    def quantized_state(self) -> QuantizedSlabs:
+        """Snapshot view of the store (real leaves only — uniform chunk
+        padding is re-derived on restore), carrying the mutated dead mask
+        so tombstone reclaims survive a save/load round trip."""
+        n = self.n_leaves
+        return QuantizedSlabs(
+            self.precision,
+            self.host[:n],
+            self.q_scale[:n],
+            self.q_offset[:n],
+            self.dead[:n],
+            self.quant_eps,
+        )
 
     # -- streaming ----------------------------------------------------------
     def _copy_chunk(self, j: int, slot: _Slot) -> None:
@@ -171,7 +276,8 @@ class ChunkedLeafStore:
             cur = 1 - cur
 
     def resident_bytes(self) -> int:
-        """Device bytes held by the store (two slots, or full structure)."""
+        """Device bytes held by the store (two slots, or full structure),
+        including the dequantize metadata for quantized stores."""
         if self.n_chunks == 1:
-            return self.host.nbytes
-        return 2 * self.chunk_bytes
+            return self.host.nbytes + self.meta_bytes()
+        return 2 * self.chunk_bytes + self.meta_bytes()

@@ -144,7 +144,9 @@ def _initial_advance(qpad, split_dim, split_val, *, first_leaf_heap):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "tq", "first_leaf_heap", "ub", "backend"),
+    static_argnames=(
+        "k", "tq", "first_leaf_heap", "ub", "backend", "quant", "affine"
+    ),
     # leaf is deliberately NOT donated: the previous round's pending-leaf
     # map stays a live buffer so its async host readback can overlap the
     # round that consumes it (the double-buffered schedule sync).
@@ -157,18 +159,24 @@ def _chunk_round(
     knn_d,         # f32[m+1, k] running top-k sq-dists    (donated)
     knn_i,         # i32[m+1, k] reordered-global indices  (donated)
     qpad,          # f32[m, d_pad] zero-padded queries
-    dev_slab,      # f32[C, L_pad, d_pad] resident chunk slab
+    dev_slab,      # [C, L_pad, d_pad] resident chunk slab (f32/f16/u8 codes)
     lo,            # i32[] first leaf id of the chunk
     leaf_start,    # i32[n_leaves]
     leaf_size,     # i32[n_leaves]
     split_dim,     # i32[2**h]
     split_val,     # f32[2**h]
+    q_scale,       # f32[n_leaves_tot, d_pad] dequantize scale  (dummy if !affine)
+    q_offset,      # f32[n_leaves_tot, d_pad] dequantize offset (dummy if !affine)
+    q_dead,        # u8[n_leaves_tot, ceil(L_pad/8)] bit-packed dead-row mask
+    qeps,          # f32[] traversal-radius inflation (quantization error bound)
     *,
     k: int,
     tq: int,
     first_leaf_heap: int,
     ub: int,
     backend: str,
+    quant: bool,
+    affine: bool,
 ):
     """One fused bulk-synchronous round over the resident chunk.
 
@@ -176,9 +184,23 @@ def _chunk_round(
     exits its leaf and advances it to its next pending leaf (which may be in
     any chunk).  Queries paused elsewhere are untouched.  Returns the
     updated (node, fromc, leaf, knn_d, knn_i, n_units).
+
+    ``quant=True`` slabs hold storage codes: each gathered leaf tile is
+    dequantized elementwise (codes * scale + offset, O(ub*L_pad*d) next to
+    the O(ub*tq*L_pad*d) scan matmul) and dead rows — structural padding and
+    tombstoned rows — are masked to PAD_COORD so they lose every contest.
+    The traversal radius is inflated by ``qeps`` (the global reconstruction
+    error bound), which provably keeps every leaf that could hold a true
+    neighbor on the schedule; the Pallas/ref scan kernels see plain f32
+    tiles either way.
     """
     m = leaf.shape[0]
     c = dev_slab.shape[0]
+    # one leaf holds at most L_pad candidates: clamp the per-scan selection
+    # width so overfetched k (quantized re-rank headroom) and k > leaf-size
+    # batches stay in the kernel's top-k contract; the running merge below
+    # still keeps k columns
+    kl = min(k, dev_slab.shape[1])
 
     in_chunk = (leaf >= lo) & (leaf < lo + c)
     local = jnp.where(in_chunk, leaf - lo, -1)
@@ -203,16 +225,42 @@ def _chunk_round(
         q_tiles = jnp.where(
             (uq >= 0)[..., None], qpad[jnp.clip(uq, 0, m - 1)], 0.0
         )                                                  # [ub, tq, d_pad]
-        slabs = dev_slab[ul]                               # [ub, L_pad, d_pad]
-        nd, nli = kops.leaf_scan(q_tiles, slabs, k=k, backend=backend, tq=tq)
-
         gl = ul + lo
+        slabs = dev_slab[ul]                               # [ub, L_pad, d_pad]
+        if quant:
+            bits = q_dead[gl]                              # [ub, L_pad/8] u8
+            dead_tile = (
+                (bits[:, :, None]
+                 >> jnp.arange(7, -1, -1, dtype=jnp.uint8)) & 1
+            ).reshape(bits.shape[0], -1)[
+                :, : dev_slab.shape[1]
+            ].astype(bool)                                 # [ub, L_pad]
+            slabs = slabs.astype(jnp.float32)
+            if affine:
+                slabs = (
+                    slabs * q_scale[gl][:, None, :]
+                    + q_offset[gl][:, None, :]
+                )
+            slabs = jnp.where(
+                dead_tile[:, :, None], jnp.float32(kops.PAD_COORD), slabs
+            )
+        nd, nli = kops.leaf_scan(q_tiles, slabs, k=kl, backend=backend, tq=tq)
+
         ustart = leaf_start[gl]
         usize = leaf_size[gl]
         valid = nli < usize[:, None, None]
+        if quant:
+            # tombstoned rows sit BELOW usize: drop any that the selection
+            # still surfaced (their PAD_COORD distance loses contests, but a
+            # sparse leaf can leave them in the top-k tail — and the exact
+            # re-rank would rescore them at their true coordinates)
+            sel_dead = dead_tile[
+                jnp.arange(ul.shape[0])[:, None, None], nli
+            ]
+            valid = valid & ~sel_dead
         gidx = jnp.where(valid, nli + ustart[:, None, None], -1)
-        ndm = jnp.where(valid, nd, jnp.float32(kops.INVALID_DIST)).reshape(-1, k)
-        nim = gidx.reshape(-1, k)
+        ndm = jnp.where(valid, nd, jnp.float32(kops.INVALID_DIST)).reshape(-1, kl)
+        nim = gidx.reshape(-1, kl)
         flat_q = uq.reshape(-1)
         safe_q = jnp.where(flat_q < 0, m, flat_q)
         cd = jnp.concatenate([knn_d[safe_q], ndm], axis=1)
@@ -237,7 +285,7 @@ def _chunk_round(
         node=jnp.where(in_chunk, ex.node, node).astype(jnp.int32),
         fromc=jnp.where(in_chunk, ex.fromc, fromc).astype(jnp.int32),
     )
-    radius = jnp.sqrt(knn_d[:m, k - 1])
+    radius = jnp.sqrt(knn_d[:m, k - 1]) + qeps
     new_leaf, st = traversal.advance(
         st, qpad, radius, split_dim, split_val, first_leaf_heap=first_leaf_heap
     )
@@ -293,12 +341,36 @@ class ChunkResidentEngine:
         self.backend = backend
         self.unit_block = int(unit_block)
         self.starvation_deadline = max(1, int(starvation_deadline))
+        self._dummy_meta = None   # placeholder dequantize args (fp32 stores)
         # leaf -> owning chunk, precomputed once: the per-round host work is
         # a masked table lookup over the LIVE queries only, not a
         # searchsorted over the full batch
         self._leaf_chunk = store.chunk_of_leaf(
             np.arange(store.n_leaves, dtype=np.int64)
         )
+
+    def _quant_args(self):
+        """Dequantize arguments for the fused round: the store's device-
+        resident (scale, offset, dead-mask) triple plus the radius-inflation
+        eps, or tiny placeholders (dead code under ``quant=False``) so the
+        fp32 round keeps a single stable signature."""
+        if self.store.quantized:
+            sc, of, dd = self.store.device_meta()
+            return (
+                sc, of, dd, np.float32(self.store.quant_eps), True,
+                self.store.affine,
+            )
+        if self._dummy_meta is None:
+            self._dummy_meta = jax.device_put(
+                (
+                    jnp.ones((1, 1), jnp.float32),
+                    jnp.zeros((1, 1), jnp.float32),
+                    jnp.zeros((1, 1), jnp.uint8),
+                ),
+                self.store.device,
+            )
+        sc, of, dd = self._dummy_meta
+        return sc, of, dd, np.float32(0.0), False, False
 
     def warm(self, m: int, k: int, tq: int) -> int:
         """Eagerly compile every executable a batch shape ``m`` can reach:
@@ -322,6 +394,7 @@ class ChunkResidentEngine:
             )
             return jax.device_put(arrs, dev)
 
+        qsc, qof, qdd, qeps, quant, affine = self._quant_args()
         for _cid, dev_slab, lo in self.store.stream([0]):
             for ms in shapes:
                 node, fromc, leaf, knn_d, knn_i, qpad = state_at(ms)
@@ -335,8 +408,10 @@ class ChunkResidentEngine:
                         qpad, dev_slab, jnp.int32(lo),
                         self._leaf_start, self._leaf_size,
                         self._split_dim, self._split_val,
+                        qsc, qof, qdd, qeps,
                         k=k, tq=tq, first_leaf_heap=self.first_leaf_heap,
-                        ub=self.unit_block, backend=self.backend,
+                        ub=self.unit_block, backend=self.backend, quant=quant,
+                        affine=affine,
                     )
         for i, src in enumerate(shapes):
             node, fromc, leaf, knn_d, knn_i, qpad = state_at(src)
@@ -471,6 +546,8 @@ class ChunkResidentEngine:
             info["early_retired"] += int(rc.size)
             info["retire_emits"] += 1
 
+        qsc, qof, qdd, qeps, quant, affine = self._quant_args()
+
         def dispatch_round(visit: np.ndarray) -> None:
             nonlocal node, fromc, leaf, knn_d, knn_i
             flush_emit()   # the round donates knn_d/knn_i: deliver first
@@ -488,8 +565,10 @@ class ChunkResidentEngine:
                         qpad, dev_slab, jnp.int32(lo),
                         self._leaf_start, self._leaf_size,
                         self._split_dim, self._split_val,
+                        qsc, qof, qdd, qeps,
                         k=k, tq=tq, first_leaf_heap=first_leaf,
-                        ub=self.unit_block, backend=self.backend,
+                        ub=self.unit_block, backend=self.backend, quant=quant,
+                        affine=affine,
                     )
                 unit_counts.append(nu)
                 info["chunk_rounds"] += 1

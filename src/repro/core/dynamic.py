@@ -20,9 +20,10 @@ one of the repo's existing static engines:
                    index lifetime.  Batches at or beyond the rebuild/merge
                    crossover (``rebuild_crossover``) skip the chain and
                    trigger one flattening rebuild.
-  delete(ids)      TOMBSTONES: the row's ``live`` bit is cleared; on brute
-                   shards the row's COORDINATES are overwritten with
-                   ``PAD_COORD`` too (see FETCH WIDTHS below).  A shard
+  delete(ids)      TOMBSTONES: the row's ``live`` bit is cleared and the
+                   row is reclaimed in the backing structure — coordinate
+                   overwrite on brute shards, leaf-store row rewrite on
+                   tree shards (see FETCH WIDTHS below).  A shard
                    whose tombstone count exceeds ``tomb_limit`` is
                    compacted; a shard with no live rows is dropped.
   query(q, k)      fans out over live shards — grouped per DEVICE, one
@@ -50,20 +51,22 @@ planner decides for ``repro.api`` indexes and records why).
 
 FETCH WIDTHS — EXACTNESS UNDER TOMBSTONES (the invariant the parity
 harness checks): a shard must contribute its nearest ``min(k, n_live)``
-live points to the fold.
+live points to the fold.  EVERY shard fetches bare ``min(k, capacity)``
+candidates, because deletes reclaim the row in the backing structure at
+tombstone time (the ROADMAP's "tombstone coordinate overwrite", now
+covering both shard kinds):
 
-  * TREE shards fetch ``min(k + tomb_limit, capacity)`` candidates: the
-    shard never holds more than ``tomb_limit`` tombstones at query time,
-    so its nearest ``k + tomb_limit`` physical rows contain at least its
-    nearest ``k`` live ones.  (The leaf structure holds an immutable copy
-    of the slab, so tombstoned coordinates cannot be overwritten there.)
-  * BRUTE shards fetch only ``min(k, capacity)``: every tombstoned row's
-    coordinates were overwritten with ``PAD_COORD`` at delete time, so
-    dead rows rank strictly after ALL live rows and the nearest ``k``
-    physical rows ARE the nearest ``k`` live rows.  This is the ROADMAP's
-    "tombstone coordinate overwrite" — the per-shard fetch width drops
-    below ``k + tomb_limit`` wherever the backing structure permits the
-    overwrite.
+  * BRUTE shards overwrite the slab row's coordinates with ``PAD_COORD``,
+    so dead rows rank strictly after ALL live rows.
+  * TREE shards rewrite the corresponding leaf-store row
+    (``ChunkedLeafStore.kill_rows`` via ``_reclaim_tree_rows``): fp32
+    stores overwrite the slab row in place, quantized stores flip the
+    row's dead-mask bit (the scan-time dequantize masks dead rows back to
+    ``PAD_COORD``), re-uploading only the tiny mask — never the slabs.
+    The leaf-ordered fp32 rescore copies are overwritten too.
+
+Either way the nearest ``k`` physical rows ARE the nearest ``k`` live
+rows, so compaction pressure no longer inflates query shapes.
 
 Tombstoned/padding candidates are additionally masked via the ``live``
 bits, and the per-shard sorted lists are folded at the uniform merge width
@@ -110,6 +113,7 @@ import numpy as np
 
 from repro import faults
 from repro.core.lazysearch import BufferKDTree, SearchStats
+from repro.core.quantize import BYTES_PER_ELEM, PRECISIONS
 from repro.core.toptree import (
     PAD_COORD,
     _round_up,
@@ -240,12 +244,12 @@ class _Shard:
 
     def fetch_width(self, k: int) -> int:
         """Per-shard candidate fetch width for a k-NN query (see module
-        doc, FETCH WIDTHS): brute shards overwrite tombstone coordinates
-        so bare ``k`` suffices; tree shards add the tombstone BOUND (never
-        the live count — shapes must not depend on mutation history)."""
-        if self.engine is None:
-            return min(k, self.capacity)
-        return min(k + self.tomb_limit, self.capacity)
+        doc, FETCH WIDTHS): bare ``k`` suffices for BOTH kinds now that
+        tombstoned rows are reclaimed in the backing structure at delete
+        time — brute shards by PAD_COORD coordinate overwrite, tree
+        shards by leaf-store row rewrite (``_reclaim_tree_rows``) — so a
+        dead row can never outrank a live one."""
+        return min(k, self.capacity)
 
     def dev_slab(self):
         """Brute slab on this shard's device, tile-padded, built once and
@@ -294,6 +298,8 @@ class DynamicIndex:
         backend: str = "auto",
         devices: Optional[Sequence[Any]] = None,
         merge_async: bool = False,
+        precision: str = "fp32",
+        memory_budget: Optional[int] = None,
     ):
         if d < 1:
             raise ValueError(f"need d >= 1, got {d}")
@@ -303,6 +309,10 @@ class DynamicIndex:
             raise ValueError(f"tomb_limit must be >= 1, got {tomb_limit}")
         if brute_cutoff < 4:
             raise ValueError(f"brute_cutoff must be >= 4, got {brute_cutoff}")
+        if precision not in PRECISIONS:
+            raise ValueError(f"precision={precision!r} not in {PRECISIONS}")
+        if memory_budget is not None and memory_budget < 1:
+            raise ValueError(f"memory_budget must be >= 1, got {memory_budget}")
         self.d = int(d)
         self.base_capacity = int(base_capacity)
         self.tomb_limit = int(tomb_limit)
@@ -313,6 +323,14 @@ class DynamicIndex:
         self.tile_q = int(tile_q)
         self.backend = backend
         self.merge_async = bool(merge_async)
+        # tree-shard leaf slabs are stored at ``precision`` (brute shards
+        # stay fp32: they sit below the cutoff, a rounding error next to
+        # the tree rungs) and chunk-stream when ``memory_budget`` can't
+        # hold a rung's slab resident — see _tree_shard_chunks
+        self.precision = precision
+        self.memory_budget = (
+            int(memory_budget) if memory_budget is not None else None
+        )
         self._placer = ShardPlacer(devices)
         # stable device ordinals for fault injection / event strings:
         # placement drops lost devices, this list never mutates
@@ -437,13 +455,18 @@ class DynamicIndex:
                     s.device = new_dev
                     s._dev_slab = None
                     if s.engine is not None:
+                        # adopt the old store's state (codes + dead mask):
+                        # re-quantizing would refit scales against PAD-
+                        # overwritten reclaim rows and waste O(n d) work
                         s.engine = BufferKDTree(
                             s.points,
                             tree=s.engine.tree,
-                            n_chunks=1,
+                            n_chunks=s.engine.store.n_chunks,
                             tile_q=self.tile_q,
                             backend=self.backend,
                             device=new_dev,
+                            precision=s.engine.precision,
+                            store_state=s.engine.store.quantized_state(),
                         )
                     moved += 1
             self._merge_stats["device_loss"] += 1
@@ -518,6 +541,15 @@ class DynamicIndex:
                     ).items():
                         arrays[f"shard{i}/tree/{key}"] = arr
                     sm["tree"] = dict(height=t.height, leaf_pad=t.leaf_pad)
+                    if s.engine.store.quantized:
+                        # quantized stores round-trip their codes + dead
+                        # mask verbatim (re-quantizing on restore would
+                        # refit scales against reclaim-overwritten rows)
+                        for key, arr in (
+                            s.engine.store.quantized_state()
+                            .to_arrays().items()
+                        ):
+                            arrays[f"shard{i}/{key}"] = arr
                 shard_meta.append(sm)
             meta = dict(
                 d=self.d,
@@ -528,6 +560,8 @@ class DynamicIndex:
                 tile_q=self.tile_q,
                 backend=self.backend,
                 merge_async=self.merge_async,
+                precision=self.precision,
+                memory_budget=self.memory_budget,
                 next_id=int(self._next_id),
                 n_live=int(self._n_live),
                 warm_shapes=sorted(list(t) for t in self._warm_shapes),
@@ -566,6 +600,9 @@ class DynamicIndex:
             backend=meta["backend"],
             devices=devices,
             merge_async=bool(meta["merge_async"]),
+            # snapshots written before the precision field default to fp32
+            precision=str(meta.get("precision", "fp32")),
+            memory_budget=meta.get("memory_budget"),
         )
         idx._warm_shapes = {tuple(t) for t in meta.get("warm_shapes", [])}
         # biggest-first placement, like any bin-packing heuristic
@@ -585,6 +622,8 @@ class DynamicIndex:
                 device = idx._placer.place(cap, sm["kind"])
                 engine = None
                 if sm["kind"] == "tree":
+                    from repro.core.quantize import QuantizedSlabs
+
                     tm = sm["tree"]
                     prefix = f"shard{i}/tree/"
                     t_arr = {
@@ -603,16 +642,33 @@ class DynamicIndex:
                         height=int(tm["height"]),
                         leaf_pad=int(tm["leaf_pad"]),
                     )
+                    store_state = None
+                    if f"shard{i}/quant/codes" in arrays:
+                        store_state = QuantizedSlabs.from_arrays(
+                            arrays, idx.precision, prefix=f"shard{i}/quant"
+                        )
                     engine = BufferKDTree(
-                        pts, tree=tree, n_chunks=1, tile_q=idx.tile_q,
+                        pts, tree=tree,
+                        n_chunks=idx._tree_shard_chunks(
+                            cap, int(tm["height"])
+                        ),
+                        tile_q=idx.tile_q,
                         backend=idx.backend, device=device,
+                        precision=idx.precision, store_state=store_state,
                     )
-                idx._shards.append(_Shard(
+                shard = _Shard(
                     rung=int(sm["rung"]), capacity=cap, points=pts,
                     ids=ids, live=live, n_rows=int(sm["n_rows"]),
                     n_tomb=int(sm["n_tomb"]), engine=engine, device=device,
                     seq=next(idx._seq), tomb_limit=idx.tomb_limit,
-                ))
+                )
+                if engine is not None and shard.n_tomb:
+                    # re-apply the leaf-store reclaim (idempotent): format-1
+                    # snapshots predate the tree-shard row rewrite, and the
+                    # tightened bare-k fetch width depends on it
+                    tomb_rows = np.nonzero(~live[: shard.n_rows])[0]
+                    idx._reclaim_tree_rows(shard, tomb_rows)
+                idx._shards.append(shard)
             idx._next_id = int(meta["next_id"])
             idx._n_live = int(meta["n_live"])
             # a snapshot taken mid-merge holds the pre-swap sources: the
@@ -626,6 +682,79 @@ class DynamicIndex:
         while (self.base_capacity << r) < count:
             r += 1
         return r
+
+    def _tree_geom(self, cap: int, height: int) -> Tuple[int, int, int]:
+        """(n_leaves, per-leaf slab bytes, dequantize meta bytes) of a
+        rung-``cap`` tree shard at ``height`` — the planner's residency
+        model (same padding rules as ``build_top_tree``)."""
+        n_leaves = 1 << height
+        leaf_pad = max(_round_up(-(-cap // n_leaves), 8), 8)
+        d_pad = max(_round_up(self.d, 8), 8)
+        leaf_bytes = leaf_pad * d_pad * BYTES_PER_ELEM[self.precision]
+        if self.precision == "fp32":
+            meta = 0
+        elif self.precision == "fp16":
+            meta = n_leaves * (-(-leaf_pad // 8))
+        else:
+            meta = n_leaves * (2 * d_pad * 4 + -(-leaf_pad // 8))
+        return n_leaves, leaf_bytes, meta
+
+    def _tree_shard_height(self, cap: int) -> int:
+        """Tree height for a rung-``cap`` shard: the usual heuristic,
+        DEEPENED under a ``memory_budget`` until two leaves (the streaming
+        floor) fit — big leaves are fine when the whole slab is resident,
+        but they are the streaming granularity, so an honest budget needs
+        leaves small enough to stream within it.  Bounded by the 8-row
+        leaf-pad floor; a budget below even that is handled (and reported)
+        by ``_tree_shard_chunks``."""
+        height = suggest_height(cap)
+        if self.memory_budget is None:
+            return height
+        max_h = max(height, (max(2, cap // 8)).bit_length() - 1)
+        best_h, best_floor = height, None
+        for h in range(height, max_h + 1):
+            n_leaves, leaf_bytes, meta = self._tree_geom(cap, h)
+            if (
+                n_leaves * leaf_bytes + meta <= self.memory_budget
+                or 2 * leaf_bytes + meta <= self.memory_budget
+            ):
+                return h
+            floor = 2 * leaf_bytes + meta
+            if best_floor is None or floor < best_floor:
+                best_h, best_floor = h, floor
+        # nothing fits (quantize metadata alone can exceed a tiny budget):
+        # take the height whose streaming floor comes closest — the
+        # over-budget event is recorded by _tree_shard_chunks
+        return best_h
+
+    def _tree_shard_chunks(self, cap: int, height: int) -> int:
+        """Budget-aware chunk count for one tree shard's leaf store: keep
+        the rung resident when its slab + any dequantize metadata fit
+        ``memory_budget``, otherwise chunk-stream with two buffers
+        resident.  The budget bounds each shard individually — the
+        dominant rung holds ~all points, so it is the forest's residency
+        high-water mark; lower rungs are geometrically smaller.  A budget
+        below even the 2-leaf streaming floor is recorded as an
+        over-budget event (surfaced via ``SearchStats.events``), and the
+        shard streams one leaf per chunk — best effort, honestly
+        reported.
+        """
+        if self.memory_budget is None:
+            return 1
+        n_leaves, leaf_bytes, meta = self._tree_geom(cap, height)
+        if n_leaves * leaf_bytes + meta <= self.memory_budget:
+            return 1
+        chunk_leaves = (self.memory_budget - meta) // (2 * leaf_bytes)
+        if chunk_leaves >= 1:
+            return min(-(-n_leaves // int(chunk_leaves)), n_leaves)
+        with self._mu:
+            self._events.append(
+                f"over budget: memory_budget={self.memory_budget}B is "
+                f"below the rung-{cap} tree shard's 2-leaf streaming "
+                f"floor {2 * leaf_bytes + meta}B at precision "
+                f"{self.precision}; streaming one leaf per chunk"
+            )
+        return n_leaves
 
     def _make_shard(self, pts: np.ndarray, ids: np.ndarray) -> _Shard:
         """Build one immutable shard from live rows (sorted by id), place
@@ -649,13 +778,15 @@ class DynamicIndex:
         if kind == "tree":
             # static chunked-engine shard over the FULL padded slab: the
             # rung, not the live count, determines every compiled shape
+            height = self._tree_shard_height(cap)
             engine = BufferKDTree(
                 slab,
-                height=suggest_height(cap),
-                n_chunks=1,
+                height=height,
+                n_chunks=self._tree_shard_chunks(cap, height),
                 tile_q=self.tile_q,
                 backend=self.backend,
                 device=device,
+                precision=self.precision,
             )
         shard = _Shard(
             rung=rung, capacity=cap, points=slab, ids=id_arr, live=live,
@@ -903,9 +1034,12 @@ class DynamicIndex:
     def _tombstone_rows(self, shard: _Shard, dead_ids: np.ndarray) -> None:
         """Clear live bits for the ``dead_ids`` present AND live in the
         shard (idempotent: ids already tombstoned or compacted away are
-        skipped — merge-retry deltas are cumulative) and, on brute shards,
-        overwrite the coordinates with PAD_COORD so the tightened fetch
-        width stays exact (caller holds ``_mu``)."""
+        skipped — merge-retry deltas are cumulative) and reclaim the rows
+        in the backing structure so the bare-``k`` fetch width stays exact
+        (caller holds ``_mu``): brute shards overwrite the slab
+        coordinates with PAD_COORD; tree shards rewrite the corresponding
+        leaf-store rows (``ChunkedLeafStore.kill_rows``) plus the
+        leaf-ordered rescore copies."""
         sid = shard.ids[: shard.n_rows]
         pos = np.searchsorted(sid, dead_ids)
         safe = np.clip(pos, 0, max(0, shard.n_rows - 1))
@@ -918,6 +1052,33 @@ class DynamicIndex:
         if shard.engine is None:
             shard.points[rows] = np.float32(PAD_COORD)
             shard._dev_slab = None   # re-put on next query
+        else:
+            self._reclaim_tree_rows(shard, rows)
+
+    @staticmethod
+    def _reclaim_tree_rows(shard: _Shard, rows: np.ndarray) -> None:
+        """Rewrite tombstoned rows inside a tree shard's leaf structure
+        (the ROADMAP's tombstone coordinate overwrite, tree-shard case):
+        map slab rows -> leaf-ordered positions -> (leaf, row) and kill
+        them in the ``ChunkedLeafStore`` (fp32: PAD_COORD overwrite in
+        place; quantized: dead-mask flip, re-uploading only the tiny
+        mask).  The leaf-ordered fp32 copies (``tree.points`` /
+        ``points_padded``) are overwritten too, so the exact re-rank can
+        never resurrect a deleted point and persisted derived slabs carry
+        the reclaim.  Idempotent — restore re-applies it for snapshots
+        written before this reclaim existed."""
+        tree = shard.engine.tree
+        n = tree.points.shape[0]
+        inv = np.empty((n,), np.int64)
+        inv[tree.orig_idx] = np.arange(n)
+        p = inv[rows]                                 # leaf-ordered positions
+        leaf = np.searchsorted(
+            tree.leaf_start, p, side="right"
+        ).astype(np.int64) - 1
+        lrow = p - tree.leaf_start[leaf]
+        shard.engine.store.kill_rows(leaf, lrow)
+        tree.points[p] = np.float32(PAD_COORD)
+        tree.points_padded[leaf, lrow, :] = np.float32(PAD_COORD)
 
     def delete(self, ids) -> int:
         """Tombstone the given live ids; returns the count removed.

@@ -50,6 +50,7 @@ from repro.core.chunked_jit import (
     DEFAULT_STARVATION_DEADLINE,
     ChunkResidentEngine,
 )
+from repro.core.quantize import QUANT_OVERFETCH, QuantizedSlabs
 from repro.core.toptree import (
     TopTree,
     build_top_tree,
@@ -185,8 +186,9 @@ def _merge_knn(
     knn_d: jnp.ndarray,       # f32[m+1, k] squared dists (row m = dump)
     knn_i: jnp.ndarray,       # i32[m+1, k] reordered-global indices
     unit_q: jnp.ndarray,      # i32[W, TQ]  (-1 padded)
-    new_d: jnp.ndarray,       # f32[W, TQ, k]
-    new_li: jnp.ndarray,      # i32[W, TQ, k] local slab indices
+    new_d: jnp.ndarray,       # f32[W, TQ, kl]  (kl = min(k, L_pad))
+    new_li: jnp.ndarray,      # i32[W, TQ, kl] local slab indices
+    new_dead: jnp.ndarray,    # bool[W, TQ, kl] selected-row-is-dead mask
     unit_start: jnp.ndarray,  # i32[W] leaf_start per unit
     unit_size: jnp.ndarray,   # i32[W] leaf size per unit
     *,
@@ -194,13 +196,14 @@ def _merge_knn(
 ):
     m = knn_d.shape[0] - 1
     w, tq = unit_q.shape
+    kl = new_li.shape[-1]
     flat_q = unit_q.reshape(-1)
     safe_q = jnp.where(flat_q < 0, m, flat_q)
 
-    valid = new_li < unit_size[:, None, None]                  # padded slab rows
+    valid = (new_li < unit_size[:, None, None]) & ~new_dead    # padded/dead rows
     gidx = jnp.where(valid, new_li + unit_start[:, None, None], -1)
-    nd = jnp.where(valid, new_d, jnp.float32(kops.INVALID_DIST)).reshape(-1, k)
-    ni = gidx.reshape(-1, k)
+    nd = jnp.where(valid, new_d, jnp.float32(kops.INVALID_DIST)).reshape(-1, kl)
+    ni = gidx.reshape(-1, kl)
 
     cur_d = knn_d[safe_q]
     cur_i = knn_i[safe_q]
@@ -221,6 +224,7 @@ def _advance_batch(
     knn_d: jnp.ndarray,       # f32[m+1, k]
     split_dim: jnp.ndarray,
     split_val: jnp.ndarray,
+    qeps: jnp.ndarray,        # f32[] radius inflation (quantization bound)
     *,
     first_leaf_heap: int,
     k: int,
@@ -228,7 +232,7 @@ def _advance_batch(
     m = queries.shape[0]
     safe = jnp.where(idx < 0, 0, idx)
     q = queries[safe]
-    radius = jnp.sqrt(knn_d[jnp.where(idx < 0, m, idx), k - 1])
+    radius = jnp.sqrt(knn_d[jnp.where(idx < 0, m, idx), k - 1]) + qeps
     st = traversal.TraversalState(node=node, fromc=fromc)
     leaf, st = traversal.advance(
         st, q, radius, split_dim, split_val, first_leaf_heap=first_leaf_heap
@@ -275,6 +279,8 @@ class BufferKDTree:
         unit_block: int = 8,
         starvation_deadline: int = DEFAULT_STARVATION_DEADLINE,
         tree: Optional[TopTree] = None,
+        precision: str = "fp32",
+        store_state: Optional[QuantizedSlabs] = None,
     ):
         points = np.asarray(points, dtype=np.float32)
         n, d = points.shape
@@ -303,16 +309,32 @@ class BufferKDTree:
         self.d_pad = max(
             d_pad_multiple, ((d + d_pad_multiple - 1) // d_pad_multiple) * d_pad_multiple
         )
-        slabs = self.tree.points_padded
-        if self.d_pad != d:
-            pad = np.zeros(
-                (slabs.shape[0], slabs.shape[1], self.d_pad - d), dtype=np.float32
+        if store_state is not None:
+            # snapshot-restore path: adopt the persisted quantized store
+            # verbatim (codes, scales, dead mask) — re-quantizing from the
+            # restored fp32 points would re-fit scales against tombstone-
+            # mutated coordinates and drift from the saved codes
+            if store_state.codes.shape[2] != self.d_pad:
+                raise ValueError(
+                    f"restored store has d_pad={store_state.codes.shape[2]}, "
+                    f"tree wants {self.d_pad}"
+                )
+            self.store = ChunkedLeafStore(
+                store_state, n_chunks=n_chunks, device=device, uniform=True
             )
-            slabs = np.concatenate([slabs, pad], axis=-1)
-        # uniform chunk slabs: one compiled chunk round serves every chunk
-        self.store = ChunkedLeafStore(
-            slabs, n_chunks=n_chunks, device=device, uniform=True
-        )
+        else:
+            slabs = self.tree.points_padded
+            if self.d_pad != d:
+                pad = np.zeros(
+                    (slabs.shape[0], slabs.shape[1], self.d_pad - d), dtype=np.float32
+                )
+                slabs = np.concatenate([slabs, pad], axis=-1)
+            # uniform chunk slabs: one compiled chunk round serves every chunk
+            self.store = ChunkedLeafStore(
+                slabs, n_chunks=n_chunks, device=device, uniform=True,
+                precision=precision, leaf_sizes=self.tree.leaf_sizes(),
+            )
+        self.precision = self.store.precision
 
         self.buffer_size = int(
             buffer_size if buffer_size is not None else default_buffer_size(h)
@@ -358,6 +380,14 @@ class BufferKDTree:
         """Stats of the most recent ``query`` call (immutable snapshot)."""
         return self._last_stats
 
+    def _engine_k(self, k: int) -> int:
+        """Effective selection width the engines run at: quantized stores
+        overfetch so the exact fp32 re-rank can see past the quantization
+        selection band (``quantize.QUANT_OVERFETCH``); fp32 runs at k."""
+        if self.store.quantized:
+            return min(k + QUANT_OVERFETCH, self.n)
+        return k
+
     def warm(self, m: int, k: int = 10) -> None:
         """Precompile the chunked engine's fused round for query batches of
         ``m``: the full shape plus every compaction-ladder rung, so no
@@ -365,7 +395,7 @@ class BufferKDTree:
         the host tier (its plan ladder compiles are already shape-bounded).
         """
         if self.engine == "chunked":
-            self._engine.warm(m, k, self.engine_tile_q)
+            self._engine.warm(m, self._engine_k(k), self.engine_tile_q)
 
     def _scan_units(
         self,
@@ -396,16 +426,39 @@ class BufferKDTree:
         # Gather query tiles (dump row m is all-zero => harmless distances).
         q_tiles = queries_pad[jnp.where(uq_j < 0, m, uq_j)]      # [Wp, TQ, d_pad]
         slab_tiles = dev_slab[ul_j - leaf_lo]                    # [Wp, L_pad, d_pad]
+        kl = min(k, slab_tiles.shape[1])
+        if self.store.quantized:
+            sc, of, dd = self.store.device_meta()
+            bits = dd[ul_j]                                 # [Wp, L_pad/8] u8
+            dead_tile = (
+                (bits[:, :, None]
+                 >> jnp.arange(7, -1, -1, dtype=jnp.uint8)) & 1
+            ).reshape(bits.shape[0], -1)[
+                :, : slab_tiles.shape[1]
+            ].astype(bool)                                  # [Wp, L_pad]
+            slab_tiles = slab_tiles.astype(jnp.float32)
+            if self.store.affine:
+                slab_tiles = (
+                    slab_tiles * sc[ul_j][:, None, :] + of[ul_j][:, None, :]
+                )
+            slab_tiles = jnp.where(
+                dead_tile[:, :, None], jnp.float32(kops.PAD_COORD), slab_tiles
+            )
 
         nd, nli = kops.leaf_scan(
-            q_tiles, slab_tiles, k=k, backend=self.k_backend, tq=tq
+            q_tiles, slab_tiles, k=kl, backend=self.k_backend, tq=tq
         )
+        if self.store.quantized:
+            new_dead = dead_tile[jnp.arange(wp)[:, None, None], nli]
+        else:
+            new_dead = jnp.zeros(nli.shape, bool)
         knn_d, knn_i = _merge_knn(
             knn_d,
             knn_i,
             uq_j,
             nd,
             nli,
+            new_dead,
             jnp.asarray(self._leaf_start_np[ul]),
             jnp.asarray(self._leaf_size_np[ul]),
             k=k,
@@ -434,13 +487,14 @@ class BufferKDTree:
         sb = _StatsBuilder()
         first_leaf = self.tree.first_leaf_heap
         tq = self.tile_q
+        k_eff = self._engine_k(k)
 
         qs = jnp.asarray(queries)
 
         if self.engine == "chunked":
             qpad_m = jnp.zeros((m, self.d_pad), jnp.float32).at[:, :d].set(qs)
             _d2, gi, info = self._engine.run(
-                qpad_m, k, self.engine_tile_q, self.buffer_size
+                qpad_m, k_eff, self.engine_tile_q, self.buffer_size
             )
             sb.iterations = info["rounds"]
             sb.flushes = info["rounds"]
@@ -455,13 +509,13 @@ class BufferKDTree:
             sb.tail_s = info["tail_s"]
             sb.sync_wait_s = info["sync_wait_s"]
             self._last_stats = sb.freeze()
-            return self._finalize(gi, queries)
+            return self._finalize(gi, queries, k)
 
         qpad = jnp.zeros((m + 1, self.d_pad), jnp.float32)
         qpad = qpad.at[:m, :d].set(qs)
 
-        knn_d = jnp.full((m + 1, k), kops.INVALID_DIST, jnp.float32)
-        knn_i = jnp.full((m + 1, k), -1, jnp.int32)
+        knn_d = jnp.full((m + 1, k_eff), kops.INVALID_DIST, jnp.float32)
+        knn_i = jnp.full((m + 1, k_eff), -1, jnp.int32)
 
         node = np.ones((m,), np.int32)
         fromc = np.zeros((m,), np.int32)
@@ -489,8 +543,9 @@ class BufferKDTree:
                     knn_d,
                     self._split_dim,
                     self._split_val,
+                    np.float32(self.store.quant_eps),
                     first_leaf_heap=first_leaf,
-                    k=k,
+                    k=k_eff,
                 )
                 leaf = np.asarray(leaf)[:mm]
                 node[idx] = np.asarray(nn)[:mm]
@@ -518,7 +573,7 @@ class BufferKDTree:
                         qpad,
                         knn_d,
                         knn_i,
-                        k,
+                        k_eff,
                         sb,
                     )
                     sb.chunk_rounds += 1
@@ -543,11 +598,17 @@ class BufferKDTree:
 
         self._last_stats = sb.freeze()
         gi = np.asarray(knn_i[:m])
-        return self._finalize(gi, queries)
+        return self._finalize(gi, queries, k)
 
     def _finalize(
-        self, gi: np.ndarray, queries: np.ndarray
+        self, gi: np.ndarray, queries: np.ndarray, k: int
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Exact rescoring pass over the full batch (``finalize_candidates``
-        for the whole m rows)."""
-        return finalize_candidates(self.tree, queries, gi)
+        for the whole m rows).  ``gi`` may carry more than ``k`` columns
+        (quantized overfetch); the rescored, re-sorted result is sliced back
+        to the caller's k — this is where quantized selection becomes an
+        exact fp32 answer."""
+        dists, idx = finalize_candidates(self.tree, queries, gi)
+        if dists.shape[1] != k:
+            dists, idx = dists[:, :k], idx[:, :k]
+        return dists, idx

@@ -79,9 +79,13 @@ def stream_query(
 
     out_d = np.empty((m, k), np.float32)
     out_i = np.full((m, k), -1, np.int64)
+    # quantized stores overfetch candidates; the per-row exact re-rank below
+    # slices each emission back to the caller's k (same seam as the batch path)
+    k_eff = bkd._engine_k(k)
 
     def on_retire(rows: np.ndarray, d2: np.ndarray, gi: np.ndarray) -> None:
         dists, idx = finalize_candidates(bkd.tree, queries[rows], gi)
+        dists, idx = dists[:, :k], idx[:, :k]
         out_d[rows] = dists
         out_i[rows] = idx
         emit(rows, dists, idx)
@@ -90,7 +94,7 @@ def stream_query(
         jnp.asarray(queries)
     )
     _d2, _gi, info = bkd._engine.run(
-        qpad, k, bkd.engine_tile_q, bkd.buffer_size, on_retire=on_retire
+        qpad, k_eff, bkd.engine_tile_q, bkd.buffer_size, on_retire=on_retire
     )
 
     sb = _StatsBuilder()

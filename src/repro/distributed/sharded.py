@@ -47,6 +47,7 @@ class MultiDeviceTrees:
         tile_q: int = 128,
         buffer_size: Optional[int] = None,
         starvation_deadline: int = DEFAULT_STARVATION_DEADLINE,
+        precision: str = "fp32",
     ):
         self.devices = list(devices) if devices is not None else jax.devices()
         self.active: List[int] = []   # engines used by the last query
@@ -66,6 +67,12 @@ class MultiDeviceTrees:
             buffer_size=buffer_size,
             starvation_deadline=starvation_deadline,
             device=self.devices[0],
+            precision=precision,
+        )
+        # replicas reuse the first engine's quantized codes (quantization
+        # is deterministic, so this only skips the redundant O(n d) refit)
+        replica_store = (
+            first.store.quantized_state() if first.store.quantized else None
         )
         self.engines = [first] + [
             BufferKDTree(
@@ -77,6 +84,8 @@ class MultiDeviceTrees:
                 starvation_deadline=starvation_deadline,
                 device=dev,
                 tree=first.tree,
+                precision=precision,
+                store_state=replica_store,
             )
             for dev in self.devices[1:]
         ]

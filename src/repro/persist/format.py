@@ -1,6 +1,6 @@
 """Versioned snapshot store: manifest + slab arrays, atomic commit, keep-k GC.
 
-On-disk layout (format version 1)::
+On-disk layout (format version 2; history at ``FORMAT_VERSION``)::
 
     <root>/
       v_0000000001/
@@ -39,13 +39,21 @@ from repro import faults
 
 __all__ = [
     "FORMAT_VERSION",
+    "READABLE_FORMATS",
     "PersistError",
     "PersistUnsupported",
     "VersionStore",
     "fsync_dir",
 ]
 
-FORMAT_VERSION = 1
+# Format history:
+#   1  original layout (manifest.json + arrays.npz)
+#   2  quantized leaf slabs: snapshots may carry per-shard/engine
+#      ``quant/...`` arrays (codes, scale, offset, dead mask, eps) and
+#      ``precision``/``strict_budget`` spec fields.  Structurally identical
+#      to 1 — format-1 snapshots load unchanged (absent fields => fp32).
+FORMAT_VERSION = 2
+READABLE_FORMATS = (1, 2)
 
 _VERSION_RE = re.compile(r"^v_(\d{10})$")
 
@@ -162,10 +170,10 @@ class VersionStore:
             raise PersistError(f"no complete snapshot versions in {self.root}")
         with open(os.path.join(self._dir(version), self.MANIFEST)) as f:
             manifest = json.load(f)
-        if manifest.get("format") != FORMAT_VERSION:
+        if manifest.get("format") not in READABLE_FORMATS:
             raise PersistError(
                 f"snapshot v{version} has format {manifest.get('format')!r}; "
-                f"this build reads format {FORMAT_VERSION}"
+                f"this build reads formats {READABLE_FORMATS}"
             )
         return manifest
 

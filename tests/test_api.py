@@ -173,12 +173,15 @@ class TestMutabilityContract:
                 assert not c.device_parallel_mutable, name
 
     def test_mutable_budget_shortfall_is_recorded(self):
-        # the dynamic forest cannot chunk-stream yet; a busted budget must
-        # be recorded as best-effort, never silently ignored
+        # an infeasible budget (below the 2-leaf streaming floor of the
+        # largest rung even at int8) must set the structured over_budget
+        # flag and say so in prose — never silently ignored
         p = plan(200_000, 10, k=10, devices=[object()], mutable=True,
                  memory_budget=100_000)
         assert p.engine == "dynamic"
-        assert any("best effort" in r for r in p.reasons)
+        assert p.over_budget
+        assert any("[over budget]" in r and "2-leaf streaming floor" in r
+                   for r in p.reasons)
 
     def test_mutable_budget_shortfall_not_hidden_by_placement(self):
         # the largest rung is never split across devices, so more devices
@@ -186,7 +189,8 @@ class TestMutabilityContract:
         # budget and silently drop the warning
         p = plan(200_000, 10, k=10, devices=[object()] * 4, mutable=True,
                  memory_budget=100_000)
-        assert any("best effort" in r for r in p.reasons)
+        assert p.over_budget
+        assert any("[over budget]" in r for r in p.reasons)
 
     def test_mutable_with_immutable_pin_rejected(self):
         with pytest.raises(ValueError, match="mutable=True"):
@@ -221,9 +225,12 @@ class TestPlanner:
     def test_memory_budget_drives_chunk_count(self):
         n, d = 200_000, 10
         slab = estimate_slab_bytes(n, d, height=plan(n, d).height)
-        # budget below the slab => chunked with N > 1 and two buffers fitting
+        # budget below the slab => chunked with N > 1 and two buffers
+        # fitting (precision pinned: otherwise the planner prefers
+        # quantizing down to fit resident over chunk-streaming)
         budget = slab // 3
-        p = plan(n, d, k=10, devices=[object()], memory_budget=budget)
+        p = plan(n, d, k=10, devices=[object()], memory_budget=budget,
+                 precision="fp32")
         assert p.engine == "chunked"
         assert p.n_chunks > 1
         # resident estimate uses CEIL leaves-per-chunk (what the store
@@ -233,6 +240,7 @@ class TestPlanner:
         # generous budget => device-resident N=1
         p1 = plan(n, d, k=10, devices=[object()], memory_budget=slab * 2)
         assert (p1.engine, p1.n_chunks) == ("chunked", 1)
+        assert p1.precision == "fp32"
 
     def test_device_count_drives_forest(self):
         p = plan(100_000, 10, k=10, devices=[object()] * 4)
@@ -262,9 +270,10 @@ class TestPlanner:
         h = plan(n, d, devices=[object()] * 4).height
         per_shard = estimate_slab_bytes(n, d, h) // 4
         # budget below the per-shard slab: forest's device-resident shards
-        # cannot fit -> sharded replicas with chunk streaming
+        # cannot fit -> sharded replicas with chunk streaming (precision
+        # pinned so the planner cannot quantize its way back under budget)
         p = plan(n, d, k=10, devices=[object()] * 4,
-                 memory_budget=per_shard // 2)
+                 memory_budget=per_shard // 2, precision="fp32")
         assert p.engine == "sharded"
         assert p.n_chunks > 1
         assert any("budget" in r for r in p.reasons)
@@ -274,7 +283,7 @@ class TestPlanner:
         h = plan(n, d, devices=[object()]).height
         budget = estimate_slab_bytes(n, d, h) // 3
         p = plan(n, d, devices=[object()], engine="host",
-                 memory_budget=budget)
+                 memory_budget=budget, precision="fp32")
         assert p.n_chunks > 1
         assert p.resident_bytes <= budget
 
@@ -392,7 +401,7 @@ class TestCalibration:
         h = plan(n, d, devices=[object()]).height
         budget = estimate_slab_bytes(n, d, h) // 3
         p = plan(n, d, k=10, devices=[object()], memory_budget=budget,
-                 calibration=self._cal())
+                 calibration=self._cal(), precision="fp32")
         assert any("calibrated chunk copy" in r and "GB/s" in r
                    for r in p.reasons)
 
@@ -584,7 +593,12 @@ class TestCalibrationRefresh:
         p = plan(50_000, 8, m=50_000, devices=[object()],
                  calibration="refresh")
         assert any("calibration auto-refresh" in r for r in p.reasons)
-        assert not any("calibration stale" in r for r in p.reasons)
+        # the inline probe only re-measures the fast H2D fields; the slow
+        # ones (round cost, engine q/s) still carry the old timestamps, so
+        # the plan must say so instead of pretending refresh fixed them
+        assert any("calibration stale: slow fields" in r for r in p.reasons)
+        assert not any("calibration stale" in r and "slow fields" not in r
+                       for r in p.reasons)
 
 
 class TestKNNIndexFacade:

@@ -570,9 +570,11 @@ class TestBackgroundMerges:
 
 
 class TestTombstoneOverwrite:
-    """ROADMAP debt: tombstoned rows on brute shards get PAD_COORD written,
-    so the per-shard fetch width tightens from k + tomb_limit to bare k —
-    and the tightened bound must stay exact (the parity harness covers the
+    """ROADMAP debt, both halves now paid: tombstoned rows are reclaimed
+    in the backing structure at delete time — PAD_COORD coordinate
+    overwrite on brute shards, leaf-store row rewrite on tree shards — so
+    EVERY shard's fetch width tightens from k + tomb_limit to bare k, and
+    the tightened bound must stay exact (the parity harness covers the
     behavior generatively; these pin the mechanism)."""
 
     def test_brute_rows_overwritten_and_width_tightened(self):
@@ -597,7 +599,9 @@ class TestTombstoneOverwrite:
         assert shard.fetch_width(4) == 4
         _check_parity(idx, model, rng.normal(size=(6, D)).astype(np.float32), 4)
 
-    def test_tree_shards_keep_tombstone_bound(self):
+    def test_tree_rows_reclaimed_and_width_tightened(self):
+        from repro.core.toptree import PAD_COORD
+
         rng = np.random.default_rng(38)
         idx = DynamicIndex(D, base_capacity=32, tomb_limit=4, brute_cutoff=32)
         model = {}
@@ -605,16 +609,47 @@ class TestTombstoneOverwrite:
         layout = {kind for *_, kind in idx.shard_layout()}
         assert "tree" in layout
         tree = next(s for s in idx._shards if s.kind == "tree")
-        # the leaf structure holds an immutable slab copy: no overwrite,
-        # so the fetch width must keep the tombstone BOUND (and never the
-        # instantaneous count — shapes stay mutation-independent)
-        assert tree.fetch_width(3) == 3 + 4
+        # leaf-store row rewrite: the fetch width is bare k for tree
+        # shards too (and never depends on the instantaneous tombstone
+        # count — shapes stay mutation-independent)
+        assert tree.fetch_width(3) == 3
         ids, _ = _live_arrays(model)
-        dels = rng.choice(ids, size=3, replace=False)
+        in_tree = np.intersect1d(ids, tree.ids[tree.live])
+        dels = rng.choice(in_tree, size=3, replace=False)
         idx.delete(dels)
         for g in dels:
             del model[int(g)]
-        assert tree.fetch_width(3) == 3 + 4
+        assert tree.fetch_width(3) == 3
+        # the reclaim reached the leaf structure: the engine's leaf-ordered
+        # rescore copy carries PAD_COORD in every tombstoned row
+        t = tree.engine.tree
+        inv = np.empty(t.points.shape[0], np.int64)
+        inv[t.orig_idx] = np.arange(t.points.shape[0])
+        dead_rows = np.nonzero(~tree.live[: tree.n_rows])[0]
+        assert dead_rows.size == 3
+        assert (t.points[inv[dead_rows]] == np.float32(PAD_COORD)).all()
+        _check_parity(idx, model, rng.normal(size=(6, D)).astype(np.float32), 3)
+
+    def test_tree_reclaim_quantized_dead_mask(self):
+        """Quantized tree shards reclaim via the store's dead mask (codes
+        are immutable) and stay exact at the bare-k width."""
+        rng = np.random.default_rng(39)
+        idx = DynamicIndex(D, base_capacity=32, tomb_limit=6, brute_cutoff=32,
+                           precision="int8")
+        model = {}
+        _apply_insert(idx, model, rng.normal(size=(60, D)).astype(np.float32))
+        tree = next(s for s in idx._shards if s.kind == "tree")
+        store = tree.engine.store
+        assert store.quantized
+        before = int(store.dead.sum())
+        ids, _ = _live_arrays(model)
+        in_tree = np.intersect1d(ids, tree.ids[tree.live])
+        dels = rng.choice(in_tree, size=4, replace=False)
+        idx.delete(dels)
+        for g in dels:
+            del model[int(g)]
+        assert int(store.dead.sum()) == before + 4
+        assert tree.fetch_width(3) == 3
         _check_parity(idx, model, rng.normal(size=(6, D)).astype(np.float32), 3)
 
 

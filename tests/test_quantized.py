@@ -1,0 +1,368 @@
+"""Quantized leaf slabs: exactness, planner precision policy, persistence.
+
+THE CONTRACT (tentpole of the capacity work): storing leaf slabs at fp16
+or int8 must never change an answer.  The quantization error bound eps
+inflates the traversal radius, the engine overfetches ``QUANT_OVERFETCH``
+extra candidates, and every candidate is re-ranked against the exact fp32
+host coordinates — so neighbor INDICES must match the fp32 brute-force
+oracle bit-for-bit, not merely within a tolerance.
+
+Also here, the regression tests for the three bugfix satellites:
+
+  * planner budget floor — an infeasible ``memory_budget`` sets the
+    structured ``Plan.over_budget`` flag (and raises ``BudgetError``
+    under ``IndexSpec(strict_budget=True)``) instead of a prose-only
+    warning;
+  * precision decision — the planner's fp32/fp16/int8 choice against the
+    budget is disclosed with testable reason strings;
+  * calibration slow-field staleness — a ``Calibration`` whose slow
+    fields (round cost, engine q/s) outlived the staleness window is
+    called out in ``Plan.reasons`` even after an inline H2D refresh.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    BudgetError,
+    Calibration,
+    CALIBRATION_STALE_S,
+    IndexSpec,
+    KNNIndex,
+    estimate_meta_bytes,
+    estimate_slab_bytes,
+    knn_brute,
+    plan,
+)
+from repro.core.lazysearch import BufferKDTree
+from repro.core.toptree import PAD_COORD
+from repro.core.quantize import (
+    BYTES_PER_ELEM,
+    PRECISIONS,
+    QUANT_OVERFETCH,
+    quantize_slabs,
+    slab_dtype,
+)
+
+
+def _data(n, m, d, seed=0):
+    rng = np.random.default_rng(seed)
+    pts = rng.standard_normal((n, d)).astype(np.float32)
+    q = rng.standard_normal((m, d)).astype(np.float32)
+    return pts, q
+
+
+# ---------------------------------------------------------------------------
+# quantize_slabs unit contract
+# ---------------------------------------------------------------------------
+class TestQuantizeSlabs:
+    def _slabs(self, n_leaves=4, leaf_pad=16, d_pad=8, seed=3):
+        rng = np.random.default_rng(seed)
+        slabs = rng.standard_normal(
+            (n_leaves, leaf_pad, d_pad)
+        ).astype(np.float32)
+        sizes = np.full((n_leaves,), leaf_pad, np.int64)
+        return slabs, sizes
+
+    def test_fp32_is_identity(self):
+        slabs, sizes = self._slabs()
+        qs = quantize_slabs(slabs, "fp32", leaf_sizes=sizes)
+        assert qs.precision == "fp32"
+        assert qs.eps == 0.0
+        np.testing.assert_array_equal(qs.codes, slabs)
+
+    def test_int8_roundtrip_within_eps(self):
+        slabs, sizes = self._slabs()
+        qs = quantize_slabs(slabs, "int8", leaf_sizes=sizes)
+        assert qs.codes.dtype == slab_dtype("int8")
+        deq = qs.codes.astype(np.float32) * qs.scale[:, None, :] + \
+            qs.offset[:, None, :]
+        err = np.abs(deq - slabs).max(axis=(1, 2))
+        # eps is the per-point distance bound 0.5*sqrt(sum scale^2); each
+        # coordinate must round-trip within half a quantization step
+        assert (err[:, None] <= qs.scale.max(axis=1)[:, None] * 0.5 + 1e-7).all()
+        assert qs.eps > 0.0
+
+    def test_fp16_cast_and_eps(self):
+        slabs, sizes = self._slabs()
+        qs = quantize_slabs(slabs, "fp16", leaf_sizes=sizes)
+        assert qs.codes.dtype == slab_dtype("fp16")
+        np.testing.assert_array_equal(
+            qs.codes, slabs.astype(np.float16)
+        )
+        assert qs.eps > 0.0
+
+    def test_structural_pad_rows_marked_dead(self):
+        slabs, sizes = self._slabs()
+        sizes = sizes.copy()
+        sizes[1] = 5  # rows 5.. of leaf 1 are structural pad
+        qs = quantize_slabs(slabs, "int8", leaf_sizes=sizes)
+        assert not qs.dead[0].any()
+        assert (~qs.dead[1][:5]).all() and qs.dead[1][5:].all()
+
+    def test_pad_sentinel_rows_marked_dead_and_scale_sane(self):
+        # dynamic rung slabs pad to capacity with PAD_COORD *before* the
+        # tree build, so leaf_sizes counts those rows as real; one such
+        # row must not blow the leaf's int8 scale to ~1e16
+        slabs, sizes = self._slabs()
+        slabs[2, 7, :] = np.float32(PAD_COORD)
+        qs = quantize_slabs(slabs, "int8", leaf_sizes=sizes)
+        assert qs.dead[2, 7]
+        assert qs.scale[2].max() < 1.0  # unit-normal data, sane step
+
+
+# ---------------------------------------------------------------------------
+# bit-exact parity vs the fp32 brute oracle
+# ---------------------------------------------------------------------------
+class TestQuantizedParity:
+    @pytest.mark.parametrize("precision", ["fp16", "int8"])
+    @pytest.mark.parametrize("engine", ["chunked", "host"])
+    def test_engine_indices_bit_exact(self, precision, engine):
+        pts, q = _data(6000, 48, 6, seed=11)  # d % 8 != 0 (feature pad)
+        idx = KNNIndex.build(pts, spec=IndexSpec(
+            engine=engine, precision=precision, k_hint=10))
+        assert idx.plan.precision == precision
+        res = idx.query(q, k=10)
+        bd, bi = knn_brute(q, pts, 10)
+        np.testing.assert_array_equal(res.idx, bi)
+        np.testing.assert_allclose(res.dists, bd, rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("precision", ["fp16", "int8"])
+    def test_k_larger_than_leaf(self, precision):
+        # k above the leaf row count: selection must reach across leaves
+        # and the overfetch band must still close over the exact set
+        pts, q = _data(2000, 24, 5, seed=12)
+        idx = KNNIndex.build(pts, spec=IndexSpec(
+            engine="chunked", height=7, precision=precision))
+        leaf_rows = -(-2000 // (1 << 7))
+        k = 2 * leaf_rows
+        res = idx.query(q, k=k)
+        bd, bi = knn_brute(q, pts, k)
+        np.testing.assert_array_equal(res.idx, bi)
+        np.testing.assert_allclose(res.dists, bd, rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("precision", ["fp16", "int8"])
+    def test_streaming_rows_bit_exact(self, precision):
+        pts, q = _data(5000, 32, 7, seed=13)
+        idx = KNNIndex.build(pts, spec=IndexSpec(
+            engine="streaming", precision=precision))
+        got = {}
+
+        def on_complete(rows, dists, nidx):
+            for j, r in enumerate(np.atleast_1d(rows)):
+                got[int(r)] = (np.atleast_2d(dists)[j],
+                               np.atleast_2d(nidx)[j])
+
+        res = idx.query_stream(q, k=8, on_complete=on_complete)
+        bd, bi = knn_brute(q, pts, 8)
+        assert sorted(got) == list(range(len(q)))
+        np.testing.assert_array_equal(res.idx, bi)
+        for i in range(len(q)):
+            np.testing.assert_array_equal(got[i][1], bi[i])
+            np.testing.assert_allclose(got[i][0], bd[i], rtol=1e-4, atol=1e-4)
+
+    def test_chunk_streamed_quantized_store(self):
+        # quantized AND chunk-streamed: dequantize happens at tile-gather
+        # time inside the jitted round for every streamed chunk
+        pts, q = _data(6000, 32, 6, seed=14)
+        idx = KNNIndex.build(pts, spec=IndexSpec(
+            engine="chunked", height=4, n_chunks=3, precision="int8"))
+        res = idx.query(q, k=9)
+        bd, bi = knn_brute(q, pts, 9)
+        np.testing.assert_array_equal(res.idx, bi)
+
+    def test_overfetch_clamped_to_n(self):
+        # k + QUANT_OVERFETCH past n must not fault
+        pts, q = _data(260, 8, 4, seed=15)
+        tree = BufferKDTree(pts, height=3, precision="int8")
+        assert tree._engine_k(256) == 260 - QUANT_OVERFETCH + QUANT_OVERFETCH
+        d_, i_ = tree.query(q, k=256)
+        bd, bi = knn_brute(q, pts, 256)
+        np.testing.assert_array_equal(i_, bi)
+
+
+# ---------------------------------------------------------------------------
+# planner precision policy + budget floor (bugfix satellites)
+# ---------------------------------------------------------------------------
+class TestPlannerPrecision:
+    N, D = 200_000, 10
+
+    def _h(self):
+        return plan(self.N, self.D).height
+
+    def test_no_budget_stays_fp32(self):
+        p = plan(self.N, self.D, k=10, devices=[object()])
+        assert p.precision == "fp32"
+        assert any("no memory_budget given" in r for r in p.reasons)
+
+    def test_pinned_precision_reason(self):
+        p = plan(self.N, self.D, k=10, devices=[object()], precision="fp16")
+        assert p.precision == "fp16"
+        assert any("precision fp16 pinned by caller" in r for r in p.reasons)
+
+    def test_budget_drives_precision_ladder(self):
+        h = self._h()
+        fp32 = estimate_slab_bytes(self.N, self.D, h)
+
+        def fits(prec):
+            return (estimate_slab_bytes(self.N, self.D, h, precision=prec)
+                    + estimate_meta_bytes(self.N, self.D, h, precision=prec))
+
+        # generous budget: full precision
+        p = plan(self.N, self.D, k=10, devices=[object()],
+                 memory_budget=2 * fp32)
+        assert p.precision == "fp32" and not p.over_budget
+        # between fp16 and fp32 footprints: halve the slabs
+        p = plan(self.N, self.D, k=10, devices=[object()],
+                 memory_budget=(fits("fp16") + fp32) // 2)
+        assert p.precision == "fp16"
+        assert any("re-ranked exactly in" in r for r in p.reasons)
+        # between int8 and fp16: quarter them
+        p = plan(self.N, self.D, k=10, devices=[object()],
+                 memory_budget=(fits("int8") + fits("fp16")) // 2)
+        assert p.precision == "int8"
+        # below even int8: int8 + chunk streaming, still a valid plan
+        p = plan(self.N, self.D, k=10, devices=[object()],
+                 memory_budget=fits("int8") // 2)
+        assert p.precision == "int8"
+        assert any("chunk-streaming covers the rest" in r for r in p.reasons)
+        assert p.n_chunks > 1
+        assert p.resident_bytes <= fits("int8") // 2
+
+    def test_bad_precision_rejected(self):
+        with pytest.raises(ValueError, match="precision"):
+            plan(self.N, self.D, devices=[object()], precision="bf16")
+        assert set(PRECISIONS) == {"fp32", "fp16", "int8"}
+        assert BYTES_PER_ELEM["int8"] == 1
+
+    def test_over_budget_flag_and_strict_raise(self):
+        # a budget below the 2-chunk floor at int8 cannot be honored:
+        # over_budget must be set, and strict_budget turns it into an error
+        h = self._h()
+        floor = 2 * (estimate_slab_bytes(
+            self.N, self.D, h, precision="int8") >> h)
+        p = plan(self.N, self.D, k=10, devices=[object()],
+                 memory_budget=floor // 4)
+        assert p.over_budget
+        assert any("over budget" in r for r in p.reasons)
+        with pytest.raises(BudgetError, match="strict_budget"):
+            plan(self.N, self.D, k=10, devices=[object()],
+                 memory_budget=floor // 4, strict_budget=True)
+
+    def test_feasible_budget_never_raises_strict(self):
+        h = self._h()
+        budget = estimate_slab_bytes(self.N, self.D, h) // 3
+        p = plan(self.N, self.D, k=10, devices=[object()],
+                 memory_budget=budget, strict_budget=True)
+        assert not p.over_budget
+
+    def test_budget_error_is_value_error(self):
+        # callers that catch ValueError from plan() keep working
+        assert issubclass(BudgetError, ValueError)
+
+    def test_spec_strict_budget_via_facade(self):
+        pts, _ = _data(30_000, 4, 8, seed=16)
+        spec = IndexSpec(engine="chunked", memory_budget=64,
+                         strict_budget=True)
+        with pytest.raises(BudgetError):
+            KNNIndex.build(pts, spec=spec)
+
+    def test_precision_not_applicable_engines_fall_back(self):
+        # brute has no leaf slabs; a pinned precision is disclosed as
+        # inapplicable, not silently half-applied
+        p = plan(1000, 8, k=5, devices=[object()], precision="int8")
+        assert p.engine == "brute"
+        assert any("not applicable" in r for r in p.reasons)
+
+
+class TestCalibrationSlowStale:
+    def test_slow_stale_recorded_in_reasons(self):
+        cal = Calibration(
+            h2d_gbps=10.0, round_s=1e-3, engine_qps={"chunked": 500.0},
+            age_s=0.0, slow_age_s=CALIBRATION_STALE_S + 86400.0,
+            source="bench",
+        )
+        assert cal.slow_stale and not cal.stale
+        p = plan(200_000, 10, k=10, devices=[object()], calibration=cal)
+        assert any("calibration stale: slow fields" in r for r in p.reasons)
+        assert any("engine_bench.py" in r for r in p.reasons)
+
+    def test_fresh_slow_fields_stay_quiet(self):
+        cal = Calibration(h2d_gbps=10.0, round_s=1e-3,
+                          age_s=0.0, slow_age_s=0.0, source="bench")
+        p = plan(200_000, 10, k=10, devices=[object()], calibration=cal)
+        assert not any("calibration stale" in r for r in p.reasons)
+
+
+# ---------------------------------------------------------------------------
+# persistence: format v2 round trip + format-1 compat
+# ---------------------------------------------------------------------------
+class TestQuantizedPersistence:
+    @pytest.mark.parametrize("precision", ["fp16", "int8"])
+    def test_save_load_roundtrip_bit_exact(self, tmp_path, precision):
+        pts, q = _data(5000, 20, 6, seed=17)
+        idx = KNNIndex.build(pts, spec=IndexSpec(
+            engine="chunked", precision=precision))
+        assert idx.save(str(tmp_path / "snap")) == 1
+        idx2 = KNNIndex.load(str(tmp_path / "snap"))
+        assert idx2.plan.precision == precision
+        res = idx2.query(q, k=7)
+        bd, bi = knn_brute(q, pts, 7)
+        np.testing.assert_array_equal(res.idx, bi)
+        np.testing.assert_allclose(res.dists, bd, rtol=1e-4, atol=1e-4)
+
+    def test_snapshot_format_is_v2_and_carries_codes(self, tmp_path):
+        from repro.persist.format import FORMAT_VERSION, VersionStore
+
+        pts, _ = _data(3000, 4, 5, seed=18)
+        idx = KNNIndex.build(pts, spec=IndexSpec(
+            engine="chunked", precision="int8"))
+        idx.save(str(tmp_path / "snap"))
+        arrays, manifest, _ = VersionStore(str(tmp_path / "snap" / "versions")).read()
+        assert manifest["format"] == FORMAT_VERSION == 2
+        assert manifest["meta"]["precision"] == "int8"
+        assert arrays["quant/codes"].dtype == slab_dtype("int8")
+        assert {"quant/scale", "quant/offset", "quant/dead",
+                "quant/eps"} <= set(arrays)
+
+    def test_format1_snapshot_still_loads_as_fp32(self, tmp_path):
+        # a pre-quantization snapshot has no precision field anywhere;
+        # loading it must default to fp32 and answer exactly
+        import json
+        import os
+
+        pts, q = _data(4000, 12, 6, seed=19)
+        idx = KNNIndex.build(pts, spec=IndexSpec(engine="chunked"))
+        idx.save(str(tmp_path / "snap"))
+        vdir = str(tmp_path / "snap" / "versions" / "v_0000000001")
+        with open(os.path.join(vdir, "manifest.json")) as f:
+            manifest = json.load(f)
+        manifest["format"] = 1
+        manifest["meta"].pop("precision", None)
+        manifest["spec"].pop("precision", None)
+        manifest["spec"].pop("strict_budget", None)
+        with open(os.path.join(vdir, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        idx2 = KNNIndex.load(str(tmp_path / "snap"))
+        assert idx2.plan.precision == "fp32"
+        res = idx2.query(q, k=6)
+        bd, bi = knn_brute(q, pts, 6)
+        np.testing.assert_array_equal(res.idx, bi)
+
+    def test_unknown_format_rejected(self, tmp_path):
+        import json
+        import os
+
+        from repro.persist.format import PersistError, VersionStore
+
+        pts, _ = _data(1000, 2, 4, seed=20)
+        idx = KNNIndex.build(pts, spec=IndexSpec(engine="chunked"))
+        idx.save(str(tmp_path / "snap"))
+        vdir = str(tmp_path / "snap" / "versions" / "v_0000000001")
+        with open(os.path.join(vdir, "manifest.json")) as f:
+            manifest = json.load(f)
+        manifest["format"] = 99
+        with open(os.path.join(vdir, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        with pytest.raises(PersistError, match="format"):
+            VersionStore(str(tmp_path / "snap" / "versions")).read_manifest()
