@@ -18,7 +18,7 @@ Two proofs per run:
 
 Also asserted: the recompile-free guarantee per precision — after
 ``warm()``, varied query batches must add zero fused-round compiles
-(``chunk_round_cache_size``), for fp32, fp16 AND int8 stores.
+(``knn_round_cache_size``), for fp32, fp16 AND int8 stores.
 
 Emits ``BENCH_capacity.json`` at the repo root (canonical full-scale runs
 only; smoke runs never clobber the trajectory).  Run via
@@ -43,7 +43,7 @@ BARS = {"fp16": 1.9, "int8": 3.0}
 
 def run(scale: float = 1.0) -> None:
     from repro.api import (
-        IndexSpec, KNNIndex, chunk_round_cache_size, knn_brute,
+        IndexSpec, KNNIndex, knn_round_cache_size, knn_brute,
     )
 
     n, m = max(4096, int(N * scale)), max(512, int(M * scale))
@@ -59,10 +59,10 @@ def run(scale: float = 1.0) -> None:
             engine="chunked", height=HEIGHT, precision=prec, k_hint=K))
         idx.warm(m, k=K)
         idx.query(q, k=K)
-        compiles_warm = chunk_round_cache_size()
+        compiles_warm = knn_round_cache_size()
         t = common.timeit(lambda: idx.query(q, k=K), repeat=3, warmup=0)
         res2 = idx.query(q2, k=K)
-        compiles_after = chunk_round_cache_size()
+        compiles_after = knn_round_cache_size()
         res = idx.query(q, k=K)
         exact = bool(
             np.array_equal(res.idx, bi)

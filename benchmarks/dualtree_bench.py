@@ -1,0 +1,135 @@
+"""Dual-tree pair_count vs the naive all-pairs histogram (2-point
+correlation), through the multi-op front door.
+
+Canonical full-scale shape: 50k clustered 3-d sources (64 uniform blobs —
+the regime dual-tree methods are built for: almost every node pair either
+separates into one histogram bin or falls outside the edge range), 2PCF
+edges up to r=0.2.  Emits ``BENCH_dualtree.json`` at the repo root
+(canonical full-scale runs only, so smoke runs never clobber it):
+
+  dual_s / naive_s        median wall seconds per tier
+  speedup_vs_naive        naive_s / dual_s — the acceptance bar is >= 5x
+  dual_compiles_*         dual-tree kernel jit entries after warm vs after
+                          the timed runs — equality is the recompile-free
+                          guarantee (radii/bandwidths/edges are operands,
+                          not shapes; only the warmed rung set compiles)
+  leaf_pairs              node-pair frontier work that survived pruning
+                          (vs n_leaves^2 for the full grid)
+
+Run via ``python -m benchmarks.dualtree_bench --scale 0.25`` (the CI
+smoke — exits non-zero on any recompile) or at full scale to update the
+trajectory file.  Radius/KDE single-pass timings ride along as rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from benchmarks import common
+
+N, D, HEIGHT = 50_000, 3, 8
+EDGES = np.array([0.0, 0.0125, 0.025, 0.05, 0.1, 0.2])
+SPEEDUP_BAR = 5.0
+
+
+def _catalog(n: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(0.0, 1.0, size=(64, D)).astype(np.float32)
+    u = rng.normal(size=(n, D)).astype(np.float32)
+    u /= np.linalg.norm(u, axis=1, keepdims=True)
+    radial = 0.02 * rng.random(n).astype(np.float32) ** (1.0 / D)
+    return centers[rng.integers(0, len(centers), n)] + u * radial[:, None]
+
+
+def run(scale: float = 1.0) -> None:
+    from repro.api import IndexSpec, KNNIndex, dualtree_cache_size
+    from repro.core.dualtree import pair_count_brute
+
+    n = max(4096, int(N * scale))
+    pts = _catalog(n)
+
+    idx = KNNIndex.build(
+        pts, spec=IndexSpec(engine="chunked", op="pair_count",
+                            height=HEIGHT, m_hint=1024)
+    )
+    # deterministic warm: every pair-batch rung of every dual-tree kernel
+    # at this store's slab shape — no traversal can add a compile
+    idx.warm(m=1024, ops=("radius", "kde", "pair_count"),
+             n_edges=len(EDGES))
+    idx.pair_count(EDGES)
+    compiles_warm = dualtree_cache_size()
+
+    t_dual = common.timeit(lambda: idx.pair_count(EDGES), repeat=3, warmup=0)
+    res = idx.pair_count(EDGES)
+    # vary the operands: new edge VALUES (same count) must not compile
+    idx.pair_count(EDGES * 0.5 + 0.001)
+    common.row("dualtree/pair_count", t_dual,
+               f"n={n};h={HEIGHT};bins={len(EDGES) - 1}")
+
+    t_naive = common.timeit(
+        lambda: pair_count_brute(pts, EDGES), repeat=1, warmup=1
+    )
+    common.row("dualtree/pair_count_naive", t_naive, "all-pairs histogram")
+    naive_hist = pair_count_brute(pts, EDGES)
+    assert np.array_equal(res.values, naive_hist), "dual != naive histogram"
+
+    # secondary single-pass rows: the other two ops at a serving-ish batch
+    rng = np.random.default_rng(1)
+    q = pts[rng.integers(0, n, 1024)] + 0.001
+    t_radius = common.timeit(lambda: idx.radius(q, 0.02), repeat=3, warmup=1)
+    common.row("dualtree/radius_1k", t_radius, "m=1024;r=0.02")
+    t_kde = common.timeit(lambda: idx.kde(q, 0.05), repeat=3, warmup=1)
+    common.row("dualtree/kde_1k", t_kde, "m=1024;h=0.05;rtol=1e-2")
+
+    compiles_after = dualtree_cache_size()
+    result = {
+        "shape": {"n": n, "d": D, "height": HEIGHT,
+                  "bins": len(EDGES) - 1, "rmax": float(EDGES[-1])},
+        "dual_s": t_dual,
+        "naive_s": t_naive,
+        "speedup_vs_naive": t_naive / t_dual,
+        "radius_1k_s": t_radius,
+        "kde_1k_s": t_kde,
+        "dual_compiles_after_warm": compiles_warm,
+        "dual_compiles_after_runs": compiles_after,
+        "recompile_free": compiles_warm == compiles_after,
+        "leaf_pairs": int(res.stats.units_scanned),
+        "hist": [int(x) for x in res.values],
+    }
+    assert result["recompile_free"], (
+        f"dual-tree kernels recompiled beyond the warmed rung set: "
+        f"{compiles_warm} -> {compiles_after}"
+    )
+    if scale >= 1.0:
+        assert result["speedup_vs_naive"] >= SPEEDUP_BAR, (
+            f"dual-tree pair_count {result['speedup_vs_naive']:.1f}x < "
+            f"{SPEEDUP_BAR}x vs naive at full scale"
+        )
+        out = os.path.join(
+            os.path.dirname(__file__), "..", "BENCH_dualtree.json"
+        )
+        with open(os.path.abspath(out), "w") as f:
+            json.dump(result, f, indent=2)
+            f.write("\n")
+    print(f"# dualtree bench (scale {scale}): "
+          f"speedup_vs_naive={result['speedup_vs_naive']:.1f}x "
+          f"recompile_free={result['recompile_free']} "
+          f"leaf_pairs={result['leaf_pairs']}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="size multiplier; < 1.0 skips the speedup bar "
+                         "and does not write BENCH_dualtree.json")
+    args = ap.parse_args()
+    common.emit_header()
+    run(scale=args.scale)
+
+
+if __name__ == "__main__":
+    main()

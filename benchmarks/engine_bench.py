@@ -41,7 +41,7 @@ N, D, M, HEIGHT, N_CHUNKS, K = 20_000, 8, 2_000, 7, 2, 10
 
 
 def run(scale: float = 1.0) -> None:
-    from repro.api import IndexSpec, KNNIndex, chunk_round_cache_size
+    from repro.api import IndexSpec, KNNIndex, knn_round_cache_size
 
     n, m = max(4096, int(N * scale)), max(512, int(M * scale))
     rng = np.random.default_rng(0)
@@ -57,12 +57,12 @@ def run(scale: float = 1.0) -> None:
     # is fixed before any query runs — no trajectory can add a compile
     idx.warm(m, k=K)
     idx.query(q, k=K)
-    compiles_warm = chunk_round_cache_size()
+    compiles_warm = knn_round_cache_size()
     t_chunked = common.timeit(lambda: idx.query(q, k=K), repeat=3, warmup=0)
     # vary the query content: flush/work-unit/live counts change, shapes not
     q2 = rng.normal(size=(m, D)).astype(np.float32)
     res2 = idx.query(q2, k=K)
-    compiles_after = chunk_round_cache_size()
+    compiles_after = knn_round_cache_size()
     common.row("engine/chunked_query", t_chunked,
                f"n={n};m={m};h={HEIGHT};chunks={N_CHUNKS};k={K}")
 

@@ -185,7 +185,7 @@ def _overload_run(index, *, qps_sustainable: float, p99_ref_ms: float,
 
 
 def run(scale: float = 1.0, overload: bool = False) -> None:
-    from repro.api import IndexSpec, KNNIndex, chunk_round_cache_size, knn_brute
+    from repro.api import IndexSpec, KNNIndex, knn_round_cache_size, knn_brute
     from repro.serving.knn_server import KNNServer
 
     n = max(4096, int(N * scale))
@@ -208,7 +208,7 @@ def run(scale: float = 1.0, overload: bool = False) -> None:
                    default_deadline_ms=0.0, purge_expired=False) as server:
         # one untimed round trip to absorb thread/dispatch cold start
         server.submit(qs[0]).result(timeout=300.0)
-        compiles_warm = chunk_round_cache_size()
+        compiles_warm = knn_round_cache_size()
         t0 = time.perf_counter()
         for i in range(M_SERIAL):
             d, _ = server.submit(qs[i]).result(timeout=300.0)
@@ -246,7 +246,7 @@ def run(scale: float = 1.0, overload: bool = False) -> None:
             p99_ref_ms=runs["high"]["p99_ms"],
             rng=rng,
         )
-    compiles_after = chunk_round_cache_size()
+    compiles_after = knn_round_cache_size()
 
     speedup = runs["high"]["qps"] / qps_serial
     result = {

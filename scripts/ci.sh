@@ -51,6 +51,14 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.engine_bench --sc
 echo "== capacity smoke (capacity bench @ scale 0.25) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.capacity_bench --scale 0.25
 
+# Dual-tree smoke: quarter-scale multi-op bench (never writes
+# BENCH_dualtree.json, and the >= 5x pair_count-vs-naive bar only applies
+# at full scale).  The bench asserts the dual-tree histogram equals the
+# naive all-pairs one and that ZERO dual-tree kernel compiles happen
+# beyond the warmed rung set — any miss exits non-zero and fails CI here.
+echo "== dualtree smoke (dualtree bench @ scale 0.25) =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.dualtree_bench --scale 0.25
+
 # Dynamic-index gate: tier-1 above already ran the full 200-script parity
 # harness under the pinned seed; this step re-asserts only the pieces that
 # gate a merge by name — the hypothesis-driven interleavings (derandomized

@@ -39,13 +39,20 @@ __all__ = [
     "Engine",
     "EngineBase",
     "EngineCaps",
+    "KNOWN_OPS",
     "MutabilityError",
+    "OpUnsupported",
     "PersistUnsupported",
     "StreamingUnsupported",
     "register_engine",
     "get_engine",
     "available_engines",
 ]
+
+# Every operation an engine may declare in ``EngineCaps.ops``.  "knn" is
+# the query(q, k) path every engine supports; the dual-tree ops (radius /
+# kde / pair_count, core/dualtree.py) are declared per engine.
+KNOWN_OPS = frozenset({"knn", "radius", "kde", "pair_count"})
 
 
 class MutabilityError(TypeError):
@@ -62,6 +69,16 @@ class StreamingUnsupported(TypeError):
     Same contract as ``MutabilityError``: a typed error so callers can
     distinguish "this engine cannot stream per-row completions" (pin
     ``engine='streaming'``) from argument mistakes."""
+
+
+class OpUnsupported(TypeError):
+    """A multi-op entry point (``radius``/``kde``/``pair_count``) called on
+    an engine that does not declare the op in ``caps.ops``.
+
+    Same contract as ``MutabilityError``/``StreamingUnsupported``: typed so
+    callers can distinguish "this engine cannot run this operation" (plan
+    with ``op=...`` or pick one from ``available_engines(op=...)``) from
+    argument mistakes."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +101,9 @@ class EngineCaps:
                                 # finishes (coarser latency than streaming;
                                 # lets KNNServer front non-retiring engines
                                 # such as the dynamic forest)
+    ops: frozenset = frozenset({"knn"})  # operations this engine declares
+                                # (subset of KNOWN_OPS); engines with the
+                                # dual-tree hooks add radius/kde/pair_count
     description: str = ""
 
 
@@ -118,6 +138,42 @@ class EngineBase:
             f"engine {self.name!r} cannot stream per-row completions "
             "(caps.streaming=False); plan with engine='streaming'"
         )
+
+    def _op_unsupported(self, op: str) -> OpUnsupported:
+        return OpUnsupported(
+            f"engine {self.name!r} does not declare op {op!r} "
+            f"(caps.ops={sorted(self.caps.ops)}); pick one of "
+            f"{sorted(available_engines(op=op))} or plan with op={op!r}"
+        )
+
+    def radius(self, state, queries: np.ndarray, r: float):
+        """All reference points within Euclidean ``r`` of each query row:
+        (indptr i64[m+1], indices i64[nnz], dists f32[nnz], SearchStats).
+
+        Only engines declaring ``"radius" in caps.ops`` implement this;
+        the default raises the typed ``OpUnsupported`` (same caps-contract
+        as ``MutabilityError``/``StreamingUnsupported``)."""
+        raise self._op_unsupported("radius")
+
+    def kde(self, state, queries: np.ndarray, bandwidth: float, *,
+            rtol: float = 1e-2, atol: float = 1e-9,
+            kernel: str = "gaussian"):
+        """Kernel density per query row: (density f32[m], err_bound,
+        SearchStats).  Same caps-contract as ``radius``."""
+        raise self._op_unsupported("kde")
+
+    def pair_count(self, state, edges: np.ndarray):
+        """2-point correlation histogram over ``edges``: (hist i64[E],
+        SearchStats).  Same caps-contract as ``radius``."""
+        raise self._op_unsupported("pair_count")
+
+    def warm_ops(self, state, ops, m: Optional[int] = None,
+                 n_edges: int = 9) -> None:
+        """Precompile the kernels of the given non-kNN ops at their rung
+        shapes (``m`` = expected query batch size, ``n_edges`` = expected
+        pair_count edge count).  Default: nothing extra to warm — engines
+        with per-op compiled kernels override."""
+        return None
 
     def insert(self, state, points: np.ndarray) -> np.ndarray:
         """Incrementally add ``points``; returns assigned i64 ids.
@@ -198,9 +254,12 @@ def get_engine(name: str) -> EngineBase:
 
 def available_engines(
     *, exact: Optional[bool] = None, out_of_core: Optional[bool] = None,
-    multi_device: Optional[bool] = None,
+    multi_device: Optional[bool] = None, op: Optional[str] = None,
 ) -> Dict[str, EngineCaps]:
-    """Registered engines (optionally filtered by capability)."""
+    """Registered engines (optionally filtered by capability or by a
+    declared operation, e.g. ``op="pair_count"``)."""
+    if op is not None and op not in KNOWN_OPS:
+        raise ValueError(f"unknown op {op!r}; known: {sorted(KNOWN_OPS)}")
     out = {}
     for name, eng in sorted(_REGISTRY.items()):
         c = eng.caps
@@ -209,6 +268,8 @@ def available_engines(
         if out_of_core is not None and c.out_of_core != out_of_core:
             continue
         if multi_device is not None and c.multi_device != multi_device:
+            continue
+        if op is not None and op not in c.ops:
             continue
         out[name] = c
     return out

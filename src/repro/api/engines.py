@@ -79,6 +79,7 @@ class BruteEngine(EngineBase):
     # device-resident (only the distance tiles stream)
     caps = EngineCaps(
         exact=True, out_of_core=False, multi_device=False, needs_build=False,
+        ops=frozenset({"knn", "radius", "kde", "pair_count"}),
         description="tiled brute-force streaming (baseline/oracle)",
     )
 
@@ -95,6 +96,40 @@ class BruteEngine(EngineBase):
             queries_advanced=queries.shape[0],
         )
         return d, i, stats
+
+    def radius(self, state, queries, r):
+        from repro.core.dualtree import radius_brute
+
+        queries = np.asarray(queries, np.float32)
+        ip, ix, dd = radius_brute(queries, state, float(r))
+        stats = SearchStats(
+            iterations=1,
+            points_scanned=queries.shape[0] * state.shape[0],
+            queries_advanced=queries.shape[0],
+        )
+        return ip, ix, dd, stats
+
+    def kde(self, state, queries, bandwidth, *, rtol=1e-2, atol=1e-9,
+            kernel="gaussian"):
+        from repro.core.dualtree import kde_brute
+
+        queries = np.asarray(queries, np.float32)
+        dens = kde_brute(queries, state, float(bandwidth), kernel=kernel)
+        stats = SearchStats(
+            iterations=1,
+            points_scanned=queries.shape[0] * state.shape[0],
+            queries_advanced=queries.shape[0],
+        )
+        return dens, 0.0, stats  # exact all-pairs sum: no traversal error
+
+    def pair_count(self, state, edges):
+        from repro.core.dualtree import pair_count_brute
+
+        hist = pair_count_brute(state, edges)
+        stats = SearchStats(
+            iterations=1, points_scanned=state.shape[0] * state.shape[0]
+        )
+        return hist, stats
 
     def snapshot_state(self, state):
         return {"points": np.asarray(state)}, {}
@@ -174,6 +209,28 @@ class _BufferTreeEngine(EngineBase):
         d, i = state.query(queries, k=k)
         return d, i, state.stats  # per-call immutable snapshot
 
+    # -- dual-tree ops: node-pair frontier over the SAME TopTree +
+    # ChunkedLeafStore the kNN rounds use (core/dualtree.py) -------------
+    def radius(self, state: BufferKDTree, queries, r):
+        return state.dualtree().radius(
+            np.asarray(queries, np.float32), float(r)
+        )
+
+    def kde(self, state: BufferKDTree, queries, bandwidth, *, rtol=1e-2,
+            atol=1e-9, kernel="gaussian"):
+        return state.dualtree().kde(
+            np.asarray(queries, np.float32), float(bandwidth),
+            rtol=rtol, atol=atol, kernel=kernel,
+        )
+
+    def pair_count(self, state: BufferKDTree, edges):
+        return state.dualtree().pair_count(edges)
+
+    def warm_ops(self, state: BufferKDTree, ops, m=None, n_edges=9):
+        dual = [op for op in ops if op != "knn"]
+        if dual:
+            state.dualtree().warm(dual, m=m, n_edges=n_edges)
+
     def snapshot_state(self, state: BufferKDTree):
         from repro.core.toptree import tree_to_arrays
 
@@ -233,6 +290,7 @@ class HostLoopEngine(_BufferTreeEngine):
     caps = EngineCaps(
         exact=True, out_of_core=True, multi_device=False,
         stateful_query=True,
+        ops=frozenset({"knn", "radius", "kde", "pair_count"}),
         description="paper-faithful Alg. 1 host loop (reference tier)",
     )
 
@@ -244,6 +302,7 @@ class ChunkedEngine(_BufferTreeEngine):
     caps = EngineCaps(
         exact=True, out_of_core=True, multi_device=False,
         stateful_query=True,
+        ops=frozenset({"knn", "radius", "kde", "pair_count"}),
         description="chunk-resident bulk-synchronous LazySearch (§3)",
     )
 
@@ -264,6 +323,7 @@ class StreamingEngine(_BufferTreeEngine):
     caps = EngineCaps(
         exact=True, out_of_core=True, multi_device=False,
         stateful_query=True, streaming=True,
+        ops=frozenset({"knn", "radius", "kde", "pair_count"}),
         description="chunked tier + per-row early-retirement streaming "
                     "(the online serving engine)",
     )

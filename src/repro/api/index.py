@@ -24,13 +24,21 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.api.engine import (
+    KNOWN_OPS,
     EngineBase,
     MutabilityError,
+    OpUnsupported,
     StreamingUnsupported,
     get_engine,
 )
 from repro.api.planner import Plan, plan as make_plan
-from repro.api.spec import IndexSpec, QueryResult, SearchStats
+from repro.api.spec import (
+    IndexSpec,
+    QueryResult,
+    RadiusResult,
+    SearchStats,
+    StatResult,
+)
 from repro.persist import PersistError, VersionStore, WriteAheadLog
 
 __all__ = ["KNNIndex"]
@@ -40,8 +48,8 @@ __all__ = ["KNNIndex"]
 # saved, not the snapshot; persist_dir is where the snapshot LIVES (and
 # compile_cache_dir is a host-local path, like persist_dir).
 _SPEC_MANIFEST_FIELDS = (
-    "engine", "height", "n_chunks", "n_shards", "buffer_size", "tile_q",
-    "backend", "k_hint", "m_hint", "memory_budget", "precision",
+    "engine", "op", "height", "n_chunks", "n_shards", "buffer_size",
+    "tile_q", "backend", "k_hint", "m_hint", "memory_budget", "precision",
     "strict_budget", "mutable", "merge_async", "snapshot_keep", "wal_fsync",
 )
 
@@ -156,6 +164,7 @@ class KNNIndex:
             merge_async=spec.merge_async,
             precision=spec.precision,
             strict_budget=spec.strict_budget,
+            op=spec.op,
         )
         if spec.compile_cache_dir:
             # enable BEFORE the engine builds: build-phase compiles (warm-
@@ -305,6 +314,7 @@ class KNNIndex:
             merge_async=spec.merge_async,
             precision=spec.precision,
             strict_budget=spec.strict_budget,
+            op=spec.op,
         )
         if spec.compile_cache_dir:
             pl = pl.replace(reasons=pl.reasons + (
@@ -422,6 +432,117 @@ class KNNIndex:
             dists=dists, idx=idx, stats=stats, engine=self.plan.engine, k=k
         )
 
+    # -- dual-tree ops (core/dualtree.py) ------------------------------
+    def _record_stats(self, stats: SearchStats) -> None:
+        self._last_stats = stats
+        if getattr(stats, "events", ()):
+            # same contract as query(): degradation events are plan-level
+            # facts; surface them where describe()/reasons readers look
+            self.plan = self.plan.replace(
+                reasons=self.plan.reasons + tuple(stats.events)
+            )
+
+    def _require_op(self, op: str) -> None:
+        if op not in self._engine.caps.ops:
+            from repro.api.engine import available_engines
+
+            raise OpUnsupported(
+                f"engine {self.engine_name!r} does not declare op {op!r} "
+                f"(caps.ops={sorted(self._engine.caps.ops)}); build with "
+                f"IndexSpec(op={op!r}) so the planner picks a declaring "
+                f"engine ({sorted(available_engines(op=op))})"
+            )
+
+    def _check_queries(self, queries: np.ndarray) -> np.ndarray:
+        queries = np.asarray(queries, dtype=np.float32)
+        if queries.ndim != 2 or queries.shape[1] != self.d:
+            raise ValueError(
+                f"queries must be [m, {self.d}], got {queries.shape}"
+            )
+        return queries
+
+    def radius(self, queries: np.ndarray, r: float) -> RadiusResult:
+        """All reference points within Euclidean distance ``r`` of each
+        query row (inclusive of ``dist == r``).
+
+        Returns a ``RadiusResult`` — CSR over query rows, unpacking as
+        ``(indptr, indices, dists)``; ``indices`` are i64 into the
+        caller's original ``points`` ordering, ``dists`` ascending per
+        row.  Engines not declaring ``"radius"`` in ``caps.ops`` raise
+        the typed ``OpUnsupported`` (the same caps-contract as
+        ``insert``/``query_stream``).
+        """
+        self._require_op("radius")
+        r = float(r)
+        if not r >= 0.0:
+            raise ValueError(f"need r >= 0, got {r}")
+        queries = self._check_queries(queries)
+        indptr, indices, dists, stats = self._serialized(
+            self._engine.radius, self._state, queries, r
+        )
+        self._record_stats(stats)
+        return RadiusResult(
+            indptr=indptr, indices=indices, dists=dists, stats=stats,
+            engine=self.plan.engine, r=r,
+        )
+
+    def kde(
+        self, queries: np.ndarray, bandwidth: float, *,
+        rtol: float = 1e-2, atol: float = 1e-9, kernel: str = "gaussian",
+    ) -> StatResult:
+        """Kernel density estimate at each query row over the reference
+        points (mean of ``K(||q - x|| / bandwidth)``).
+
+        Returns a ``StatResult`` unpacking as ``(densities, error_bound)``
+        — ``densities`` f32[m]; ``error_bound`` is the dual-tree
+        traversal's accumulated absolute-error bound under the combined
+        tolerance ``rtol * density + atol`` (0.0 = computed exactly).
+        ``kernel`` is "gaussian" or "tophat" (tophat is always exact).
+        Same ``OpUnsupported`` caps-contract as ``radius``.
+        """
+        self._require_op("kde")
+        bandwidth = float(bandwidth)
+        if not bandwidth > 0.0:
+            raise ValueError(f"need bandwidth > 0, got {bandwidth}")
+        queries = self._check_queries(queries)
+        dens, err, stats = self._serialized(
+            lambda: self._engine.kde(
+                self._state, queries, bandwidth,
+                rtol=rtol, atol=atol, kernel=kernel,
+            )
+        )
+        self._record_stats(stats)
+        return StatResult(
+            values=dens, error_bound=float(err), stats=stats,
+            engine=self.plan.engine, op="kde",
+        )
+
+    def pair_count(self, edges) -> StatResult:
+        """2-point correlation: histogram of all ordered cross-pair
+        distances of the reference set over ``edges`` (np.histogram
+        semantics; self-pairs excluded).
+
+        Returns a ``StatResult`` unpacking as ``(hist, error_bound)`` —
+        ``hist`` i64[len(edges) - 1], ``error_bound`` always 0.0 (the op
+        is exact).  Same ``OpUnsupported`` caps-contract as ``radius``.
+        """
+        self._require_op("pair_count")
+        edges = np.asarray(edges, dtype=np.float64).ravel()
+        # validate here so every declaring engine behaves uniformly (the
+        # brute oracle itself does not argue about edges)
+        if edges.size < 2 or not np.all(np.diff(edges) > 0):
+            raise ValueError("edges must be >= 2 strictly increasing values")
+        if edges[0] < 0:
+            raise ValueError("distance edges must be >= 0")
+        hist, stats = self._serialized(
+            self._engine.pair_count, self._state, edges
+        )
+        self._record_stats(stats)
+        return StatResult(
+            values=hist, error_bound=0.0, stats=stats,
+            engine=self.plan.engine, op="pair_count",
+        )
+
     # ------------------------------------------------------------------
     def insert(self, points: np.ndarray) -> np.ndarray:
         """Incrementally add ``points``; returns their assigned i64 ids.
@@ -493,24 +614,47 @@ class KNNIndex:
             fn(timeout)
 
     # ------------------------------------------------------------------
-    def warm(self, m: int, k: Optional[int] = None) -> None:
-        """Precompile the query path for batches of ``m`` queries (and
-        ``k`` neighbors; defaults to the spec's ``k_hint``).  Engines
-        without a warm hook ignore this.  Serving paths SHOULD call it
+    def warm(
+        self, m: Optional[int] = None, k: Optional[int] = None, *,
+        ops: Optional[tuple] = None, n_edges: int = 9,
+    ) -> None:
+        """Precompile the execution path of the given ``ops`` (default:
+        the spec's primary ``op``) for batches of ``m`` queries.
+
+        For ``"knn"``, ``k`` neighbors (defaults to the spec's
+        ``k_hint``); engines without a warm hook ignore this.  For the
+        dual-tree ops, the per-op kernels compile at their rung shapes
+        (``n_edges`` = expected pair_count edge count); a non-declaring
+        engine raises ``OpUnsupported``.  Serving paths SHOULD call this
         with their expected batch shape before taking traffic so no
         compile lands on a request; the chunked engine warms its fused
         round at the full batch shape AND every compaction-ladder rung,
         making the recompile-free guarantee independent of any particular
         query set's retirement trajectory."""
+        ops = tuple(ops) if ops is not None else (self.spec.op,)
+        for op in ops:
+            if op not in KNOWN_OPS:
+                raise ValueError(
+                    f"unknown op {op!r}; known: {sorted(KNOWN_OPS)}"
+                )
         k = int(k) if k is not None else self.spec.k_hint
-        warm = getattr(self._state, "warm", None)
-        if warm is None:
-            return
+        mm = int(m) if m is not None else (self.spec.m_hint or self.spec.tile_q)
         ccd = self.spec.compile_cache_dir
         before = _compile_cache_entries(ccd) if ccd else 0
-        # warming streams chunk slabs through the same store a query uses:
-        # stateful engines must not see both at once
-        self._serialized(warm, int(m), k)
+        if "knn" in ops:
+            warm = getattr(self._state, "warm", None)
+            if warm is not None:
+                # warming streams chunk slabs through the same store a
+                # query uses: stateful engines must not see both at once
+                self._serialized(warm, mm, k)
+        dual = tuple(op for op in ops if op != "knn")
+        if dual:
+            for op in dual:
+                self._require_op(op)
+            self._serialized(
+                self._engine.warm_ops, self._state, dual,
+                int(m) if m is not None else self.spec.m_hint, n_edges,
+            )
         if ccd:
             # hit/miss accounting: a warm cache deserializes executables
             # (entry count unchanged); a cold one compiles and adds them
@@ -520,8 +664,8 @@ class KNNIndex:
                 if delta else "hit: served from disk"
             )
             self.plan = self.plan.replace(reasons=self.plan.reasons + (
-                f"compile cache {tag} for warm(m={m}, k={k}) "
-                f"({before + max(delta, 0)} total)",
+                f"compile cache {tag} for warm(m={mm}, k={k}, "
+                f"ops={list(ops)}) ({before + max(delta, 0)} total)",
             ))
 
     @property

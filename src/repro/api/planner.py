@@ -414,8 +414,15 @@ def plan(
     merge_async: Optional[bool] = None,
     precision: Optional[str] = None,
     strict_budget: bool = False,
+    op: str = "knn",
 ) -> Plan:
     """Pick an engine + parameters for (n, d) references and (m, k) queries.
+
+    ``op`` is the primary operation the index is planned for ("knn" —
+    the default — or a dual-tree op: "radius" / "kde" / "pair_count").
+    Non-kNN ops restrict the engine choice to engines declaring the op in
+    ``EngineCaps.ops``; the decision lands in ``Plan.reasons`` either way
+    (a pinned engine lacking the op raises, an auto choice reroutes).
 
     ``devices`` is a sequence of devices (only its length and identity are
     consulted, so tests may pass simulated device lists); ``None`` means the
@@ -437,6 +444,10 @@ def plan(
         raise ValueError(f"need n >= 1, d >= 1; got n={n} d={d}")
     if k > n:
         raise ValueError(f"k={k} > n={n}")
+    from repro.api.engine import KNOWN_OPS
+
+    if op not in KNOWN_OPS:
+        raise ValueError(f"unknown op {op!r}; known: {sorted(KNOWN_OPS)}")
     if devices is None:
         import jax
 
@@ -698,6 +709,22 @@ def plan(
                 "caps.mutable=False; unpin the engine or pick a mutable "
                 "one (e.g. 'dynamic')"
             )
+    if engine is not None and op != "knn":
+        # op-capability mirror of the mutable pin check above: a pinned
+        # engine that does not declare the op is a contradiction, not a
+        # reroute opportunity
+        from repro.api.engine import available_engines, get_engine
+
+        try:
+            caps = get_engine(engine).caps
+        except KeyError:
+            caps = None
+        if caps is not None and op not in caps.ops:
+            raise ValueError(
+                f"op={op!r} but pinned engine {engine!r} does not declare "
+                f"it (caps.ops={sorted(caps.ops)}); unpin the engine or "
+                f"pick one of {sorted(available_engines(op=op))}"
+            )
     if engine is None:
         if mutable:
             engine = "dynamic"
@@ -773,6 +800,30 @@ def plan(
         else:
             engine = "chunked"
             reasons.append("1 device: chunk-streamed buffer k-d tree")
+
+    # non-kNN primary op: the chosen engine must declare it in caps.ops.
+    # A pinned engine was already validated above (ValueError); an auto
+    # choice that landed on a non-declaring engine reroutes to 'chunked'
+    # (dual-tree over the same chunk-streamed leaf store) — unless the
+    # choice was forced by mutable=True, which is a contradiction.
+    if op != "knn":
+        from repro.api.engine import available_engines, get_engine
+
+        declaring = sorted(available_engines(op=op))
+        if op in get_engine(engine).caps.ops:
+            reasons.append(f"op={op!r} declared by engine {engine!r} (caps.ops)")
+        elif mutable:
+            raise ValueError(
+                f"op={op!r} with mutable=True: the mutable engine "
+                f"{engine!r} does not declare it (caps.ops); declaring "
+                f"engines: {declaring}"
+            )
+        else:
+            reasons.append(
+                f"op={op!r} not declared by auto choice {engine!r}; "
+                f"rerouted to 'chunked' (declaring engines: {declaring})"
+            )
+            engine = "chunked"
 
     # engines without a ChunkedLeafStore keep fp32 reference arrays — a
     # quantized precision choice cannot apply there; say so and fall back

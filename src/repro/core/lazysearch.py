@@ -397,6 +397,17 @@ class BufferKDTree:
         if self.engine == "chunked":
             self._engine.warm(m, self._engine_k(k), self.engine_tile_q)
 
+    def dualtree(self):
+        """The dual-tree traversal view over this index's TopTree + leaf
+        store (``core/dualtree.DualTree``: radius / kde / pair_count).
+        Cached — node bounding boxes are computed once; quantized stores
+        get a private fp32 slab copy so the ops stay exact."""
+        if getattr(self, "_dualtree", None) is None:
+            from repro.core.dualtree import DualTree
+
+            self._dualtree = DualTree(self.tree, self.store)
+        return self._dualtree
+
     def _scan_units(
         self,
         dev_slab,            # [chunk_leaves, L_pad, d_pad] device buffer

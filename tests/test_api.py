@@ -17,12 +17,17 @@ import numpy as np
 import pytest
 
 from repro.api import (
+    KNOWN_OPS,
     IndexSpec,
     KNNIndex,
     MutabilityError,
+    OpUnsupported,
     QueryResult,
+    RadiusResult,
     SearchStats,
+    StatResult,
     available_engines,
+    dualtree_cache_size,
     estimate_slab_bytes,
     get_engine,
     knn_brute,
@@ -768,3 +773,268 @@ def test_multi_device_auto_plan_selects_forest_and_is_exact():
     )
     assert out.returncode == 0, f"subprocess failed:\n{out.stderr[-3000:]}"
     assert "FOREST_AUTOPLAN_OK" in out.stdout
+
+
+# -- multi-op front door ------------------------------------------------
+#
+# The op sweep below is AUTO-DISCOVERED from the registry, exactly like
+# the kNN parity suite: every op an engine declares in caps.ops must be
+# exact vs the numpy/brute oracle on the same edge shapes.  Parity data
+# is an integer lattice (squared distances exact in fp32) with radii /
+# edges whose squares are non-integers, so radius and pair_count compare
+# bit-exact — no fp32-vs-f64 bin-boundary straddle.
+
+DUAL_OPS = ("radius", "kde", "pair_count")
+OP_PAIRS = sorted(
+    (op, eng) for op in DUAL_OPS for eng in available_engines(op=op)
+)
+NON_DECLARING = sorted(
+    eng for eng in ALL_ENGINES
+    if not any(op in get_engine(eng).caps.ops for op in DUAL_OPS)
+)
+
+
+def _lattice_data(n, m, d, seed=0):
+    rng = np.random.default_rng(seed)
+    span = max(3, int(np.sqrt(300 / d)))
+    pts = rng.integers(0, span, size=(n, d)).astype(np.float32)
+    q = rng.integers(0, span, size=(m, d)).astype(np.float32)
+    return pts, q
+
+
+# squared values are non-integers: no lattice distance sits on an edge
+_EDGES = np.sqrt(np.array([0.5, 3.5, 7.5, 16.5, 32.5, 64.5, 144.5]))
+
+
+def _csr_rows_equal(ip_a, ix_a, ip_b, ix_b):
+    assert np.array_equal(ip_a, ip_b)
+    for i in range(len(ip_a) - 1):
+        assert set(ix_a[ip_a[i]:ip_a[i + 1]].tolist()) == set(
+            ix_b[ip_b[i]:ip_b[i + 1]].tolist()
+        ), f"row {i}"
+
+
+class TestOpParity:
+    @pytest.mark.parametrize("op,engine", OP_PAIRS,
+                             ids=[f"{o}-{e}" for o, e in OP_PAIRS])
+    @pytest.mark.parametrize("n,m,d,k,height", PARITY_SHAPES)
+    def test_declared_op_exact_vs_oracle(self, op, engine, n, m, d, k, height):
+        from repro.core.dualtree import (
+            kde_brute, pair_count_brute, radius_brute,
+        )
+
+        pts, q = _lattice_data(n, m, d, seed=hash((op, n, m, d)) % 1000)
+        idx = KNNIndex.build(
+            pts, spec=IndexSpec(engine=engine, op=op, height=height,
+                                m_hint=m)
+        )
+        if op == "radius":
+            r = float(np.sqrt(1.5 * d + 0.5))
+            res = idx.radius(q, r)
+            assert isinstance(res, RadiusResult)
+            bi, bj, _ = radius_brute(q, pts, r)
+            _csr_rows_equal(res.indptr, res.indices, bi, bj)
+            assert res.engine == engine and res.r == r
+        elif op == "kde":
+            h, rtol, atol = float(np.sqrt(d)), 1e-2, 1e-9
+            res = idx.kde(q, h, rtol=rtol, atol=atol)
+            assert isinstance(res, StatResult) and res.op == "kde"
+            exact = kde_brute(q, pts, h).astype(np.float64)
+            bound = rtol * exact + atol + 1e-5 * np.maximum(exact, 1.0)
+            assert np.all(
+                np.abs(res.values.astype(np.float64) - exact) <= bound
+            )
+        else:
+            res = idx.pair_count(_EDGES)
+            assert isinstance(res, StatResult) and res.op == "pair_count"
+            ref = pair_count_brute(pts, _EDGES)
+            assert np.array_equal(res.values, ref)
+            assert res.values.sum() > 0  # non-degenerate histogram
+            assert res.error_bound == 0.0
+        assert isinstance(res.stats, SearchStats)
+
+
+class TestOpCapsContract:
+    """The other half of the sweep: engines declaring ONLY knn must raise
+    the typed ``OpUnsupported`` from every multi-op entry point (never
+    compute silently), mirroring the Mutability/Streaming contracts."""
+
+    def test_known_ops_closed_set(self):
+        assert KNOWN_OPS == {"knn", "radius", "kde", "pair_count"}
+        for name, caps in available_engines().items():
+            assert caps.ops <= KNOWN_OPS, name
+            assert "knn" in caps.ops, name
+
+    def test_dualtree_engines_declare_all_ops(self):
+        for name in ("brute", "host", "chunked", "streaming"):
+            assert set(DUAL_OPS) <= get_engine(name).caps.ops, name
+
+    def test_available_engines_op_filter(self):
+        for op in DUAL_OPS:
+            decl = available_engines(op=op)
+            assert decl and all(op in c.ops for c in decl.values())
+        assert set(available_engines(op="knn")) == set(ALL_ENGINES)
+        with pytest.raises(ValueError, match="unknown op"):
+            available_engines(op="warp")
+
+    @pytest.mark.parametrize("engine", NON_DECLARING)
+    def test_non_declaring_engines_raise_typed_error(self, engine):
+        pts, q = _lattice_data(700, 16, 4, seed=22)
+        idx = KNNIndex.build(pts, spec=IndexSpec(engine=engine, height=2))
+        with pytest.raises(OpUnsupported, match="radius"):
+            idx.radius(q, 1.0)
+        with pytest.raises(OpUnsupported, match="kde"):
+            idx.kde(q, 1.0)
+        with pytest.raises(OpUnsupported, match="pair_count"):
+            idx.pair_count(np.array([0.5, 1.5]))
+        with pytest.raises(OpUnsupported):
+            idx.warm(m=8, ops=("radius",))
+        assert isinstance(OpUnsupported("x"), TypeError)
+
+    def test_error_names_declaring_engines(self):
+        pts, _ = _lattice_data(700, 4, 4, seed=23)
+        idx = KNNIndex.build(pts, spec=IndexSpec(engine="jit", height=2))
+        with pytest.raises(OpUnsupported, match="chunked"):
+            idx.pair_count(np.array([0.5, 1.5]))
+
+
+class TestPlannerOpRules:
+    def test_unknown_op_rejected(self):
+        with pytest.raises(ValueError, match="unknown op"):
+            plan(5000, 8, op="warp")
+        with pytest.raises(ValueError, match="unknown op"):
+            KNNIndex.build(np.zeros((64, 3), np.float32),
+                           spec=IndexSpec(op="warp"))
+
+    def test_declared_op_lands_in_reasons(self):
+        p = plan(5000, 8, m=300, op="radius")
+        assert "radius" in get_engine(p.engine).caps.ops
+        assert any("op='radius'" in r for r in p.reasons)
+
+    def test_pinned_engine_lacking_op_raises(self):
+        with pytest.raises(ValueError, match="does not declare"):
+            plan(5000, 8, engine="forest", op="kde")
+
+    def test_mutable_plus_dual_op_is_a_contradiction(self):
+        with pytest.raises(ValueError, match="mutable"):
+            plan(5000, 8, mutable=True, op="pair_count")
+
+    def test_auto_choice_reroutes_to_declaring_engine(self):
+        class FakeDev:
+            platform = "cpu"
+
+        p = plan(200_000, 8, m=1000, op="pair_count",
+                 devices=tuple(FakeDev() for _ in range(4)))
+        assert "pair_count" in get_engine(p.engine).caps.ops
+        assert any("rerouted" in r for r in p.reasons)
+
+    def test_spec_op_rides_the_facade(self):
+        pts, q = _lattice_data(900, 32, 3, seed=24)
+        idx = KNNIndex.build(pts, spec=IndexSpec(op="radius", height=3))
+        assert "radius" in idx._engine.caps.ops
+        assert idx.spec.op == "radius"
+        res = idx.radius(q, 1.5)
+        assert isinstance(res, RadiusResult)
+        # the knn path stays byte-compatible on the same index
+        dists, ids = idx.query(q, k=3)
+        bd, _ = knn_brute(q, pts, 3)
+        np.testing.assert_allclose(dists, bd, rtol=1e-4, atol=1e-4)
+
+
+class TestOpResults:
+    def test_radius_result_unpacks_as_csr_triple(self):
+        pts, q = _lattice_data(800, 24, 3, seed=25)
+        res = KNNIndex.build(pts, spec=IndexSpec(op="radius")).radius(q, 2.3)
+        indptr, indices, dists = res
+        assert len(res) == 3
+        assert res[0] is indptr and res[1] is indices and res[2] is dists
+        assert indptr.shape == (25,) and indptr[0] == 0
+        assert indptr[-1] == len(indices) == len(dists)
+        with pytest.raises(dataclasses_frozen_error()):
+            res.r = 9.0
+
+    def test_stat_result_unpacks_as_value_error_pair(self):
+        pts, q = _lattice_data(800, 24, 3, seed=26)
+        idx = KNNIndex.build(pts, spec=IndexSpec(op="kde"))
+        res = idx.kde(q, 1.0)
+        values, err = res
+        assert len(res) == 2 and res[0] is values
+        assert values.shape == (24,) and err >= 0.0
+        hist_res = idx.pair_count(np.array([0.5, 1.5, 2.5]))
+        assert hist_res.values.dtype == np.int64
+        assert hist_res.op == "pair_count"
+        with pytest.raises(dataclasses_frozen_error()):
+            hist_res.op = "other"
+
+    def test_op_stats_are_per_call_values(self):
+        pts, q = _lattice_data(1200, 64, 3, seed=27)
+        idx = KNNIndex.build(pts, spec=IndexSpec(engine="chunked", op="radius",
+                                                 height=3))
+        r1 = idx.radius(q, 2.3)
+        r2 = idx.radius(q[:4], 2.3)
+        assert r1.stats is not r2.stats
+        assert idx.stats == r2.stats  # facade mirrors the LAST call
+        with pytest.raises(dataclasses_frozen_error()):
+            r1.stats.flushes = 5
+
+    def test_arg_validation(self):
+        pts, q = _lattice_data(600, 8, 3, seed=28)
+        idx = KNNIndex.build(pts, spec=IndexSpec(op="radius"))
+        with pytest.raises(ValueError, match="r >= 0"):
+            idx.radius(q, -1.0)
+        with pytest.raises(ValueError, match="bandwidth"):
+            idx.kde(q, 0.0)
+        with pytest.raises(ValueError, match="queries must be"):
+            idx.radius(np.zeros((4, 9), np.float32), 1.0)
+        with pytest.raises(ValueError):
+            idx.pair_count(np.array([2.0, 1.0]))
+
+
+class TestWarmPerOp:
+    def test_warm_ops_then_new_operands_zero_compiles(self):
+        pts, q = _lattice_data(2000, 150, 3, seed=29)
+        idx = KNNIndex.build(pts, spec=IndexSpec(engine="chunked", op="radius",
+                                                 height=3, m_hint=150))
+        idx.warm(m=150, ops=DUAL_OPS, n_edges=len(_EDGES))
+        before = dualtree_cache_size()
+        idx.radius(q, 1.7)
+        idx.radius(q, 3.3)
+        idx.kde(q, 0.9)
+        idx.pair_count(_EDGES)
+        idx.pair_count(_EDGES * 1.5)
+        assert dualtree_cache_size() == before
+
+    def test_warm_defaults_to_spec_op(self):
+        pts, _ = _lattice_data(900, 8, 3, seed=30)
+        idx = KNNIndex.build(pts, spec=IndexSpec(engine="host", op="kde",
+                                                 height=3))
+        idx.warm(m=64)  # warms the spec's op without error
+        with pytest.raises(ValueError, match="unknown op"):
+            idx.warm(m=8, ops=("warp",))
+
+    def test_knn_warm_signature_back_compat(self):
+        pts, _ = _lattice_data(1200, 8, 3, seed=31)
+        idx = KNNIndex.build(pts, spec=IndexSpec(engine="chunked", height=3))
+        idx.warm(128, 5)  # positional (m, k), op defaults to spec's "knn"
+
+
+class TestDeprecatedCacheSizeAlias:
+    def test_old_name_warns_and_aliases_new(self):
+        import warnings
+
+        import repro.api as api
+
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            old = api.chunk_round_cache_size
+        assert old is api.knn_round_cache_size
+        assert any(issubclass(x.category, DeprecationWarning) for x in w)
+        assert "chunk_round_cache_size" in api.__all__  # one more release
+
+    def test_from_import_still_works(self):
+        import warnings
+
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            from repro.api import chunk_round_cache_size
+        assert callable(chunk_round_cache_size)
